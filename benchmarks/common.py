@@ -1,0 +1,94 @@
+"""Shared benchmark machinery: algorithm runners, caching, timing.
+
+Scaling note (vs the paper): the paper uses 100M distinct keys and 2–5B
+requests on an 8-core Xeon; this container is one CPU core, so we use 1M
+distinct keys and 2M requests with the same zipf α and the same
+cache-size : key-space *ratios*.  Every qualitative ordering the paper
+reports is preserved at this scale (validated in tests/test_paper_claims).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import MSLRUConfig, init_table, make_sequential_engine
+from repro.core.policies import ARC, FIFO, ExactLRU, GClock, ReuseDistanceLRU
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+N_KEYS = 1_000_000
+N_QUERIES = 2_000_000
+
+
+def cached(name: str, fn, force: bool = False):
+    p = RESULTS / f"{name}.json"
+    if p.exists() and not force:
+        return json.loads(p.read_text())
+    out = fn()
+    p.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def msl_cfg(capacity: int, m: int = 2, p: int = 4, policy: str = "multistep"):
+    """Cache geometry for a given item capacity (sets = capacity / (m*p))."""
+    num_sets = max(1, capacity // (m * p))
+    assert num_sets & (num_sets - 1) == 0, f"capacity {capacity} not pow2-compatible"
+    return MSLRUConfig(num_sets=num_sets, m=m, p=p, value_planes=0, policy=policy)
+
+
+def run_msl(trace: np.ndarray, capacity: int, m: int = 2, p: int = 4,
+            policy: str = "multistep", return_pos: bool = False,
+            table=None):
+    """Sequential-engine run; returns dict with hit ratio (+ hit positions)."""
+    cfg = msl_cfg(capacity, m, p, policy)
+    engine = make_sequential_engine(cfg)
+    tbl = init_table(cfg) if table is None else table
+    qk = jnp.asarray(trace[:, None], jnp.int32)
+    qv = jnp.zeros((len(trace), 0), jnp.int32)
+    t0 = time.time()
+    tbl, out = engine(tbl, qk, qv)
+    hits = np.asarray(out.hit)
+    dt = time.time() - t0
+    rec = {"hit_ratio": float(hits.mean()), "seconds": dt,
+           "us_per_query": dt / len(trace) * 1e6}
+    if return_pos:
+        rec["pos"] = np.asarray(out.pos)
+    return rec
+
+
+def run_python_algo(name: str, trace: np.ndarray, capacity: int) -> dict:
+    algo = {"lru": ExactLRU, "gclock": GClock, "arc": ARC, "fifo": FIFO}[name](capacity)
+    t0 = time.time()
+    hits = 0
+    t1_hits = t2_hits = 0
+    is_arc = name == "arc"
+    for k in trace.tolist():
+        if algo.access(k):
+            hits += 1
+            if is_arc:
+                if algo.last_hit_list == "t1":
+                    t1_hits += 1
+                else:
+                    t2_hits += 1
+    dt = time.time() - t0
+    rec = {"hit_ratio": hits / len(trace), "seconds": dt,
+           "us_per_query": dt / len(trace) * 1e6}
+    if is_arc:
+        rec["t1_hits"] = t1_hits
+        rec["t2_hits"] = t2_hits
+    return rec
+
+
+def lru_curve(trace: np.ndarray, capacities: list[int]) -> dict:
+    """Exact LRU hit ratio for every capacity in ONE pass (Mattson)."""
+    rd = ReuseDistanceLRU(len(trace))
+    t0 = time.time()
+    rd.feed(trace)
+    dt = time.time() - t0
+    return {str(c): rd.hit_ratio(c) for c in capacities} | {"seconds": dt}

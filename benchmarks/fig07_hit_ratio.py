@@ -1,0 +1,57 @@
+"""Fig. 7: hit ratio vs cache size × {zipfian, latest, scan} × algorithms.
+
+Paper claims validated here (at 1/100 scale):
+  * ARC best nearly everywhere; multi-step LRU second;
+  * GCLOCK below multi-step (except latest at large sizes);
+  * exact LRU below GCLOCK/multi-step/ARC;
+  * in-vector LRU (M=1 set-associative) worst.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (N_KEYS, N_QUERIES, cached, lru_curve,
+                               run_msl, run_python_algo)
+from repro.data.ycsb import make_workload
+
+CAPACITIES = [4096, 16384, 65536, 262144]
+DISTS = ["zipfian", "latest", "scan"]
+ALPHA = 0.99
+
+
+def run(force: bool = False):
+    def compute():
+        out = {}
+        for dist in DISTS:
+            trace = make_workload(dist, N_KEYS, N_QUERIES, ALPHA, seed=7)
+            row = {}
+            row["lru"] = lru_curve(trace, CAPACITIES)
+            for cap in CAPACITIES:
+                c = str(cap)
+                row.setdefault("invector", {})[c] = run_msl(trace, cap, m=1)["hit_ratio"]
+                row.setdefault("multistep", {})[c] = run_msl(trace, cap, m=2)["hit_ratio"]
+                row.setdefault("set_lru", {})[c] = run_msl(
+                    trace, cap, m=2, policy="set_lru")["hit_ratio"]
+                row.setdefault("gclock", {})[c] = run_python_algo(
+                    "gclock", trace, cap)["hit_ratio"]
+                row.setdefault("arc", {})[c] = run_python_algo(
+                    "arc", trace, cap)["hit_ratio"]
+            out[dist] = row
+        return out
+
+    return cached("fig07_hit_ratio", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = ["fig07: hit ratio vs cache size (1M keys, 2M queries, a=0.99)"]
+    for dist, row in res.items():
+        lines.append(f"  [{dist}]  size: " + "  ".join(f"{c:>7}" for c in map(str, CAPACITIES)))
+        for algo in ("invector", "set_lru", "lru", "gclock", "multistep", "arc"):
+            vals = [row[algo][str(c)] for c in CAPACITIES]
+            lines.append(f"    {algo:10s} " + "  ".join(f"{v:7.4f}" for v in vals))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

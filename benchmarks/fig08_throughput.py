@@ -1,0 +1,68 @@
+"""Fig. 8: execution throughput vs cache size.
+
+Compares the vectorized engines (sequential scan; batched SPMD; batched
+with the Pallas kernel body in interpret mode is validated elsewhere — the
+XLA path is the performance path on CPU) against the Python baselines.
+The paper's claim: in-vector fastest, multi-step a close second, ARC
+slowest, gaps widening with cache size (LRU metadata cache misses).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import N_KEYS, cached, msl_cfg, run_python_algo
+from repro.core import init_table
+from repro.core.engine import make_batched_engine
+from repro.data.ycsb import zipfian
+
+CAPACITIES = [16384, 262144]
+N_Q = 1_000_000
+
+
+def _batched_throughput(trace, capacity, m, policy="multistep", batch=8192):
+    cfg = msl_cfg(capacity, m=m, policy=policy)
+    eng = make_batched_engine(cfg)
+    tbl = init_table(cfg)
+    qv = jnp.zeros((batch, 0), jnp.int32)
+    tbl, _ = eng(tbl, jnp.asarray(trace[:batch, None]), qv)  # warm/compile
+    t0 = time.time()
+    n = 0
+    for i in range(batch, len(trace) - batch, batch):
+        tbl, _ = eng(tbl, jnp.asarray(trace[i:i+batch, None]), qv)
+        n += batch
+    dt = time.time() - t0
+    return {"us_per_query": dt / n * 1e6, "qps": n / dt}
+
+
+def run(force: bool = False):
+    def compute():
+        trace = zipfian(N_KEYS, N_Q, alpha=0.99, seed=11)
+        out = {}
+        for cap in CAPACITIES:
+            rec = {
+                "invector_batched": _batched_throughput(trace, cap, m=1),
+                "multistep_batched": _batched_throughput(trace, cap, m=2),
+                "lru_py": run_python_algo("lru", trace[:300_000], cap),
+                "gclock_py": run_python_algo("gclock", trace[:300_000], cap),
+                "arc_py": run_python_algo("arc", trace[:300_000], cap),
+            }
+            out[str(cap)] = rec
+        return out
+
+    return cached("fig08_throughput", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = ["fig08: throughput (us/query; vectorized engines vs python baselines)"]
+    for cap, rec in res.items():
+        lines.append(f"  [size {cap}] " + "  ".join(
+            f"{a}={r['us_per_query']:.2f}us" for a, r in rec.items()))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

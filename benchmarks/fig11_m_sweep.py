@@ -1,0 +1,38 @@
+"""Fig. 11: effect of M (vectors per set) on hit ratio and speed.
+
+Paper: hit ratio rises with M (approaching ARC by M=8); speed falls
+moderately; M=2..4 is the sweet spot.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import N_KEYS, cached, run_msl, run_python_algo
+from repro.data.ycsb import zipfian
+
+CAPACITY = 65536
+MS = [1, 2, 4, 8]
+
+
+def run(force: bool = False):
+    def compute():
+        trace = zipfian(N_KEYS, 2_000_000, alpha=0.99, seed=5)
+        out = {}
+        for m in MS:
+            out[f"M{m}"] = run_msl(trace, CAPACITY, m=m)
+        out["arc"] = run_python_algo("arc", trace, CAPACITY)
+        out["gclock"] = run_python_algo("gclock", trace, CAPACITY)
+        return out
+
+    return cached("fig11_m_sweep", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = [f"fig11: M sweep at capacity {CAPACITY} (zipfian)"]
+    for k, r in res.items():
+        lines.append(f"  {k:8s} hit_ratio={r['hit_ratio']:.4f} "
+                     f"{r['us_per_query']:.2f}us/q")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

@@ -1,0 +1,55 @@
+"""Fig. 12: breakdown of hits by vector (location within the set).
+
+Paper: vector 0 (hottest) takes the majority of hits — the upgrade rule
+concentrates frequently-used items; ARC's t2 dominance is the analogue.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_KEYS, cached, run_msl, run_python_algo
+from repro.data.ycsb import make_workload
+
+CAPACITY = 65536
+
+
+def run(force: bool = False):
+    def compute():
+        out = {}
+        for dist in ("zipfian", "latest", "scan"):
+            trace = make_workload(dist, N_KEYS, 2_000_000, 0.99, seed=9)
+            row = {}
+            for m in (2, 4, 8):
+                rec = run_msl(trace, CAPACITY, m=m, return_pos=True)
+                pos = rec.pop("pos")
+                vec = pos[pos >= 0] // 4          # P = 4
+                frac = np.bincount(vec, minlength=m) / max(1, len(vec))
+                row[f"M{m}"] = {"hit_ratio": rec["hit_ratio"],
+                                "vector_frac": frac.tolist()}
+            arc = run_python_algo("arc", trace, CAPACITY)
+            th = arc["t1_hits"] + arc["t2_hits"]
+            row["arc"] = {"hit_ratio": arc["hit_ratio"],
+                          "t1_frac": arc["t1_hits"] / max(1, th),
+                          "t2_frac": arc["t2_hits"] / max(1, th)}
+            out[dist] = row
+        return out
+
+    return cached("fig12_hit_location", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = ["fig12: hit-location breakdown (fraction of hits per vector)"]
+    for dist, row in res.items():
+        lines.append(f"  [{dist}]")
+        for k, r in row.items():
+            if k == "arc":
+                lines.append(f"    arc  t1={r['t1_frac']:.3f} t2={r['t2_frac']:.3f}")
+            else:
+                fr = " ".join(f"{v:.3f}" for v in r["vector_frac"])
+                lines.append(f"    {k:4s} [{fr}]")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

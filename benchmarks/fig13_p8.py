@@ -1,0 +1,35 @@
+"""Fig. 13: P=8 lanes (paper: 32-bit keys in 256-bit AVX; here: the lane
+count is a config knob).  Claim: trends identical to P=4 — the algorithm's
+advantage is not tied to a specific vector width."""
+
+from __future__ import annotations
+
+from benchmarks.common import N_KEYS, cached, run_msl
+from repro.data.ycsb import zipfian
+
+CAPACITY = 65536
+
+
+def run(force: bool = False):
+    def compute():
+        trace = zipfian(N_KEYS, 2_000_000, alpha=0.99, seed=13)
+        return {
+            "p4_m2": run_msl(trace, CAPACITY, m=2, p=4),
+            "p8_m2": run_msl(trace, CAPACITY, m=2, p=8),
+            "p8_m1": run_msl(trace, CAPACITY, m=1, p=8),
+            "p4_m4": run_msl(trace, CAPACITY, m=4, p=4),
+        }
+
+    return cached("fig13_p8", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = [f"fig13: P=8 vs P=4 at capacity {CAPACITY} (zipfian)"]
+    for k, r in res.items():
+        lines.append(f"  {k:6s} hit_ratio={r['hit_ratio']:.4f} "
+                     f"{r['us_per_query']:.2f}us/q")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

@@ -1,0 +1,64 @@
+"""Fig. 15: warm-up from a garbage-initialized cache.
+
+Paper: multi-step LRU takes longer to evict dead items than exact LRU /
+GCLOCK (upgraded garbage is protected), visible as a slower hit-ratio ramp;
+from an *empty* cache there is no such penalty.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import cached, msl_cfg, run_msl
+from repro.core import init_table, EMPTY_KEY
+from repro.data.ycsb import zipfian
+
+CAPACITY = 65536
+N_KEYS = 1_000_000
+WINDOWS = [2**i for i in range(12, 21)]  # cumulative query counts
+
+
+def _garbage_table(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    tbl = np.asarray(init_table(cfg)).copy()
+    # keys outside the workload range [1, N_KEYS]
+    garbage = rng.integers(2**29, 2**30, size=tbl[:, :, 0].shape).astype(np.int32)
+    tbl[:, :, 0] = garbage
+    return jnp.asarray(tbl)
+
+
+def _curve(trace, policy, garbage: bool):
+    cfg = msl_cfg(CAPACITY, m=2, policy=policy)
+    tbl = _garbage_table(cfg) if garbage else None
+    rec = run_msl(trace, CAPACITY, m=2, policy=policy, return_pos=True,
+                  table=tbl)
+    hits = rec["pos"] >= 0
+    cum = np.cumsum(hits)
+    return {str(w): float(cum[w - 1] / w) for w in WINDOWS if w <= len(trace)}
+
+
+def run(force: bool = False):
+    def compute():
+        trace = zipfian(N_KEYS, 2_000_000, alpha=0.99, seed=15)
+        return {
+            "multistep_garbage": _curve(trace, "multistep", True),
+            "set_lru_garbage": _curve(trace, "set_lru", True),
+            "multistep_empty": _curve(trace, "multistep", False),
+        }
+
+    return cached("fig15_warmup", compute, force)
+
+
+def report(res: dict) -> list[str]:
+    lines = ["fig15: warm-up hit-ratio ramp (cumulative)"]
+    ws = [w for w in WINDOWS]
+    lines.append("  queries:      " + " ".join(f"{w:>8}" for w in ws))
+    for k, r in res.items():
+        vals = " ".join(f"{r[str(w)]:8.4f}" for w in ws if str(w) in r)
+        lines.append(f"  {k:18s} {vals}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report(run())))

@@ -1,0 +1,52 @@
+"""Render the roofline table from results/dryrun/*.json (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def rows(pod: str = "pod1"):
+    out = []
+    for f in sorted(RESULTS.glob(f"*__{pod}.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            out.append({"cell": r["cell"], "skipped": True,
+                        "reason": r.get("reason", "")})
+            continue
+        t = r["terms_seconds"]
+        mem = r["memory_analysis"]
+        out.append({
+            "cell": r["cell"], "skipped": False,
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": t["compute"], "memory_s": t["memory"],
+            "collective_s": t["collective"], "dominant": r["dominant"],
+            "frac": r["roofline_fraction"],
+            "useful": r["useful_flop_ratio"],
+            "temp_gib": mem["temp_size_in_bytes"] / 2**30,
+            "args_gib": mem["argument_size_in_bytes"] / 2**30,
+        })
+    return out
+
+
+def report(pod: str = "pod1") -> list[str]:
+    lines = [f"roofline table ({pod}; terms in ms/step; v5e constants)"]
+    lines.append(f"  {'cell':44s} {'comp':>8} {'mem':>9} {'coll':>9} "
+                 f"{'dom':>6} {'frac':>6} {'useful':>6} {'temp':>7}")
+    for r in rows(pod):
+        if r["skipped"]:
+            lines.append(f"  {r['cell']:44s} SKIP ({r['reason'][:48]})")
+            continue
+        lines.append(
+            f"  {r['cell']:44s} {r['compute_s']*1e3:8.1f} {r['memory_s']*1e3:9.1f} "
+            f"{r['collective_s']*1e3:9.1f} {r['dominant'][:6]:>6} "
+            f"{r['frac']:6.3f} {r['useful']:6.2f} {r['temp_gib']:6.1f}G")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(report("pod1")))
+    print()
+    print("\n".join(report("pod2")))

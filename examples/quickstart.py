@@ -1,0 +1,45 @@
+"""Quickstart: the multi-step LRU cache as a standalone key-value cache.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import MSLRUConfig, MultiStepLRUCache
+from repro.data.ycsb import zipfian
+
+
+def main():
+    # 4096 items: 512 sets x (M=2 vectors x P=4 lanes); 32-bit keys,
+    # 64-bit values (2 planes) — the paper's pointer-cache shape.
+    cfg = MSLRUConfig(num_sets=512, m=2, p=4, value_planes=2)
+    cache = MultiStepLRUCache(cfg)
+    print(f"cache: {cfg.capacity} items = {cfg.num_sets} sets x M{cfg.m} x P{cfg.p}")
+
+    # the paper's benchmark loop: get; on miss, put
+    trace = zipfian(n_keys=50_000, n_queries=200_000, alpha=0.99, seed=1)
+    vals = np.stack([trace, trace * 2], axis=1).astype(np.int32)
+
+    res = cache.access(trace, vals)            # batched engine (SPMD, exact)
+    hits = np.asarray(res.hit)
+    print(f"zipfian 200k queries over 50k keys -> hit ratio {hits.mean():.3f}")
+    print(f"occupancy {cache.occupancy:.2%}")
+
+    # values come back on hits
+    res2 = cache.access(trace[:10], vals[:10])
+    got = np.asarray(res2.value)
+    ok = (got[np.asarray(res2.hit), 0] == trace[:10][np.asarray(res2.hit)]).all()
+    print(f"value integrity on re-access: {'OK' if ok else 'FAIL'}")
+
+    # evictions surface their victim (key AND value planes) — this is what
+    # lets the serving stack recycle KV pages with zero extra metadata
+    print(f"evictions reported this run: {int(np.asarray(res.evicted_valid).sum())}")
+
+
+if __name__ == "__main__":
+    main()

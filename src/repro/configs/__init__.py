@@ -1,0 +1,9 @@
+"""Architecture configs.  ``get_config(name)`` resolves any assigned arch."""
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    list_archs,
+)

@@ -1,0 +1,59 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+These are what the dry-run lowers against — weak-type-correct, shardable,
+zero allocation.  For modality archs the frontend is a stub: whisper gets
+precomputed frame embeddings, qwen2-vl gets M-RoPE position streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, batch: int | None = None):
+    b = batch if batch is not None else shape.global_batch
+    s = shape.seq_len
+    specs = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if cfg.rope_kind == "mrope":
+        specs["positions"] = sds((b, 3, s), jnp.int32)
+    if cfg.enc_dec:
+        specs["frames"] = sds((b, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec, batch: int | None = None):
+    specs = train_batch_specs(cfg, shape, batch)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(model: Model, shape: ShapeSpec, batch: int | None = None):
+    """(tokens, cache, cur_len) specs for serve_step."""
+    cfg = model.cfg
+    b = batch if batch is not None else shape.global_batch
+    cache = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    tokens = sds((b, 1), jnp.int32)
+    cur_len = sds((), jnp.int32)
+    return tokens, cache, cur_len
+
+
+def applicable_shapes(cfg: ArchConfig):
+    """The shape cells this arch runs (long_500k gated by supports_long)."""
+    from repro.configs.base import SHAPES
+    out = []
+    for name, sh in SHAPES.items():
+        if name == "long_500k" and not cfg.supports_long:
+            continue
+        out.append(sh)
+    return out

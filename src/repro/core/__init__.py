@@ -1,0 +1,89 @@
+"""Core multi-step LRU cache library (the paper's contribution).
+
+Public API:
+    MSLRUConfig      — static cache geometry (S sets × M vectors × P lanes)
+    MultiStepLRUCache — convenient stateful wrapper (host-side driver)
+    row/engine functions — composable JAX building blocks (see multistep.py,
+                           engine.py, sharded.py)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.multistep import (  # noqa: F401
+    AccessResult,
+    MSLRUConfig,
+    init_table,
+    row_access,
+    row_delete,
+    row_get,
+    row_lookup,
+    row_put,
+    set_index_for,
+)
+from repro.core.engine import (  # noqa: F401
+    OP_ACCESS,
+    OP_DELETE,
+    OP_GET,
+    make_batched_engine,
+    make_chunked_stream_runner,
+    make_sequential_engine,
+)
+from repro.core.invector import EMPTY_KEY  # noqa: F401
+
+__all__ = [
+    "MSLRUConfig",
+    "MultiStepLRUCache",
+    "AccessResult",
+    "init_table",
+    "EMPTY_KEY",
+]
+
+
+class MultiStepLRUCache:
+    """Stateful host-side wrapper around the JAX cache engines.
+
+    >>> cache = MultiStepLRUCache(MSLRUConfig(num_sets=1024, m=2, p=4))
+    >>> res = cache.access(np.array([42]))
+    """
+
+    def __init__(self, cfg: MSLRUConfig):
+        self.cfg = cfg
+        self.table = init_table(cfg)
+        self._seq = make_sequential_engine(cfg, with_ops=True)
+        self._batched = make_batched_engine(cfg)
+
+    # -- batched high-throughput path ----------------------------------------
+    def access(self, keys: np.ndarray, vals: np.ndarray | None = None):
+        """Batched get-or-insert. keys (B,) or (B, KP); vals (B, V)."""
+        keys = self._canon_keys(keys)
+        if vals is None:
+            vals = np.zeros((keys.shape[0], self.cfg.value_planes), np.int32)
+        self.table, res = self._batched(self.table, keys, jnp.asarray(vals, jnp.int32))
+        return res
+
+    # -- exact sequential path -------------------------------------------------
+    def access_seq(self, keys: np.ndarray, vals: np.ndarray | None = None, ops=None):
+        keys = self._canon_keys(keys)
+        n = keys.shape[0]
+        if vals is None:
+            vals = np.zeros((n, self.cfg.value_planes), np.int32)
+        if ops is None:
+            ops = np.full((n,), OP_ACCESS, np.int32)
+        self.table, out = self._seq(
+            self.table, keys, jnp.asarray(vals, jnp.int32), jnp.asarray(ops, jnp.int32))
+        return out
+
+    def _canon_keys(self, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        if keys.ndim == 1:
+            keys = keys[:, None]
+        assert keys.shape[-1] == self.cfg.key_planes
+        return keys
+
+    @property
+    def occupancy(self) -> float:
+        valid = np.asarray(self.table[:, :, 0] != EMPTY_KEY)
+        return float(valid.mean())

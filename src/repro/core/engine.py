@@ -1,0 +1,251 @@
+"""Query-stream engines for the multi-step LRU cache.
+
+Two execution models, both built on the row ops in multistep.py:
+
+* ``sequential`` — `lax.scan`, one query at a time.  Bit-exact oracle
+  semantics (matches the pure-Python reference in policies.py); used for all
+  hit-ratio science, mirroring the paper's single-thread measurements.
+
+* ``batched`` — B queries per step, SPMD over the batch.  This is the TPU
+  analogue of the paper's multi-core fine-grained locking: queries to
+  *different* sets are independent (the set-associative property), so they
+  process in parallel with no coordination.  Queries that collide on a set
+  are serialized across *rounds* (round r applies the r-th query of every
+  set, a bounded retry loop — the paper's spin-lock, made data-parallel),
+  which makes the batched engine **bit-exact** w.r.t. the sequential one:
+  the number of rounds is the maximum per-set multiplicity in the batch
+  (≈1-3 when B ≲ S), and every round is one full-width gather → row_access
+  → scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multistep import (
+    MSLRUConfig,
+    row_access,
+    row_delete,
+    row_get,
+    set_index_for,
+)
+
+__all__ = [
+    "OP_ACCESS",
+    "OP_GET",
+    "OP_DELETE",
+    "SeqOutputs",
+    "make_sequential_engine",
+    "make_batched_engine",
+    "first_occurrence_mask",
+    "canonicalize_duplicate_rows",
+]
+
+OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
+OP_GET = 1     # get only (miss leaves the cache untouched)
+OP_DELETE = 2  # invalidate
+
+
+class SeqOutputs(NamedTuple):
+    hit: jnp.ndarray            # (N,) bool
+    pos: jnp.ndarray            # (N,) int32 flat lane of hit (-1 miss); //P = vector (Fig. 12)
+    value: jnp.ndarray          # (N, V) value of the hit item (garbage on miss)
+    evicted_key: jnp.ndarray    # (N, KP)
+    evicted_val: jnp.ndarray    # (N, V) value planes of the evicted item
+    evicted_valid: jnp.ndarray  # (N,) bool
+
+
+def make_sequential_engine(cfg: MSLRUConfig, with_ops: bool = False):
+    """Returns jit'd run(table, qkeys (N,KP), qvals (N,V) [, opcodes (N,)]).
+
+    Scans the query stream one element at a time; each step touches exactly
+    one set row (dynamic_slice / dynamic_update_slice), the JAX rendering of
+    the paper's single-threaded loop.
+    """
+    a, c = cfg.assoc, cfg.planes
+
+    def one(table, qkey, qval, op):
+        sid = set_index_for(cfg, qkey[None])[0]
+        rows = jax.lax.dynamic_slice(table, (sid, 0, 0), (1, a, c))
+
+        def do_access(rows):
+            new_rows, res = row_access(cfg, rows, qkey[None], qval[None])
+            return new_rows, (res.hit[0], res.pos[0], res.value[0],
+                              res.evicted_key[0], res.evicted_val[0],
+                              res.evicted_valid[0])
+
+        def do_get(rows):
+            new_rows, hit, val, pos = row_get(cfg, rows, qkey[None])
+            ek = jnp.full((cfg.key_planes,), 0, jnp.int32)
+            ev = jnp.full((cfg.value_planes,), 0, jnp.int32)
+            return new_rows, (hit[0], pos[0], val[0], ek, ev, jnp.bool_(False))
+
+        def do_delete(rows):
+            new_rows, hit = row_delete(cfg, rows, qkey[None])
+            ek = jnp.full((cfg.key_planes,), 0, jnp.int32)
+            ev = jnp.full((cfg.value_planes,), 0, jnp.int32)
+            return new_rows, (hit[0], jnp.int32(-1), ev * 0, ek, ev, jnp.bool_(False))
+
+        if with_ops:
+            new_rows, out = jax.lax.switch(op, [do_access, do_get, do_delete], rows)
+        else:
+            new_rows, out = do_access(rows)
+        table = jax.lax.dynamic_update_slice(table, new_rows, (sid, 0, 0))
+        return table, out
+
+    if with_ops:
+        @jax.jit
+        def run(table, qkeys, qvals, opcodes):
+            def step(tbl, xs):
+                k, v, op = xs
+                return one(tbl, k, v, op)
+            table, outs = jax.lax.scan(step, table, (qkeys, qvals, opcodes))
+            return table, SeqOutputs(*outs)
+    else:
+        @jax.jit
+        def run(table, qkeys, qvals):
+            def step(tbl, xs):
+                k, v = xs
+                return one(tbl, k, v, jnp.int32(OP_ACCESS))
+            table, outs = jax.lax.scan(step, table, (qkeys, qvals))
+            return table, SeqOutputs(*outs)
+
+    return run
+
+
+def first_occurrence_mask(ids: jnp.ndarray) -> jnp.ndarray:
+    """mask[i] = True iff ids[i] does not appear at any j < i.  O(B log B)."""
+    b = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    firsts_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    return jnp.zeros((b,), bool).at[order].set(firsts_sorted)
+
+
+def canonicalize_duplicate_rows(ids: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """For queries sharing a set id, replace every row with the first query's row.
+
+    After this, scattering all B rows back is order-independent (duplicate
+    indices carry identical payloads), so the batched update is deterministic
+    without any lock or dummy-row padding.
+    """
+    b = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    sorted_rows = rows[order]
+    firsts = jnp.concatenate([jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    src = jax.lax.cummax(jnp.where(firsts, jnp.arange(b), -1))
+    filled = sorted_rows[src]
+    inv = jnp.zeros((b,), jnp.int32).at[order].set(jnp.arange(b, dtype=jnp.int32))
+    return filled[inv]
+
+
+def group_offsets(ids: jnp.ndarray) -> jnp.ndarray:
+    """offset[i] = #{j < i : ids[j] == ids[i]} (rank within its id group)."""
+    b = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    firsts = jnp.concatenate([jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    group_start = jax.lax.cummax(jnp.where(firsts, jnp.arange(b), -1))
+    off_sorted = jnp.arange(b) - group_start
+    return jnp.zeros((b,), jnp.int32).at[order].set(off_sorted.astype(jnp.int32))
+
+
+def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
+                          max_rounds: int | None = None):
+    """Exact multi-query update: serialize same-set queries across rounds.
+
+    table: (S, A, C); gsid: (B,) set id per query (entries with ``valid`` False
+    are ignored); returns (table, AccessResult, rounds).  Bit-exact w.r.t.
+    processing the valid queries sequentially in batch order, because queries
+    to distinct sets commute and round r applies exactly the r-th query of
+    each set.  ``max_rounds`` bounds latency; excess queries are dropped
+    (reported via res.hit=False and the served mask = offset < rounds).
+    """
+    s = cfg.num_sets if table.shape[0] == cfg.num_sets else table.shape[0]
+    b = gsid.shape[0]
+    gsid = jnp.where(valid, gsid, s)                  # sentinel group
+    offset = group_offsets(jnp.where(valid, gsid, s + 1 + jnp.arange(b)))
+    # (invalid queries get unique ids so they never occupy a real rank)
+    n_rounds = jnp.max(jnp.where(valid, offset, -1)) + 1
+    if max_rounds is not None:
+        n_rounds = jnp.minimum(n_rounds, max_rounds)
+
+    padded = jnp.concatenate([table, jnp.zeros((1,) + table.shape[1:], table.dtype)])
+    res0 = AccessResultZero(cfg, b)
+
+    def cond(carry):
+        r, _, _ = carry
+        return r < n_rounds
+
+    def body(carry):
+        r, padded, acc = carry
+        rows = jnp.take(padded, gsid, axis=0)
+        new_rows, res = row_access(cfg, rows, qkeys, qvals)
+        sel = (offset == r) & valid
+        scatter_id = jnp.where(sel, gsid, s)          # losers pile onto dummy row
+        padded = padded.at[scatter_id].set(new_rows)
+        acc = jax.tree.map(
+            lambda a, n: jnp.where(sel.reshape((b,) + (1,) * (n.ndim - 1)), n, a), acc, res)
+        return r + 1, padded, acc
+
+    _, padded, acc = jax.lax.while_loop(cond, body, (jnp.int32(0), padded, res0))
+    served = valid & (offset < n_rounds)
+    acc = acc._replace(hit=acc.hit & served, evicted_valid=acc.evicted_valid & served)
+    return padded[:-1], acc, served
+
+
+def AccessResultZero(cfg: MSLRUConfig, b: int):
+    from repro.core.multistep import AccessResult
+    return AccessResult(
+        hit=jnp.zeros((b,), bool),
+        value=jnp.zeros((b, cfg.value_planes), jnp.int32),
+        pos=jnp.full((b,), -1, jnp.int32),
+        evicted_key=jnp.zeros((b, cfg.key_planes), jnp.int32),
+        evicted_val=jnp.zeros((b, cfg.value_planes), jnp.int32),
+        evicted_valid=jnp.zeros((b,), bool),
+    )
+
+
+def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None):
+    """Returns jit'd run(table, qkeys (B,KP), qvals (B,V)) -> (table, result).
+
+    Exact (sequential-equivalent) unless ``max_rounds`` caps the conflict
+    serialization loop.
+    """
+
+    @jax.jit
+    def run(table, qkeys, qvals):
+        sids = set_index_for(cfg, qkeys)
+        valid = jnp.ones(sids.shape, bool)
+        table, res, _served = batched_rounds_update(
+            cfg, table, sids, valid, qkeys, qvals, max_rounds)
+        return table, res
+
+    return run
+
+
+def make_chunked_stream_runner(cfg: MSLRUConfig, batch: int):
+    """Throughput driver: scan the batched engine over a (N//batch, batch) stream."""
+    run_batch = make_batched_engine(cfg)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run(table, qkeys, qvals):
+        n = qkeys.shape[0] // batch * batch
+        qk = qkeys[:n].reshape(-1, batch, qkeys.shape[-1])
+        qv = qvals[:n].reshape(-1, batch, qvals.shape[-1])
+
+        def step(tbl, xs):
+            k, v = xs
+            tbl, res = run_batch(tbl, k, v)
+            return tbl, jnp.sum(res.hit)
+
+        table, hits = jax.lax.scan(step, table, (qk, qv))
+        return table, jnp.sum(hits)
+
+    return run

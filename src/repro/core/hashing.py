@@ -1,0 +1,120 @@
+"""Non-cryptographic hashing for set assignment, in pure JAX.
+
+The paper uses MurmurHash3 to map a key onto a set.  We implement the
+MurmurHash3 32-bit and 64-bit *finalizers* (fmix32 / fmix64) which are the
+avalanche cores of MurmurHash3 — for fixed-width integer keys the finalizer
+alone is the standard choice (it is exactly what e.g. splitmix / Java's
+HashMap spreader use).  All arithmetic is done in uint32 lanes, the native
+TPU VPU width; the 64-bit variant operates on (hi, lo) uint32 plane pairs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["fmix32", "fmix64_planes", "set_index", "fold_token_hash"]
+
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """MurmurHash3 32-bit finalizer.  Accepts/returns uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def _mul64(ah, al, bh, bl):
+    """64-bit multiply on (hi, lo) uint32 planes: (a * b) mod 2**64."""
+    # Split into 16-bit limbs to stay exact inside uint32 multiplies.
+    a0 = al & jnp.uint32(0xFFFF)
+    a1 = al >> 16
+    a2 = ah & jnp.uint32(0xFFFF)
+    a3 = ah >> 16
+    b0 = bl & jnp.uint32(0xFFFF)
+    b1 = bl >> 16
+    b2 = bh & jnp.uint32(0xFFFF)
+    b3 = bh >> 16
+
+    # Partial products contributing to limbs 0..3 (mod 2**64).
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    p02 = a0 * b2
+    p20 = a2 * b0
+    p12 = a1 * b2
+    p21 = a2 * b1
+    p03 = a0 * b3
+    p30 = a3 * b0
+
+    l0 = p00 & jnp.uint32(0xFFFF)
+    c0 = p00 >> 16
+    s1 = c0 + (p01 & jnp.uint32(0xFFFF)) + (p10 & jnp.uint32(0xFFFF))
+    l1 = s1 & jnp.uint32(0xFFFF)
+    c1 = (s1 >> 16) + (p01 >> 16) + (p10 >> 16)
+    s2 = c1 + (p11 & jnp.uint32(0xFFFF)) + (p02 & jnp.uint32(0xFFFF)) + (p20 & jnp.uint32(0xFFFF))
+    l2 = s2 & jnp.uint32(0xFFFF)
+    c2 = (s2 >> 16) + (p11 >> 16) + (p02 >> 16) + (p20 >> 16)
+    s3 = c2 + p12 + p21 + p03 + p30  # only low 16 bits of s3 survive mod 2**64
+    l3 = s3 & jnp.uint32(0xFFFF)
+
+    lo = l0 | (l1 << 16)
+    hi = l2 | (l3 << 16)
+    return hi, lo
+
+
+def fmix64_planes(hi: jnp.ndarray, lo: jnp.ndarray):
+    """MurmurHash3 64-bit finalizer on (hi, lo) uint32 planes.
+
+    x ^= x >> 33; x *= 0xff51afd7ed558ccd; x ^= x >> 33;
+    x *= 0xc4ceb9fe1a85ec53; x ^= x >> 33;
+    """
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+
+    def shr33(h, l):
+        # (x >> 33): new_lo = hi >> 1, new_hi = 0
+        return jnp.zeros_like(h), h >> 1
+
+    def xor2(h, l, h2, l2):
+        return h ^ h2, l ^ l2
+
+    m1h, m1l = jnp.uint32(0xFF51AFD7), jnp.uint32(0xED558CCD)
+    m2h, m2l = jnp.uint32(0xC4CEB9FE), jnp.uint32(0x1A85EC53)
+
+    sh, sl = shr33(hi, lo)
+    hi, lo = xor2(hi, lo, sh, sl)
+    hi, lo = _mul64(hi, lo, m1h, m1l)
+    sh, sl = shr33(hi, lo)
+    hi, lo = xor2(hi, lo, sh, sl)
+    hi, lo = _mul64(hi, lo, m2h, m2l)
+    sh, sl = shr33(hi, lo)
+    hi, lo = xor2(hi, lo, sh, sl)
+    return hi, lo
+
+
+def set_index(key: jnp.ndarray, num_sets: int) -> jnp.ndarray:
+    """Map a (batch of) int32/uint32 key(s) to a set index in [0, num_sets).
+
+    num_sets must be a power of two (bitmask instead of modulo, as the paper's
+    implementation does).
+    """
+    assert num_sets & (num_sets - 1) == 0, "num_sets must be a power of two"
+    h = fmix32(key.astype(jnp.uint32))
+    return (h & jnp.uint32(num_sets - 1)).astype(jnp.int32)
+
+
+def fold_token_hash(h: jnp.ndarray, tok: jnp.ndarray) -> jnp.ndarray:
+    """One step of a rolling hash over a token stream (for prefix caching).
+
+    boost-style hash_combine on uint32: h ^= fmix32(tok) + 0x9e3779b9 + (h<<6) + (h>>2)
+    """
+    h = h.astype(jnp.uint32)
+    t = fmix32(tok.astype(jnp.uint32))
+    return h ^ (t + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))

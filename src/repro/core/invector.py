@@ -1,0 +1,124 @@
+"""In-vector LRU lane primitives (TPU-native adaptation of Wang et al. [6]).
+
+The paper's building block reorders P key-value items inside one AVX vector
+register with a table-driven permute (``vpermd`` + in-memory pattern table).
+TPUs have no table-driven in-register shuffle, so we express the same data
+movement as branch-free *select arithmetic over lane-shifted copies* — the
+native VPU idiom (iota + roll + where).  Everything here is rank-polymorphic
+over a leading batch dimension so thousands of sets are processed per step.
+
+The single primitive
+--------------------
+Every state transition of in-vector LRU *and* multi-step LRU is an instance of
+
+    ``rotate_insert(row, lo, hi, item)``:
+        new[lo]   = item
+        new[j]    = row[j-1]    for lo < j <= hi
+        new[j]    = row[j]      otherwise
+        displaced = row[hi]
+
+ * in-vector get (hit at pos):      lo = vec_start(pos), hi = pos, item = row[pos]
+ * multi-step upgrade (hit at MRU
+   of vector m>0):                  lo = pos-1,          hi = pos, item = row[pos]
+   (the LRU tail of vector m-1 is the flat lane pos-1, so the upgrade swap is
+   the same rotation with a 2-lane range)
+ * put into empty slot e:           lo = vec_start(e),   hi = e,   item = new key
+ * put with eviction:               lo = (M-1)*P,        hi = A-1, item = new key
+ * set-associative exact LRU:       same with lo = 0
+
+All ops below take ``rows`` of shape (..., A) where A = M*P lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "EMPTY_KEY",
+    "rotate_insert",
+    "find_key",
+    "find_deepest_empty",
+    "get_update_lo",
+]
+
+# Reserved sentinel for an invalid/empty slot.  Keys (or 32-bit key tags) must
+# never equal this value; `hashing.fmix32` outputs are masked by callers that
+# cannot guarantee it.  INT32_MIN is used so plain int32 compares work.
+# (numpy scalar, NOT a jax array: importing this module must not initialize
+# the jax backend — dryrun.py sets XLA_FLAGS first — and Pallas kernels may
+# not capture array constants.)
+EMPTY_KEY = np.int32(-(2**31))
+
+
+def _lane_iota(shape) -> jnp.ndarray:
+    """Lane index along the last axis, broadcast to ``shape`` (int32)."""
+    return jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+
+
+def find_key(rows: jnp.ndarray, key: jnp.ndarray) -> jnp.ndarray:
+    """Flat lane position of ``key`` in each row, or -1 if absent.
+
+    rows: (..., A) int32, key: (...,) int32.  Keys are unique within a row
+    (cache invariant), so max-over-matching-lanes is exact.
+    """
+    lane = _lane_iota(rows.shape)
+    hit = rows == key[..., None]
+    return jnp.max(jnp.where(hit, lane, -1), axis=-1)
+
+
+def find_deepest_empty(rows: jnp.ndarray) -> jnp.ndarray:
+    """Largest lane index holding EMPTY_KEY, or -1 if the row is full.
+
+    "Deepest" (closest to the LRU end) keeps insertion semantics consistent
+    with multi-step LRU's insert-at-last-vector philosophy: on a fresh cache
+    new items land in the last vector, exactly as in the eviction path.
+    """
+    lane = _lane_iota(rows.shape)
+    return jnp.max(jnp.where(rows == EMPTY_KEY, lane, -1), axis=-1)
+
+
+def rotate_insert(
+    rows: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    item: jnp.ndarray,
+):
+    """Branch-free rotate-right of lanes [lo, hi] with ``item`` written at lo.
+
+    rows: (..., A); lo, hi: (...,) int32 with 0 <= lo <= hi < A (callers clamp);
+    item: (...,).  Returns (new_rows, displaced) where displaced = rows[hi].
+
+    This is the TPU replacement for the paper's ``vpermd`` + pattern table:
+    one lane-shifted copy (`roll`) and two selects, all full-rate VPU ops.
+    """
+    lane = _lane_iota(rows.shape)
+    lo_b = lo[..., None]
+    hi_b = hi[..., None]
+    shifted = jnp.roll(rows, 1, axis=-1)  # shifted[j] = rows[j-1]
+    out = jnp.where(
+        lane == lo_b,
+        item[..., None],
+        jnp.where((lane > lo_b) & (lane <= hi_b), shifted, rows),
+    )
+    displaced = jnp.take_along_axis(rows, hi[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return out, displaced
+
+
+def get_update_lo(pos: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Rotation start for a *get* hit at flat lane ``pos`` under multi-step LRU.
+
+    p: lanes per vector (P).  Rules (paper §III.B):
+      * hit at in-vector position > 0      -> promote to the vector's MRU slot:
+                                              lo = vector start
+      * hit at a vector's MRU slot (m > 0) -> upgrade: swap with LRU tail of the
+                                              previous vector = flat lane pos-1
+      * hit at the global MRU (pos == 0)   -> no-op (lo = 0 = pos)
+    For exact-LRU-within-set semantics pass the result of this function through
+    ``jnp.zeros_like`` instead (lo = 0 always) — see multistep.py.
+    """
+    vec_start = (pos // p) * p
+    in_vec = pos % p
+    lo = jnp.where(in_vec > 0, vec_start, pos - 1)
+    return jnp.maximum(lo, 0)

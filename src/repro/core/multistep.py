@@ -1,0 +1,235 @@
+"""Multi-step LRU set-associative cache (the paper's contribution) in JAX.
+
+State layout
+------------
+One int32 array ``table`` of shape (S, A, C):
+
+  * S = num_sets (power of two; a key is assigned to a set by fmix32 hash)
+  * A = M*P lanes per set, ordered hot->cold: lane a = m*P + p where m is the
+    vector index (0 = hottest vector) and p the in-vector position (0 = MRU).
+    The set's global LRU victim is always lane A-1 — eviction needs no scan.
+  * C = key_planes + value_planes "planes": plane 0..KP-1 hold the key
+    (KP=1 for 32-bit keys — the TPU-native lane width — or KP=2 for the
+    paper's 64-bit keys as (hi, lo) int32 planes), the rest hold the value
+    (e.g. 2 planes = a 64-bit pointer, or 1 plane = a KV-page index).
+
+Because recency/frequency are encoded purely in lane *order*, there is no
+per-item LRU metadata — the paper's core property.  Every mutation is one
+``rotate_insert`` over a lane range (see invector.py), applied to all C
+planes identically, so the whole transition is a handful of full-rate VPU
+selects regardless of which case (promote / upgrade / fill / evict) fires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.invector import EMPTY_KEY, get_update_lo
+
+__all__ = [
+    "MSLRUConfig",
+    "AccessResult",
+    "init_table",
+    "row_lookup",
+    "row_get",
+    "row_put",
+    "row_access",
+    "row_delete",
+    "set_index_for",
+]
+
+POLICY_MULTISTEP = "multistep"
+POLICY_SET_LRU = "set_lru"  # exact LRU *within* each set (baseline)
+
+
+@dataclasses.dataclass(frozen=True)
+class MSLRUConfig:
+    """Static configuration of a multi-step LRU cache."""
+
+    num_sets: int               # S, power of two
+    m: int = 2                  # vectors per set (M); m=1 == in-vector LRU
+    p: int = 4                  # lanes per vector (P); AVX2/64-bit analogue
+    key_planes: int = 1         # 1 => 32-bit keys, 2 => 64-bit (hi,lo)
+    value_planes: int = 2       # 2 => 64-bit values (pointers)
+    policy: str = POLICY_MULTISTEP
+
+    def __post_init__(self):
+        assert self.num_sets > 0 and (self.num_sets & (self.num_sets - 1)) == 0, (
+            "num_sets must be a power of two")
+        assert self.m >= 1 and self.p >= 1
+        assert self.key_planes in (1, 2)
+        assert self.value_planes >= 0
+        assert self.policy in (POLICY_MULTISTEP, POLICY_SET_LRU)
+
+    @property
+    def assoc(self) -> int:  # A
+        return self.m * self.p
+
+    @property
+    def planes(self) -> int:  # C
+        return self.key_planes + self.value_planes
+
+    @property
+    def capacity(self) -> int:
+        return self.num_sets * self.assoc
+
+
+class AccessResult(NamedTuple):
+    """Outcome of a batch of cache operations (all int32 arrays)."""
+
+    hit: jnp.ndarray            # (B,) bool
+    value: jnp.ndarray          # (B, value_planes) value of the hit item (garbage if miss)
+    pos: jnp.ndarray            # (B,) flat lane of the hit, -1 on miss (pos//P = vector, for Fig.12)
+    evicted_key: jnp.ndarray    # (B, key_planes) key displaced by a put (EMPTY if none)
+    evicted_val: jnp.ndarray    # (B, value_planes)
+    evicted_valid: jnp.ndarray  # (B,) bool — True when a real item was evicted
+
+
+def init_table(cfg: MSLRUConfig) -> jnp.ndarray:
+    """Empty cache: key plane 0 = EMPTY_KEY sentinel, everything else 0."""
+    t = jnp.zeros((cfg.num_sets, cfg.assoc, cfg.planes), jnp.int32)
+    return t.at[:, :, 0].set(EMPTY_KEY)
+
+
+def set_index_for(cfg: MSLRUConfig, qkeys: jnp.ndarray) -> jnp.ndarray:
+    """Set assignment by MurmurHash3 finalizer over key plane(s). qkeys: (B, KP)."""
+    if cfg.key_planes == 1:
+        return hashing.set_index(qkeys[..., 0], cfg.num_sets)
+    hi, lo = hashing.fmix64_planes(qkeys[..., 0], qkeys[..., 1])
+    return (lo & jnp.uint32(cfg.num_sets - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lane helpers operating on plane-carrying rows (..., A, C)
+# ---------------------------------------------------------------------------
+
+def _lane(rows: jnp.ndarray) -> jnp.ndarray:
+    """Lane iota along the A axis of (..., A, C) rows."""
+    return jax.lax.broadcasted_iota(jnp.int32, rows.shape[:-1], rows.ndim - 2)
+
+
+def _find_key_planes(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray) -> jnp.ndarray:
+    """Flat lane of the key match (-1 if absent). rows (..., A, C), qkeys (..., KP)."""
+    kp = cfg.key_planes
+    hit = jnp.all(rows[..., :kp] == qkeys[..., None, :], axis=-1)
+    lane = _lane(rows)
+    return jnp.max(jnp.where(hit, lane, -1), axis=-1)
+
+
+def _find_deepest_empty_planes(rows: jnp.ndarray) -> jnp.ndarray:
+    lane = _lane(rows)
+    return jnp.max(jnp.where(rows[..., 0] == EMPTY_KEY, lane, -1), axis=-1)
+
+
+def _rotate_insert_planes(rows, lo, hi, item):
+    """rotate_insert (invector.py) applied to all C planes of (..., A, C) rows.
+
+    lo, hi: (...,); item: (..., C).  Returns (new_rows, displaced (..., C)).
+    """
+    lane = _lane(rows)[..., None]                      # (..., A, 1)
+    lo_b = lo[..., None, None]
+    hi_b = hi[..., None, None]
+    shifted = jnp.roll(rows, 1, axis=-2)
+    out = jnp.where(
+        lane == lo_b,
+        item[..., None, :],
+        jnp.where((lane > lo_b) & (lane <= hi_b), shifted, rows),
+    )
+    idx = hi[..., None, None].astype(jnp.int32)
+    displaced = jnp.take_along_axis(rows, jnp.broadcast_to(idx, rows.shape[:-2] + (1, rows.shape[-1])), axis=-2)[..., 0, :]
+    return out, displaced
+
+
+# ---------------------------------------------------------------------------
+# Row-level operations (batched over a leading dim; rows (B, A, C))
+# ---------------------------------------------------------------------------
+
+def row_lookup(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
+    """Read-only probe: (hit (B,), value (B, V), pos (B,))."""
+    pos = _find_key_planes(cfg, rows, qkeys)
+    hit = pos >= 0
+    pos_c = jnp.maximum(pos, 0)
+    item = jnp.take_along_axis(
+        rows, jnp.broadcast_to(pos_c[..., None, None], rows.shape[:-2] + (1, rows.shape[-1])), axis=-2
+    )[..., 0, :]
+    return hit, item[..., cfg.key_planes:], pos
+
+
+def row_get(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
+    """get: probe + recency update (promote within vector / upgrade across).
+
+    Returns (new_rows, hit, value, pos).  A miss is a provable no-op: the
+    rotation degenerates to re-writing lane 0 with itself.
+    """
+    pos = _find_key_planes(cfg, rows, qkeys)
+    hit = pos >= 0
+    pos_c = jnp.maximum(pos, 0)
+    item = jnp.take_along_axis(
+        rows, jnp.broadcast_to(pos_c[..., None, None], rows.shape[:-2] + (1, rows.shape[-1])), axis=-2
+    )[..., 0, :]
+    if cfg.policy == POLICY_SET_LRU:
+        lo = jnp.zeros_like(pos_c)
+    else:
+        lo = get_update_lo(pos_c, cfg.p)
+    new_rows, _ = _rotate_insert_planes(rows, lo, pos_c, item)
+    return new_rows, hit, item[..., cfg.key_planes:], pos
+
+
+def row_put(cfg: MSLRUConfig, rows: jnp.ndarray, new_key: jnp.ndarray, new_val: jnp.ndarray):
+    """put: insert a (known-absent) item; fill deepest hole or evict set-LRU.
+
+    new_key (B, KP), new_val (B, V).  Returns
+    (new_rows, evicted_key, evicted_val, evicted_valid).
+    """
+    e = _find_deepest_empty_planes(rows)
+    a = cfg.assoc
+    pos_ins = jnp.where(e >= 0, e, a - 1)
+    if cfg.policy == POLICY_SET_LRU:
+        lo = jnp.zeros_like(pos_ins)
+    else:
+        # MRU slot of the vector holding the insertion lane; for a full set
+        # pos_ins = A-1 so lo = (M-1)*P — the last vector, per the paper.
+        lo = (pos_ins // cfg.p) * cfg.p
+    item = jnp.concatenate([new_key, new_val], axis=-1) if cfg.value_planes else new_key
+    new_rows, displaced = _rotate_insert_planes(rows, lo, pos_ins, item)
+    ev_key = displaced[..., : cfg.key_planes]
+    ev_val = displaced[..., cfg.key_planes:]
+    ev_valid = displaced[..., 0] != EMPTY_KEY
+    return new_rows, ev_key, ev_val, ev_valid
+
+
+def row_access(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray):
+    """The paper's benchmark op: get, and on miss put (key, val).
+
+    Fuses row_get and row_put with per-row selection so a (B, A, C) batch with
+    mixed hits/misses stays branch-free.  Returns (new_rows, AccessResult).
+    """
+    got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
+    put_rows, ev_k, ev_v, ev_ok = row_put(cfg, rows, qkeys, qvals)
+    new_rows = jnp.where(hit[..., None, None], got_rows, put_rows)
+    ev_ok = ev_ok & ~hit
+    res = AccessResult(
+        hit=hit,
+        value=value,
+        pos=pos,
+        evicted_key=jnp.where(hit[..., None], EMPTY_KEY, ev_k),
+        evicted_val=jnp.where(hit[..., None], 0, ev_v),
+        evicted_valid=ev_ok,
+    )
+    return new_rows, res
+
+
+def row_delete(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
+    """delete: invalidate in place (paper §III.B); no compaction."""
+    pos = _find_key_planes(cfg, rows, qkeys)
+    hit = pos >= 0
+    lane = _lane(rows)
+    kill = (lane == pos[..., None]) & hit[..., None]
+    key0 = jnp.where(kill, EMPTY_KEY, rows[..., 0])
+    new_rows = rows.at[..., 0].set(key0)
+    return new_rows, hit

@@ -1,0 +1,332 @@
+"""Pure-Python reference policies.
+
+Two roles:
+ 1. **Oracles** — `MultiStepLRUOracle` mirrors the JAX implementation
+    bit-for-bit (same fmix32 set assignment, same deepest-empty insertion,
+    same promote/upgrade rules) for hypothesis-based equivalence testing.
+ 2. **Baselines** — the algorithms the paper compares against: exact LRU
+    (doubly-linked list via OrderedDict), GCLOCK (4-bit reference counters),
+    ARC, FIFO, plus a Mattson reuse-distance analyzer that yields the exact
+    LRU hit ratio for *every* cache size in one pass (used by Fig. 7).
+
+All baselines expose ``access(key) -> bool`` with the paper's benchmark
+semantics: lookup; on miss, insert (evicting if full).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "fmix32_py",
+    "MultiStepLRUOracle",
+    "ExactLRU",
+    "GClock",
+    "ARC",
+    "FIFO",
+    "ReuseDistanceLRU",
+]
+
+_MASK32 = 0xFFFFFFFF
+
+
+def fmix32_py(x: int) -> int:
+    """Python mirror of hashing.fmix32 (uint32 semantics)."""
+    x &= _MASK32
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & _MASK32
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & _MASK32
+    x ^= x >> 16
+    return x
+
+
+EMPTY = None  # oracle-side empty slot marker
+
+
+class MultiStepLRUOracle:
+    """Pure-Python multi-step LRU, slot-exact mirror of multistep.py.
+
+    Each set is a flat list of A = M*P slots ordered hot->cold; slot value is
+    (key, val) or None.  ``policy='set_lru'`` gives exact-LRU-within-set.
+    """
+
+    def __init__(self, num_sets: int, m: int = 2, p: int = 4, policy: str = "multistep"):
+        assert num_sets & (num_sets - 1) == 0
+        self.s, self.m, self.p = num_sets, m, p
+        self.a = m * p
+        self.policy = policy
+        self.sets = [[None] * self.a for _ in range(num_sets)]
+
+    # -- internals ----------------------------------------------------------
+    def set_index(self, key: int) -> int:
+        return fmix32_py(key) & (self.s - 1)
+
+    def _find(self, row, key) -> int:
+        for i, slot in enumerate(row):
+            if slot is not None and slot[0] == key:
+                return i
+        return -1
+
+    def _rotate_insert(self, row, lo, hi, item):
+        displaced = row[hi]
+        for j in range(hi, lo, -1):
+            row[j] = row[j - 1]
+        row[lo] = item
+        return displaced
+
+    # -- operations ---------------------------------------------------------
+    def lookup(self, key: int):
+        row = self.sets[self.set_index(key)]
+        i = self._find(row, key)
+        return (True, row[i][1], i) if i >= 0 else (False, None, -1)
+
+    def get(self, key: int):
+        """Probe + recency update. Returns (hit, value, pos)."""
+        row = self.sets[self.set_index(key)]
+        pos = self._find(row, key)
+        if pos < 0:
+            return False, None, -1
+        val = row[pos][1]
+        if self.policy == "set_lru":
+            lo = 0
+        else:
+            in_vec = pos % self.p
+            lo = (pos // self.p) * self.p if in_vec > 0 else max(pos - 1, 0)
+        self._rotate_insert(row, lo, pos, row[pos])
+        return True, val, pos
+
+    def put(self, key: int, val):
+        """Insert known-absent key. Returns (evicted_key, evicted_val) or None."""
+        row = self.sets[self.set_index(key)]
+        e = -1
+        for i in range(self.a - 1, -1, -1):  # deepest empty slot
+            if row[i] is None:
+                e = i
+                break
+        pos_ins = e if e >= 0 else self.a - 1
+        lo = 0 if self.policy == "set_lru" else (pos_ins // self.p) * self.p
+        displaced = self._rotate_insert(row, lo, pos_ins, (key, val))
+        return displaced  # None when a hole absorbed the insert
+
+    def access(self, key: int, val=0):
+        """get; on miss put. Returns (hit, pos, evicted)."""
+        hit, _, pos = self.get(key)
+        if hit:
+            return True, pos, None
+        return False, -1, self.put(key, val)
+
+    def delete(self, key: int) -> bool:
+        row = self.sets[self.set_index(key)]
+        pos = self._find(row, key)
+        if pos < 0:
+            return False
+        row[pos] = None
+        return True
+
+    def dump_keys(self) -> np.ndarray:
+        """(S, A) int64 key matrix with EMPTY as a large negative sentinel."""
+        out = np.full((self.s, self.a), -(2**31), np.int64)
+        for si, row in enumerate(self.sets):
+            for ai, slot in enumerate(row):
+                if slot is not None:
+                    out[si, ai] = slot[0]
+        return out
+
+
+class ExactLRU:
+    """Global exact LRU over an OrderedDict (the paper's linked-list baseline)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.od: OrderedDict = OrderedDict()
+
+    def access(self, key: int) -> bool:
+        od = self.od
+        if key in od:
+            od.move_to_end(key)
+            return True
+        if len(od) >= self.capacity:
+            od.popitem(last=False)
+        od[key] = True
+        return False
+
+    def delete(self, key: int) -> bool:
+        return self.od.pop(key, None) is not None
+
+
+class GClock:
+    """Generalized CLOCK with a capped reference counter (paper: 4 bits).
+
+    Hit: increment counter (saturating at cap).  Miss: advance the hand,
+    decrementing positive counters, until a zero-counter slot is found;
+    evict it and insert the new key there with counter 0.
+    """
+
+    def __init__(self, capacity: int, cap: int = 15):
+        self.capacity = capacity
+        self.cap = cap
+        self.keys = [None] * capacity
+        self.count = np.zeros(capacity, np.int32)
+        self.hand = 0
+        self.index: dict = {}
+        self.size = 0
+
+    def access(self, key: int) -> bool:
+        slot = self.index.get(key)
+        if slot is not None:
+            if self.count[slot] < self.cap:
+                self.count[slot] += 1
+            return True
+        if self.size < self.capacity:
+            slot = self.size
+            self.size += 1
+        else:
+            while True:
+                h = self.hand
+                self.hand = (h + 1) % self.capacity
+                if self.count[h] == 0:
+                    slot = h
+                    break
+                self.count[h] -= 1
+            del self.index[self.keys[slot]]
+        self.keys[slot] = key
+        self.count[slot] = 0
+        self.index[key] = slot
+        return False
+
+
+class ARC:
+    """Adaptive Replacement Cache (Megiddo & Modha, FAST'03).
+
+    T1/T2 are the resident lists (recency / frequency), B1/B2 the ghost
+    lists; ``p`` is the adaptive target size of T1.  Exposes which list a
+    hit landed in (for the Fig. 12 breakdown).
+    """
+
+    def __init__(self, capacity: int):
+        self.c = capacity
+        self.p = 0
+        self.t1: OrderedDict = OrderedDict()
+        self.t2: OrderedDict = OrderedDict()
+        self.b1: OrderedDict = OrderedDict()
+        self.b2: OrderedDict = OrderedDict()
+        self.last_hit_list: Optional[str] = None
+
+    def _replace(self, in_b2: bool):
+        if self.t1 and (len(self.t1) > self.p or (in_b2 and len(self.t1) == self.p)):
+            k, _ = self.t1.popitem(last=False)
+            self.b1[k] = True
+        else:
+            k, _ = self.t2.popitem(last=False)
+            self.b2[k] = True
+
+    def access(self, key: int) -> bool:
+        if key in self.t1:
+            del self.t1[key]
+            self.t2[key] = True
+            self.last_hit_list = "t1"
+            return True
+        if key in self.t2:
+            self.t2.move_to_end(key)
+            self.last_hit_list = "t2"
+            return True
+        self.last_hit_list = None
+        if key in self.b1:
+            self.p = min(self.c, self.p + max(1, len(self.b2) // max(1, len(self.b1))))
+            self._replace(False)
+            del self.b1[key]
+            self.t2[key] = True
+            return False
+        if key in self.b2:
+            self.p = max(0, self.p - max(1, len(self.b1) // max(1, len(self.b2))))
+            self._replace(True)
+            del self.b2[key]
+            self.t2[key] = True
+            return False
+        l1 = len(self.t1) + len(self.b1)
+        if l1 == self.c:
+            if len(self.t1) < self.c:
+                self.b1.popitem(last=False)
+                self._replace(False)
+            else:
+                self.t1.popitem(last=False)
+        elif l1 < self.c and len(self.t1) + len(self.t2) + len(self.b1) + len(self.b2) >= self.c:
+            if len(self.t1) + len(self.t2) + len(self.b1) + len(self.b2) >= 2 * self.c:
+                self.b2.popitem(last=False)
+            self._replace(False)
+        self.t1[key] = True
+        return False
+
+
+class FIFO:
+    """First-in first-out baseline."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.od: OrderedDict = OrderedDict()
+
+    def access(self, key: int) -> bool:
+        if key in self.od:
+            return True
+        if len(self.od) >= self.capacity:
+            self.od.popitem(last=False)
+        self.od[key] = True
+        return False
+
+
+class ReuseDistanceLRU:
+    """Mattson stack algorithm: exact-LRU hit counts for all sizes at once.
+
+    Feed the full trace; ``hits_for(size)`` then answers any capacity.
+    Implementation: Fenwick tree over last-access positions; the reuse
+    distance of an access is the number of *distinct* keys touched since the
+    key's previous access, which is exactly its LRU stack depth.
+    """
+
+    def __init__(self, max_trace_len: int):
+        self.n = max_trace_len + 1
+        self.bit = np.zeros(self.n + 1, np.int64)
+        self.last: dict = {}
+        self.t = 0
+        self.dist_hist: dict = {}
+        self.cold = 0
+
+    def _add(self, i: int, v: int):
+        i += 1
+        while i <= self.n:
+            self.bit[i] += v
+            i += i & (-i)
+
+    def _sum(self, i: int) -> int:
+        i += 1
+        s = 0
+        while i > 0:
+            s += self.bit[i]
+            i -= i & (-i)
+        return int(s)
+
+    def access(self, key: int):
+        prev = self.last.get(key)
+        if prev is None:
+            self.cold += 1
+        else:
+            d = self._sum(self.t) - self._sum(prev)  # distinct keys since prev
+            self.dist_hist[d] = self.dist_hist.get(d, 0) + 1
+            self._add(prev, -1)
+        self._add(self.t, 1)
+        self.last[key] = self.t
+        self.t += 1
+
+    def feed(self, trace):
+        for k in trace:
+            self.access(int(k))
+
+    def hits_for(self, size: int) -> int:
+        return sum(c for d, c in self.dist_hist.items() if d <= size)
+
+    def hit_ratio(self, size: int) -> float:
+        return self.hits_for(size) / max(1, self.t)

@@ -1,0 +1,1 @@
+"""Data substrates: YCSB-style cache workloads + synthetic token pipeline."""

@@ -1,0 +1,106 @@
+"""YCSB client-emulator workload generators (zipfian / latest / scan).
+
+Vectorized numpy ports of the three request distributions the paper uses
+(YCSB's ZipfianGenerator with scrambling, SkewedLatestGenerator, and
+ScanWorkload).  The paper's α is the zipf exponent (relative frequency of
+the i-th most popular key ∝ 1/i^α); YCSB's default is 0.99, web traces sit
+around 0.7 [Breslau et al.].
+
+Keys are int32 in [1, n_keys] (0 and the EMPTY sentinel are never emitted).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["zipfian", "latest", "scan", "make_workload"]
+
+_MASK32 = np.uint32(0xFFFFFFFF)
+
+
+def _fmix32_np(x: np.ndarray) -> np.ndarray:
+    """Vectorized MurmurHash3 finalizer (uint32), for rank scrambling."""
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x *= np.uint32(0x85EBCA6B)
+    x ^= x >> np.uint32(13)
+    x *= np.uint32(0xC2B2AE35)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def _zipf_ranks(n_keys: int, n: int, alpha: float, rng) -> np.ndarray:
+    """n samples of 0-based rank with P(rank=i) ∝ 1/(i+1)^alpha."""
+    pmf = 1.0 / np.power(np.arange(1, n_keys + 1, dtype=np.float64), alpha)
+    cdf = np.cumsum(pmf)
+    cdf /= cdf[-1]
+    u = rng.random(n)
+    return np.searchsorted(cdf, u, side="left").astype(np.int64)
+
+
+def zipfian(n_keys: int, n_queries: int, alpha: float = 0.99,
+            scrambled: bool = True, seed: int = 0) -> np.ndarray:
+    """YCSB zipfian: static popularity ranking over n_keys items.
+
+    ``scrambled`` hashes the rank onto the key space (YCSB's
+    ScrambledZipfianGenerator) so hot keys are spread uniformly — this is
+    what exercises set-conflict behaviour in a set-associative cache.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = _zipf_ranks(n_keys, n_queries, alpha, rng)
+    if scrambled:
+        keys = (_fmix32_np(ranks.astype(np.uint32)) % np.uint32(n_keys)).astype(np.int64)
+    else:
+        keys = ranks
+    return (keys + 1).astype(np.int32)
+
+
+def latest(n_keys: int, n_queries: int, alpha: float = 0.99,
+           insert_every: int = 8, seed: int = 0) -> np.ndarray:
+    """YCSB latest: time-evolving popularity — newest insert is hottest.
+
+    The key space grows by one every ``insert_every`` queries (starting from
+    n_keys); query t targets ``newest_t - zipf_offset`` so the hot set drifts
+    continuously, which is what defeats pure-frequency policies (paper Fig. 7
+    'latest': GCLOCK does well, multi-step's advantage shrinks).
+    """
+    rng = np.random.default_rng(seed)
+    newest = n_keys + np.arange(n_queries, dtype=np.int64) // insert_every
+    offs = _zipf_ranks(n_keys, n_queries, alpha, rng)
+    keys = newest - np.minimum(offs, newest - 1)
+    return (keys % np.int64(2**31 - 2) + 1).astype(np.int32)
+
+
+def scan(n_keys: int, n_queries: int, alpha: float = 0.99,
+         max_scan_len: int = 16, seed: int = 0) -> np.ndarray:
+    """YCSB scan: a zipfian start key followed by a sequential range read.
+
+    Emits runs [s, s+1, ..., s+L-1] with L ~ Uniform{1..max_scan_len};
+    truncated to exactly n_queries requests.
+    """
+    rng = np.random.default_rng(seed)
+    n_runs = max(1, 2 * n_queries // (max_scan_len + 1))
+    starts = _zipf_ranks(n_keys, n_runs, alpha, rng)
+    starts = (_fmix32_np(starts.astype(np.uint32)) % np.uint32(n_keys)).astype(np.int64)
+    lens = rng.integers(1, max_scan_len + 1, size=n_runs)
+    total = int(lens.sum())
+    while total < n_queries:  # extremely unlikely; top up
+        starts = np.concatenate([starts, starts[: n_runs // 2]])
+        lens = np.concatenate([lens, lens[: n_runs // 2]])
+        total = int(lens.sum())
+    run_ids = np.repeat(np.arange(len(lens)), lens)
+    base = np.repeat(starts, lens)
+    cum = np.arange(len(run_ids)) - np.repeat(np.cumsum(lens) - lens, lens)
+    keys = (base + cum) % n_keys
+    return (keys[:n_queries] + 1).astype(np.int32)
+
+
+def make_workload(name: str, n_keys: int, n_queries: int, alpha: float = 0.99,
+                  seed: int = 0) -> np.ndarray:
+    if name == "zipfian":
+        return zipfian(n_keys, n_queries, alpha, seed=seed)
+    if name == "latest":
+        return latest(n_keys, n_queries, alpha, seed=seed)
+    if name == "scan":
+        return scan(n_keys, n_queries, alpha, seed=seed)
+    raise ValueError(f"unknown workload {name!r}")

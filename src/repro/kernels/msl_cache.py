@@ -1,0 +1,163 @@
+"""Pallas TPU kernel for the batched multi-step LRU access op.
+
+This is the compute hot-spot the paper optimizes with AVX intrinsics: the
+compare + permute + insert over a set's A = M*P lanes.  On TPU the unit of
+work is a *block of queries*: each grid cell loads a (BB, A, C) tile of
+gathered set rows into VMEM plus the (BB, KP/V) query tiles, and performs the
+entire fused get-or-put transition with lane-select arithmetic on the VPU —
+no gathers, no scalar loops, no pattern table (see invector.py for the
+mapping from the paper's ``vpermd`` idiom).
+
+Grid/BlockSpec: 1-D grid over query blocks; every ref is blocked on the
+batch axis only, so the VMEM working set per cell is
+BB*(A*C + KP + V + A*C + small outputs) * 4 bytes ≈ 0.5 MB at BB=2048,
+A=8, C=3 — comfortably inside the ~16 MB v5e VMEM while long enough to hide
+the HBM->VMEM DMA behind compute.
+
+All index movement uses select+reduce (never take_along_axis/gather), so the
+kernel lowers to pure vector ops on TPU.  Correctness is pinned to the
+pure-jnp oracle (ref.msl_access_ref == core row_access) in interpret mode —
+bit-exact, every geometry/dtype in the test sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.invector import EMPTY_KEY
+from repro.core.multistep import MSLRUConfig
+
+__all__ = ["msl_access_kernel_call"]
+
+
+def _kernel(cfg: MSLRUConfig, krows_ref, qkey_ref, qval_ref,
+            out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref):
+    a, c = cfg.assoc, cfg.planes
+    kp, v = cfg.key_planes, cfg.value_planes
+    p = cfg.p
+
+    rows = krows_ref[...]                     # (BB, A, C) int32
+    qk = qkey_ref[...]                        # (BB, KP)
+    qv = qval_ref[...]                        # (BB, V)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, rows.shape[:-1], 1)  # (BB, A)
+
+    # --- probe: position of the key match (unique by invariant) -----------
+    key_eq = jnp.ones(rows.shape[:-1], bool)
+    for kplane in range(kp):
+        key_eq &= rows[..., kplane] == qk[:, kplane][:, None]
+    pos = jnp.max(jnp.where(key_eq, lane, -1), axis=1)              # (BB,)
+    hit = pos >= 0
+    pos_c = jnp.maximum(pos, 0)
+
+    # item at pos via select+reduce (VPU-friendly; no gather)
+    at_pos = jnp.sum(jnp.where((lane == pos_c[:, None])[..., None], rows, 0), axis=1)
+
+    # --- get path: promote within vector / upgrade across vectors ---------
+    in_vec = pos_c % p
+    lo_get = jnp.where(in_vec > 0, (pos_c // p) * p, jnp.maximum(pos_c - 1, 0))
+    if cfg.policy == "set_lru":
+        lo_get = jnp.zeros_like(pos_c)
+    hi_get = pos_c
+
+    # --- put path: deepest empty slot, else evict the set's LRU tail ------
+    empty = rows[..., 0] == EMPTY_KEY
+    e = jnp.max(jnp.where(empty, lane, -1), axis=1)
+    pos_ins = jnp.where(e >= 0, e, a - 1)
+    lo_put = (pos_ins // p) * p
+    if cfg.policy == "set_lru":
+        lo_put = jnp.zeros_like(pos_ins)
+    hi_put = pos_ins
+
+    # --- fuse: one rotate_insert with per-row (lo, hi, item) --------------
+    lo = jnp.where(hit, lo_get, lo_put)
+    hi = jnp.where(hit, hi_get, hi_put)
+    new_item = jnp.concatenate([qk, qv], axis=-1) if v else qk      # (BB, C)
+    item = jnp.where(hit[:, None], at_pos, new_item)
+
+    shifted = jnp.roll(rows, 1, axis=1)
+    lane3 = lane[..., None]
+    out = jnp.where(
+        lane3 == lo[:, None, None], item[:, None, :],
+        jnp.where((lane3 > lo[:, None, None]) & (lane3 <= hi[:, None, None]),
+                  shifted, rows))
+
+    # a hit "displaces" the item itself — normalize to the EMPTY sentinel so
+    # callers can test ev[:, 0] != EMPTY_KEY (identical to the jnp oracle)
+    displaced = jnp.sum(jnp.where((lane == hi[:, None])[..., None], rows, 0), axis=1)
+    empty_ev = jnp.concatenate(
+        [jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32),
+         jnp.zeros((rows.shape[0], v), jnp.int32)], axis=-1
+    ) if v else jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32)
+    ev = jnp.where(hit[:, None], empty_ev, displaced)
+
+    out_rows_ref[...] = out
+    hit_ref[...] = hit.astype(jnp.int32)
+    pos_ref[...] = pos
+    if v:
+        val_ref[...] = at_pos[:, kp:]
+    else:  # dummy 1-plane output (sliced off by the wrapper)
+        val_ref[...] = jnp.zeros(val_ref.shape, jnp.int32)
+    ev_ref[...] = ev
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
+def msl_access_kernel_call(rows, qkeys, qvals, *, cfg: MSLRUConfig,
+                           block_b: int = 2048, interpret: bool = True):
+    """Fused multi-step LRU access over pre-gathered rows.
+
+    rows (B, A, C) int32; qkeys (B, KP); qvals (B, V).  B is padded to a
+    multiple of block_b with EMPTY queries (their outputs are sliced away).
+    Returns the same tuple as ref.msl_access_ref.
+    """
+    b, a, c = rows.shape
+    kp, v = cfg.key_planes, cfg.value_planes
+    ve = max(v, 1)  # BlockSpec needs >= 1 plane; dummy sliced off below
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.broadcast_to(_empty_row(cfg), (pad, a, c))])
+        qkeys = jnp.concatenate([qkeys, jnp.zeros((pad, kp), jnp.int32)])
+        qvals = jnp.concatenate([qvals, jnp.zeros((pad, v), jnp.int32)])
+    bp = b + pad
+    qvals_e = qvals if v else jnp.zeros((bp, 1), jnp.int32)
+
+    grid = (bp // bb,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((bp, a, c), jnp.int32),
+        jax.ShapeDtypeStruct((bp,), jnp.int32),
+        jax.ShapeDtypeStruct((bp,), jnp.int32),
+        jax.ShapeDtypeStruct((bp, ve), jnp.int32),
+        jax.ShapeDtypeStruct((bp, c), jnp.int32),
+    )
+    row_spec = pl.BlockSpec((bb, a, c), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, cfg),
+        grid=grid,
+        in_specs=[
+            row_spec,
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, ve), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            row_spec,
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, ve), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(rows, qkeys, qvals_e)
+    rows_o, hit_o, pos_o, val_o, ev_o = (o[:b] for o in out)
+    return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
+
+
+def _empty_row(cfg: MSLRUConfig):
+    r = jnp.zeros((1, cfg.assoc, cfg.planes), jnp.int32)
+    return r.at[:, :, 0].set(EMPTY_KEY)

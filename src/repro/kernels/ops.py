@@ -1,0 +1,88 @@
+"""jit'd public wrappers for the msl_cache kernel.
+
+``msl_access`` routes between the Pallas kernel (TPU target; interpret mode
+on CPU so the kernel body is exercised everywhere) and the pure-jnp oracle.
+The batched engine (core/engine.py) can be built on either backend via
+``make_kernel_batched_engine`` — the gather/scatter around the kernel stays
+in XLA, which is the intended TPU decomposition (dynamic row indexing is an
+XLA strength; the dense lane arithmetic is the kernel's job).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multistep import AccessResult, MSLRUConfig, set_index_for
+from repro.core.engine import group_offsets
+from repro.kernels.msl_cache import msl_access_kernel_call
+from repro.kernels.ref import msl_access_ref
+
+__all__ = ["msl_access", "make_kernel_batched_engine"]
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, use_kernel: bool = True,
+               block_b: int = 2048, interpret: bool | None = None):
+    """Fused get-or-put on pre-gathered rows; kernel or oracle backend."""
+    if not use_kernel:
+        return msl_access_ref(rows, qkeys, qvals, cfg)
+    if interpret is None:
+        interpret = _on_cpu()
+    return msl_access_kernel_call(
+        rows, qkeys, qvals, cfg=cfg, block_b=block_b, interpret=interpret)
+
+
+def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
+                               block_b: int = 2048, interpret: bool | None = None):
+    """Batched engine with the row transition done by the Pallas kernel.
+
+    Same exact rounds-serialization semantics as engine.make_batched_engine;
+    only the inner row op differs.
+    """
+    from repro.core.invector import EMPTY_KEY
+
+    @jax.jit
+    def run(table, qkeys, qvals):
+        s = table.shape[0]
+        b = qkeys.shape[0]
+        sids = set_index_for(cfg, qkeys)
+        offset = group_offsets(sids)
+        n_rounds = jnp.max(offset) + 1
+        padded = jnp.concatenate([table, jnp.zeros((1,) + table.shape[1:], table.dtype)])
+
+        def cond(carry):
+            r, _, _ = carry
+            return r < n_rounds
+
+        def body(carry):
+            r, padded, acc = carry
+            rows = jnp.take(padded, sids, axis=0)
+            new_rows, hit, pos, val, ev = msl_access(
+                rows, qkeys, qvals, cfg=cfg, use_kernel=use_kernel,
+                block_b=block_b, interpret=interpret)
+            sel = offset == r
+            scatter_id = jnp.where(sel, sids, s)
+            padded = padded.at[scatter_id].set(new_rows)
+            res = AccessResult(
+                hit=hit.astype(bool), value=val, pos=pos,
+                evicted_key=ev[:, : cfg.key_planes],
+                evicted_val=ev[:, cfg.key_planes:],
+                evicted_valid=(ev[:, 0] != EMPTY_KEY),
+            )
+            acc = jax.tree.map(
+                lambda a, n: jnp.where(sel.reshape((b,) + (1,) * (n.ndim - 1)), n, a),
+                acc, res)
+            return r + 1, padded, acc
+
+        from repro.core.engine import AccessResultZero
+        _, padded, acc = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), padded, AccessResultZero(cfg, b)))
+        return padded[:-1], acc
+
+    return run

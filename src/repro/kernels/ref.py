@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the msl_cache Pallas kernel.
+
+The oracle is the algorithm layer itself (multistep.row_access) — the kernel
+must reproduce it bit-for-bit on int32 planes.  Exposed here with the exact
+flat signature the kernel uses so test sweeps drive both through one entry
+point.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.multistep import MSLRUConfig, row_access
+
+__all__ = ["msl_access_ref"]
+
+
+def msl_access_ref(rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
+                   cfg: MSLRUConfig):
+    """rows (B, A, C) int32, qkeys (B, KP) int32, qvals (B, V) int32.
+
+    Returns (new_rows (B,A,C), hit (B,) int32, pos (B,) int32,
+             value (B,V) int32, evicted (B,C) int32) — evicted packs
+    [key planes | value planes] with key plane 0 == EMPTY_KEY when nothing
+    was evicted.
+    """
+    new_rows, res = row_access(cfg, rows, qkeys, qvals)
+    evicted = jnp.concatenate([res.evicted_key, res.evicted_val], axis=-1)
+    return (new_rows, res.hit.astype(jnp.int32), res.pos,
+            res.value, evicted)

@@ -1,0 +1,1 @@
+"""Distributed launch substrate: mesh, sharding rules, dry-run, drivers."""

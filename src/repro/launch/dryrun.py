@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes and extract roofline inputs.
+
+The two lines above MUST precede every other import: jax locks the device
+count at first backend initialization, and the dry-run needs 512 placeholder
+host devices to build the (2, 16, 16) multi-pod mesh.  Only this entry point
+gets the flag — smoke tests and benchmarks see the real single device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only --arch ...
+
+Results are cached incrementally under results/dryrun/ as JSON; a cell that
+already has a result is skipped unless --force.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import zstandard  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import bundle_for  # noqa: E402
+from repro.roofline import analysis as roofline  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# train cells checkpoint per scanned block (recompute in backward — the
+# standard policy for big models); serve cells never remat.
+TRAIN_REMAT = "full"
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k" and not cfg.supports_long:
+        return False
+    return True
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, save_hlo: bool = False) -> dict:
+    out_path = out_dir / (cell_id(arch, shape_name, multi_pod) + ".json")
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape_name):
+        rec = {"cell": cell_id(arch, shape_name, multi_pod), "skipped": True,
+               "reason": cfg.long_skip_reason}
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    if shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat=TRAIN_REMAT)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+
+    t0 = time.time()
+    bundle = bundle_for(cfg, mesh, shape)
+    with mesh:
+        lowered = bundle.fn.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"[{cell_id(arch, shape_name, multi_pod)}] "
+          f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB per device")
+    cost = compiled.cost_analysis()
+    print(f"  cost: flops/dev={cost.get('flops', 0):.3e} "
+          f"bytes/dev={cost.get('bytes accessed', 0):.3e}")
+
+    hlo_text = compiled.as_text()
+    rec = roofline.analyze(
+        compiled, chips=chips,
+        model_flops_total=roofline.model_flops_for(cfg, shape),
+        hlo_text=hlo_text)
+    rec.update({
+        "cell": cell_id(arch, shape_name, multi_pod),
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "skipped": False,
+    })
+    out_path.write_text(json.dumps(rec, indent=1))
+    # always keep the (compressed) HLO so the analyzer can be re-run
+    # without recompiling
+    (out_dir / (cell_id(arch, shape_name, multi_pod) + ".hlo.zst")).write_bytes(
+        zstandard.ZstdCompressor(level=6).compress(hlo_text.encode()))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = [False, True]
+    if args.single_pod_only:
+        pods = [False]
+    if args.multi_pod_only:
+        pods = [True]
+
+    failures = []
+    for multi_pod in pods:
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod, out_dir,
+                                   force=args.force, save_hlo=args.save_hlo)
+                    if rec.get("skipped"):
+                        print(f"[{rec['cell']}] SKIP: {rec.get('reason','')}")
+                    else:
+                        t = rec["terms_seconds"]
+                        print(f"  terms: compute={t['compute']*1e3:.2f}ms "
+                              f"memory={t['memory']*1e3:.2f}ms "
+                              f"collective={t['collective']*1e3:.2f}ms "
+                              f"dominant={rec['dominant']} "
+                              f"roofline_frac={rec['roofline_fraction']:.3f}")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, multi_pod, repr(e)))
+                    print(f"[{cell_id(arch, shape_name, multi_pod)}] FAILED: {e}")
+                    traceback.print_exc()
+
+    print(f"\n{'='*70}\ndry-run complete; failures: {len(failures)}")
+    for f in failures:
+        print("  FAIL:", f)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

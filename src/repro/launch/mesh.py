@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Functions only — importing this module never touches jax device state, so
+dryrun.py can set XLA_FLAGS before anything initializes the backend.
+
+Mesh geometry (TPU v5e pods of 256 chips):
+  single-pod:  (data=16, model=16)
+  multi-pod:   (pod=2, data=16, model=16) — 512 chips.
+
+Axis roles: batch shards over ('pod', 'data'); tensor-parallel over
+('model',); FSDP parameter sharding over ('data',); optimizer states
+(ZeRO-1) additionally over ('data',).  The distributed cache uses a flat
+view of all devices ('cache',).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cache_mesh", "batch_axes", "AXIS_DATA",
+           "AXIS_MODEL", "AXIS_POD"]
+
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (AXIS_POD, AXIS_DATA, AXIS_MODEL) if multi_pod else (AXIS_DATA, AXIS_MODEL)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cache_mesh(n_devices: int | None = None):
+    """1-D mesh over all (or n) devices for the sharded key-value cache."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("cache",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.shape)
+
+
+def make_debug_mesh(shape=(1, 1), axes=(AXIS_DATA, AXIS_MODEL)):
+    """Tiny mesh for CPU tests (shape product must be <= live devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

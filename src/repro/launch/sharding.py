@@ -1,0 +1,226 @@
+"""Per-tensor sharding rules: TP over 'model', FSDP over 'data', DP over pods.
+
+The rules are name+shape driven (no flax metadata): column-parallel weights
+(input->expansion) shard their output dim over 'model' and input dim over
+'data' (ZeRO-3 style); row-parallel weights (contraction->output) the
+reverse, so the FFN pair lowers to the canonical TP pattern (local matmul →
+psum).  Every rule degrades gracefully: a dim that does not divide the axis
+stays replicated (e.g. hymba's vocab 32001).
+
+KV caches shard KV-heads over 'model' when divisible, otherwise the
+*sequence* dim (split-KV decode: partial softmax + psum — flash-decoding on
+TPU collectives).  batch=1 long-context shards sequence over everything.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import AXIS_DATA, AXIS_MODEL, batch_axes
+
+COL_NAMES = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_dt", "w_gates",
+             "w_if", "w_bc"}
+
+# experts smaller than this per layer are replicated over 'model' instead of
+# expert-parallel (the dispatch-collective tradeoff; see param_spec)
+MOE_REPLICATE_BYTES = 1024 * 2**20
+
+
+def moe_experts_replicated(cfg) -> bool:
+    if cfg.ffn != "moe":
+        return False
+    per_layer = cfg.n_experts * 3 * cfg.d_model * cfg.d_ff * 2  # bf16
+    return per_layer < MOE_REPLICATE_BYTES
+ROW_NAMES = {"wo", "w_down", "w_out"}
+EMBED_NAMES = {"embed", "lm_head"}
+REPLICATED_NAMES = {"scale", "bias", "dt_bias", "if_bias", "gate_bias",
+                    "d_skip", "skip_scale", "fuse_a", "fuse_m", "meta",
+                    "router", "r_gates"}
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def _if_div(mesh, axis, dim: int):
+    """axis if dim divides its size (axis may be a tuple), else None."""
+    return axis if axis and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def param_spec(cfg: ArchConfig, mesh, path, leaf) -> P:
+    """PartitionSpec for one parameter leaf (path = tuple of str keys)."""
+    name = path[-1]
+    nd = leaf.ndim
+    lead = nd  # leading stack dims filled with None below
+    tp, fsdp = AXIS_MODEL, AXIS_DATA
+    if AXIS_MODEL not in mesh.shape:
+        tp = None
+    if AXIS_DATA not in mesh.shape:
+        fsdp = None
+
+    def pad(*tail):
+        return P(*((None,) * (nd - len(tail)) + tail))
+
+    if name in REPLICATED_NAMES or nd == 0:
+        return P()
+    if name in EMBED_NAMES:
+        v, d = leaf.shape[-2], leaf.shape[-1]
+        return pad(_if_div(mesh, tp, v), _if_div(mesh, fsdp, d))
+    is_moe_expert = (cfg.ffn == "moe" and "mlp" in path
+                     and name in {"w_gate", "w_up", "w_down"})
+    if is_moe_expert:
+        e = leaf.shape[-3]
+        # Expert placement is a size tradeoff: sharding E over 'model' (EP)
+        # makes GSPMD reshard the dispatch buffers (all-gather/all-reduce of
+        # the full token buffer per layer — measured 10 TB/device/step on
+        # olmoe).  When the per-layer expert weights are small, replicating
+        # them over 'model' keeps all MoE compute local to the batch shard
+        # and eliminates those collectives entirely.
+        expert_tp = tp if not moe_experts_replicated(cfg) else None
+        if name == "w_down":  # (E, F, D)
+            return pad(_if_div(mesh, expert_tp, e), None,
+                       _if_div(mesh, fsdp, leaf.shape[-1]))
+        return pad(_if_div(mesh, expert_tp, e),
+                   _if_div(mesh, fsdp, leaf.shape[-2]), None)
+    if name in COL_NAMES:
+        din, dout = leaf.shape[-2], leaf.shape[-1]
+        return pad(_if_div(mesh, fsdp, din), _if_div(mesh, tp, dout))
+    if name in ROW_NAMES:
+        din, dout = leaf.shape[-2], leaf.shape[-1]
+        return pad(_if_div(mesh, tp, din), _if_div(mesh, fsdp, dout))
+    if name == "conv_w":  # (K, D) depthwise
+        return pad(None, _if_div(mesh, tp, leaf.shape[-1]))
+    if name == "a_log":  # (D, N)
+        return pad(_if_div(mesh, tp, leaf.shape[-2]), None)
+    return P()
+
+
+def param_shardings(cfg: ArchConfig, mesh, params_shape):
+    """Pytree of NamedShardings matching a params (shape) pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+
+    def key_of(kp):
+        out = []
+        for k in kp:
+            if isinstance(k, jax.tree_util.DictKey):
+                out.append(str(k.key))
+        return tuple(out)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, param_spec(cfg, mesh, key_of(kp), leaf)),
+        params_shape)
+
+
+def batch_shardings(cfg: ArchConfig, mesh, batch_specs, batch_size: int):
+    """Shardings for a train/prefill batch dict."""
+    ba = batch_axes(mesh)
+    ba = _if_div(mesh, ba, batch_size)
+
+    def spec_for(name, leaf):
+        return NamedSharding(mesh, P(ba, *([None] * (leaf.ndim - 1))))
+
+    return {k: spec_for(k, v) for k, v in batch_specs.items()}
+
+
+def kv_cache_spec(cfg: ArchConfig, mesh, batch_size: int, name: str, leaf) -> P:
+    """Sharding for decode-cache leaves.
+
+    Attention K/V (L, B, S, KVH, Dh): batch over batch_axes when divisible;
+    KV heads over 'model' when divisible, else sequence over 'model'
+    (split-KV).  batch=1: sequence over (batch_axes + 'model').
+    SSM states: batch over batch_axes; widest inner dim over 'model'.
+    """
+    tp = AXIS_MODEL if AXIS_MODEL in mesh.shape else None
+    ba = _if_div(mesh, batch_axes(mesh), batch_size)
+    nd = leaf.ndim
+
+    if name in ("k", "v", "xk", "xv") and nd == 5:
+        _l, b, s, kvh, _dh = leaf.shape
+        head_tp = _if_div(mesh, tp, kvh) if kvh >= _axis_size(mesh, tp or "x") else None
+        if ba is None:
+            seq_axes = tuple(a for a in (*batch_axes(mesh), tp) if a) if head_tp is None \
+                else batch_axes(mesh)
+            seq = _if_div(mesh, seq_axes, s)
+            return P(None, None, seq, head_tp, None)
+        if head_tp is not None:
+            return P(None, ba, None, head_tp, None)
+        return P(None, ba, _if_div(mesh, tp, s), None, None)
+
+    # SSM / recurrent states: shard batch; shard the largest trailing dim on tp
+    if nd >= 3:
+        shape = leaf.shape
+        # find batch dim: xlstm states have (G, g-1, B, ...) or (G, B, ...)
+        spec = [None] * nd
+        bdim = None
+        for i, sz in enumerate(shape):
+            if sz == batch_size and i < nd - 1:
+                bdim = i
+                break
+        if bdim is not None and ba is not None:
+            spec[bdim] = ba
+        # tp on the last dim if divisible (dv / d_model / d_inner)
+        if tp and shape[-1] % _axis_size(mesh, tp) == 0 and shape[-1] >= 128:
+            spec[-1] = tp
+        return P(*spec)
+    return P()
+
+
+def cache_shardings(cfg: ArchConfig, mesh, cache_specs, batch_size: int):
+    def key_of(kp):
+        return [str(k.key) for k in kp if isinstance(k, jax.tree_util.DictKey)]
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, kv_cache_spec(cfg, mesh, batch_size, key_of(kp)[-1], leaf)),
+        cache_specs)
+
+
+def logits_sharding(cfg: ArchConfig, mesh, batch_size: int):
+    ba = _if_div(mesh, batch_axes(mesh), batch_size)
+    v = _if_div(mesh, AXIS_MODEL if AXIS_MODEL in mesh.shape else None,
+                cfg.vocab_size)
+    return NamedSharding(mesh, P(ba, v))
+
+
+def make_hints(cfg: ArchConfig, mesh, batch_size: int):
+    """Activation-sharding constraint hook, registered via
+    models.layers.set_sharding_hints inside the step builders.
+
+    Tags:
+      act         — (B, S, D) residual-stream activations: batch over
+                    ('pod','data'), rest replicated.  Pinned at every scan
+                    boundary so GSPMD cannot flip the batch dim to
+                    replicated in favour of FSDP weight shardings.
+      logits      — (..., V): batch-sharded, vocab over 'model' if divisible.
+      moe_dispatch/moe_return — (gc, E, C, D) expert buffers: gc over batch
+                    axes, experts over 'model' (lowers to all_to_all pairs).
+    """
+    ba = batch_axes(mesh)
+    tp = AXIS_MODEL if AXIS_MODEL in mesh.shape else None
+
+    def hint(x, tag):
+        if tag == "act" and x.ndim >= 2:
+            bdim = _if_div(mesh, ba, x.shape[0])
+            spec = P(bdim, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        if tag == "logits":
+            bdim = _if_div(mesh, ba, x.shape[0])
+            v = _if_div(mesh, tp, x.shape[-1])
+            spec = P(bdim, *([None] * (x.ndim - 2)), v)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        if tag in ("moe_dispatch", "moe_return") and x.ndim == 4:
+            gc, e, _c, _d = x.shape
+            etp = None if moe_experts_replicated(cfg) else _if_div(mesh, tp, e)
+            spec = P(_if_div(mesh, ba, gc), etp, None, None)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return x
+
+    return hint

@@ -1,0 +1,194 @@
+"""Distributed train/serve/prefill step builders (pjit + explicit shardings).
+
+These are the functions the dry-run lowers and the drivers execute:
+
+  build_train_step   — loss -> grad -> AdamW update, donated params/opt
+  build_prefill_step — forward + KV/state cache materialization
+  build_serve_step   — one decode token against a sharded cache (donated)
+
+Every builder returns (fn, in_shardings, out_shardings) with fn ALREADY
+jit-wrapped with those shardings, plus the abstract input trees, so callers
+(dryrun, trainer, server) can .lower(...).compile() or call directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs import specs as spec_mod
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.models.model import Model, make_model
+from repro.models import layers as layers_mod
+from repro.train import optimizer as opt_mod
+
+
+class StepBundle(NamedTuple):
+    fn: object            # jit'd function
+    abstract_args: tuple  # ShapeDtypeStructs to .lower(*abstract_args)
+    in_shardings: tuple
+    out_shardings: object
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train_step(model: Model, mesh, shape: ShapeSpec, *,
+                     batch: int | None = None, lr: float = 3e-4,
+                     warmup: int = 100, total_steps: int = 10000,
+                     microbatches: int = 1) -> StepBundle:
+    """Training step with gradient accumulation over ``microbatches``.
+
+    Microbatch slicing uses the shard-friendly minor-axis layout (reshape to
+    (B/A, A, ...) and scan the minor axis) so every micro-slice keeps the
+    full batch sharding — per-device live activations scale by 1/A, which is
+    what lets the 72B train cells fit HBM.
+    """
+    cfg = model.cfg
+    b = batch if batch is not None else shape.global_batch
+    layers_mod.set_sharding_hints(shd.make_hints(cfg, mesh, b))
+    assert b % microbatches == 0
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(cfg, mesh, params_shape)
+    opt_shape = jax.eval_shape(opt_mod.adamw_init, params_shape)
+    o_shard = opt_mod.OptState(
+        step=_replicated(mesh),
+        master=jax.tree.map(lambda s: s, p_shard),
+        m=jax.tree.map(lambda s: s, p_shard),
+        v=jax.tree.map(lambda s: s, p_shard),
+    )
+    batch_specs = spec_mod.train_batch_specs(cfg, shape, b)
+    b_shard = shd.batch_shardings(cfg, mesh, batch_specs, b)
+
+    lr_fn = opt_mod.cosine_schedule(lr, warmup, total_steps)
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch_in):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch_in)
+        else:
+            a = microbatches
+
+            def slices(t):
+                return jnp.moveaxis(
+                    t.reshape(t.shape[0] // a, a, *t.shape[1:]), 1, 0)
+
+            micro = {k: slices(v) for k, v in batch_in.items()}
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(jnp.float32) / a, g_acc, g)
+                m_acc = jax.tree.map(lambda x, y: x + y / a, m_acc, m)
+                return (g_acc, l_acc + l / a, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {k: jnp.float32(0.0)
+                  for k in ("lb_loss", "z_loss", "drop_frac", "ce_loss")}
+            (grads, loss, metrics), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0.0), m0), micro)
+        params, opt_state, stats = opt_mod.adamw_update(
+            grads, opt_state, params, lr_fn=lr_fn)
+        metrics = dict(metrics, loss=loss, **stats)
+        return params, opt_state, metrics
+
+    metrics_shape = {
+        k: _replicated(mesh)
+        for k in ("lb_loss", "z_loss", "drop_frac", "ce_loss", "loss",
+                  "grad_norm", "lr")}
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shape),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(fn, (params_shape, opt_shape, batch_specs),
+                      (p_shard, o_shard, b_shard),
+                      (p_shard, o_shard, metrics_shape))
+
+
+def build_prefill_step(model: Model, mesh, shape: ShapeSpec, *,
+                       batch: int | None = None) -> StepBundle:
+    cfg = model.cfg
+    b = batch if batch is not None else shape.global_batch
+    layers_mod.set_sharding_hints(shd.make_hints(cfg, mesh, b))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(cfg, mesh, params_shape)
+    batch_specs = spec_mod.prefill_batch_specs(cfg, shape, b)
+    b_shard = shd.batch_shardings(cfg, mesh, batch_specs, b)
+
+    out_shape = jax.eval_shape(model.prefill, params_shape, batch_specs)
+    logits_sh = shd.logits_sharding(cfg, mesh, b)
+    cache_sh = shd.cache_shardings(cfg, mesh, out_shape[1], b)
+
+    fn = jax.jit(model.prefill,
+                 in_shardings=(p_shard, b_shard),
+                 out_shardings=(logits_sh, cache_sh))
+    return StepBundle(fn, (params_shape, batch_specs),
+                      (p_shard, b_shard), (logits_sh, cache_sh))
+
+
+def build_serve_step(model: Model, mesh, shape: ShapeSpec, *,
+                     batch: int | None = None, greedy: bool = False) -> StepBundle:
+    cfg = model.cfg
+    b = batch if batch is not None else shape.global_batch
+    layers_mod.set_sharding_hints(shd.make_hints(cfg, mesh, b))
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(cfg, mesh, params_shape)
+    tokens_spec, cache_spec, len_spec = spec_mod.decode_specs(model, shape, b)
+    ba = batch_axes(mesh)
+    tok_sh = NamedSharding(
+        mesh, P(ba if b % max(1, shd._axis_size(mesh, ba)) == 0 else None, None))
+    cache_sh = shd.cache_shardings(cfg, mesh, cache_spec, b)
+    logits_sh = shd.logits_sharding(cfg, mesh, b)
+
+    def serve_step(params, tokens, cache, cur_len):
+        logits, cache = model.decode_step(params, tokens, cache, cur_len)
+        if greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        return logits, cache
+
+    out0 = tok_sh if greedy else logits_sh
+    if greedy:
+        out0 = NamedSharding(mesh, P(tok_sh.spec[0]))
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, tok_sh, cache_sh, _replicated(mesh)),
+                 out_shardings=(out0, cache_sh),
+                 donate_argnums=(2,))
+    return StepBundle(fn, (params_shape, tokens_spec, cache_spec, len_spec),
+                      (p_shard, tok_sh, cache_sh, _replicated(mesh)),
+                      (out0, cache_sh))
+
+
+def default_microbatches(cfg: ArchConfig) -> int:
+    n = cfg.param_count()
+    if n > 2e10:
+        return 16
+    if n > 5e9:
+        return 8
+    return 4
+
+
+def bundle_for(arch_cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+               batch: int | None = None,
+               microbatches: int | None = None) -> StepBundle:
+    """Dispatch on the shape kind (train/prefill/decode)."""
+    model = make_model(arch_cfg)
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else default_microbatches(arch_cfg)
+        return build_train_step(model, mesh, shape, batch=batch, microbatches=mb)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, mesh, shape, batch=batch)
+    return build_serve_step(model, mesh, shape, batch=batch)

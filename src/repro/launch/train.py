@@ -1,0 +1,67 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Smoke mode runs a reduced config on the local device; production mode
+expects a real TPU slice (jax.distributed.initialize + the production
+mesh).  Checkpoint/restart: rerunning with the same --ckpt-dir resumes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeSpec
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.steps import build_train_step
+from repro.models.model import make_model
+from repro.data.synthetic import SyntheticLM
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny mesh (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = make_model(cfg)
+    if args.smoke:
+        mesh = make_debug_mesh((1, 1))
+        shape = ShapeSpec("smoke", args.seq_len or 128,
+                          args.global_batch or 4, "train")
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        base = SHAPES["train_4k"]
+        shape = ShapeSpec("train", args.seq_len or base.seq_len,
+                          args.global_batch or base.global_batch, "train")
+
+    bundle = build_train_step(model, mesh, shape, lr=args.lr,
+                              microbatches=args.microbatches,
+                              total_steps=args.steps)
+    data = SyntheticLM(cfg.vocab_size, shape.seq_len, shape.global_batch,
+                       n_hosts=1)
+    trainer = Trainer(model, bundle, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every)
+    mode = trainer.init_state(resume=True)
+    print(f"[train] arch={cfg.name} params={cfg.param_count():,} "
+          f"state={mode} start_step={trainer.step} mesh={dict(mesh.shape)}")
+    with mesh:
+        trainer.run(data, args.steps)
+    print("[train] done; final loss:",
+          trainer.history[-1]["loss"] if trainer.history else None)
+
+
+if __name__ == "__main__":
+    main()

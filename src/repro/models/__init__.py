@@ -1,0 +1,10 @@
+"""Raw-JAX model zoo (no flax): every assigned architecture family.
+
+Modules:
+    layers      — norms, embeddings, RoPE/M-RoPE, FFN variants
+    attention   — chunked (online-softmax) GQA attention, KV-cache decode
+    ssm         — Mamba selective scan, xLSTM (mLSTM/sLSTM)
+    moe         — top-k routed experts with capacity-factor dispatch
+    transformer — block assembly, scan-over-layers, encoder-decoder
+    model       — the public Model API (init / loss / prefill / decode_step)
+"""

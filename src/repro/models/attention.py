@@ -1,0 +1,174 @@
+"""GQA attention: chunked online-softmax for train/prefill, KV-cache decode.
+
+Training/prefill attention never materializes the (S, S) score matrix: it
+scans over KV chunks carrying the flash-attention (m, l, o) running triple,
+so activation memory is O(S * chunk) — the pure-JAX rendering of
+FlashAttention, which XLA maps well onto TPU (the Pallas splash kernel is a
+drop-in upgrade on real hardware; on this CPU container the scan version is
+the compile target and the roofline is derived from it).
+
+Sliding windows are *dynamic* (a per-layer scalar carried through the layer
+scan), so heterogeneous local/global stacks (gemma3's 5:1, hymba's 3-global)
+share one set of scanned weights.  window <= 0 means global.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+              qk_norm: bool = False, bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(d_head)
+        p["k_norm"] = rmsnorm_init(d_head)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv_heads, d_head, positions, rope_kind, theta):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, n_heads, d_head)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(b, s, n_kv_heads, d_head)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(b, s, n_kv_heads, d_head)
+    if "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if rope_kind == "rope":
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    elif rope_kind == "mrope":
+        q = apply_mrope(q, positions, theta)
+        k = apply_mrope(k, positions, theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool = True, window=None,
+                      softcap: float = 0.0, chunk: int = 512,
+                      q_offset: int = 0):
+    """q (B,Sq,H,Dh); k,v (B,Skv,KVH,Dh).  Scan over *query* chunks.
+
+    Each chunk attends over the full KV with a fused masked softmax, so the
+    live score matrix is (B, H, chunk, Skv) and — critically for training —
+    the attention output leaves the scan as stacked ys (not a carry), so
+    scan-backward does not checkpoint an O(nchunks × B·H·S·Dh) carry chain
+    the way an online-softmax (m, l, o) carry formulation does.  The body is
+    jax.checkpoint'ed: backward recomputes scores per chunk instead of
+    storing them (flash-attention's memory behaviour, achieved with plain
+    scan + remat).
+
+    window: None/scalar (<=0 global) — dynamic sliding window; key at
+    absolute pk visible to query at pq iff pq - window < pk <= pq.
+    q_offset: absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = dh ** -0.5
+    nchunks = (sq + chunk - 1) // chunk
+    pad = nchunks * chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = q * jnp.asarray(scale, q.dtype)
+    qc = jnp.moveaxis(qf.reshape(b, nchunks, chunk, h, dh), 1, 0)
+    k_pos = jnp.arange(skv)
+
+    def body(_, xs):
+        qj, cidx = xs                                   # qj (B, chunk, H, Dh)
+        q_pos = q_offset + cidx * chunk + jnp.arange(chunk)
+        qg = qj.reshape(b, chunk, kvh, rep, dh)
+        s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+        s_ = s_.reshape(b, h, chunk, skv)
+        if softcap > 0.0:
+            s_ = jnp.tanh(s_ / softcap) * softcap
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            w = jnp.asarray(window)
+            mask &= jnp.where(w > 0, q_pos[:, None] - k_pos[None, :] < w, True)
+        s_ = jnp.where(mask[None, None], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        pg = p.astype(v.dtype).reshape(b, kvh, rep, chunk, skv)
+        o = jnp.einsum("bgrqk,bkgd->bgrqd", pg, v)
+        return None, o.reshape(b, h, chunk, dh)
+
+    _, os_ = jax.lax.scan(jax.checkpoint(body), None,
+                          (qc, jnp.arange(nchunks)))
+    out = jnp.moveaxis(os_, 0, 2).reshape(b, h, nchunks * chunk, dh)[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, Dh)
+
+
+def attn_apply(params, x, positions, *, n_heads, n_kv_heads, d_head,
+               rope_kind="rope", theta=1e4, causal=True, window=None,
+               softcap=0.0, chunk=512):
+    """Full attention sublayer for train/prefill. Returns (out, (k, v))."""
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, rope_kind, theta)
+    ctx = chunked_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, chunk=chunk)
+    b, s, _, _ = ctx.shape
+    out = jnp.einsum("bsh,hd->bsd", ctx.reshape(b, s, n_heads * d_head), params["wo"])
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def attn_decode(params, x, cache_k, cache_v, cur_len, *, n_heads, n_kv_heads,
+                d_head, rope_kind="rope", theta=1e4, window=None, softcap=0.0):
+    """x (B,1,D); cache_k/v (B,Smax,KVH,Dh) with cur_len valid entries.
+
+    Writes the new KV at cur_len, attends over [0, cur_len].  Returns
+    (out (B,1,D), cache_k, cache_v).  The cache may be sequence-sharded:
+    the softmax reductions over Smax become psums under pjit (split-KV /
+    flash-decoding on TPU collectives).
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    if rope_kind == "mrope":
+        pos = jnp.broadcast_to(jnp.full((b, 3, 1), cur_len, jnp.int32), (b, 3, 1))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head, pos,
+                           rope_kind, theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0))
+
+    smax, kvh = cache_k.shape[1], cache_k.shape[2]
+    rep = n_heads // kvh
+    scale = d_head ** -0.5
+    k_pos = jnp.arange(smax)
+    qf = (q * jnp.asarray(scale, q.dtype))[:, 0]
+    qg = qf.reshape(b, kvh, rep, d_head)
+    s_ = jnp.einsum("bgrd,bkgd->bgrk", qg, cache_k.astype(q.dtype)).astype(jnp.float32)
+    if softcap > 0.0:
+        s_ = jnp.tanh(s_ / softcap) * softcap
+    mask = k_pos <= cur_len
+    if window is not None:
+        w = jnp.asarray(window)
+        mask &= jnp.where(w > 0, cur_len - k_pos < w, True)
+    s_ = jnp.where(mask[None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    ctx = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), cache_v.astype(q.dtype))
+    out = jnp.einsum("bh,hd->bd", ctx.reshape(b, n_heads * d_head), params["wo"])
+    return out[:, None, :], cache_k, cache_v

@@ -1,0 +1,287 @@
+"""Shared layers: norms, embeddings, rotary variants, FFN variants.
+
+Conventions (followed by every module in the zoo):
+  * params are nested dicts of jnp arrays; init fns take an explicit PRNG key
+  * compute dtype is bf16, accumulation/normalization in f32
+  * every init is shape-deterministic so jax.eval_shape can abstractly
+    instantiate the 72B configs for the dry-run without allocation
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# activation-sharding hints
+#
+# Under pjit, sharding propagation from FSDP-sharded *weights* can win the
+# fight against batch-sharded *inputs*, replicating the batch dim of every
+# activation (observed: 40 GiB/device temp on a 1B model).  The launcher
+# registers a hint fn (launch/sharding.make_hints) and the model pins its
+# activations at block boundaries; outside pjit the hint is identity.
+# ---------------------------------------------------------------------------
+
+_HINT = {"fn": None}
+
+
+def set_sharding_hints(fn) -> None:
+    """fn(x, tag) -> x with a sharding constraint, or None to disable."""
+    _HINT["fn"] = fn
+
+
+def hint(x, tag: str):
+    fn = _HINT["fn"]
+    return x if fn is None else fn(x, tag)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=PARAM_DTYPE):
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# Fused-norm custom VJPs.
+#
+# Two failure modes of naive norms at scale (both observed on the 72B
+# dry-run): (a) a leading x.astype(f32) lets XLA hoist the convert through
+# the layer scan's residual stack, storing a SECOND f32 copy of every
+# layer's input (+160 GiB/device); (b) f32 cotangents escaping the norm
+# backward force the saved stack itself to f32.  The custom VJPs keep all
+# (B,S,D)-sized values in the activation dtype and reduce statistics in
+# f32 — the same contract as fused LayerNorm kernels in production stacks.
+
+
+def _row_dot(a, b):
+    return jnp.einsum("...d,...d->...", a, b,
+                      preferred_element_type=jnp.float32)[..., None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_core(x, scale, eps):
+    ms = _row_dot(x, x) / x.shape[-1]
+    inv = jax.lax.rsqrt(ms + eps)
+    return x * inv.astype(x.dtype) * scale.astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    ms = _row_dot(x, x) / x.shape[-1]
+    inv = jax.lax.rsqrt(ms + eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    # barrier: keep the saved residual bf16 on CPU lowerings (see model.py
+    # _guard_entry) — backward dots would otherwise hoist an f32 copy.
+    return y, jax.lax.optimization_barrier((x, scale, inv))
+
+
+def _rms_bwd(eps, res, g):
+    x, scale, inv = res
+    d = x.shape[-1]
+    sc = scale.astype(x.dtype)
+    inv_x = inv.astype(x.dtype)
+    gs = g * sc                                        # bf16
+    # d(inv)/dx_j = -inv^3 x_j / d ;  gx = gs*inv - x * inv^3/d * <gs, x>
+    gsx = _row_dot(gs, x)                              # f32 (..., 1)
+    coef = (gsx * inv * inv * inv / d)
+    gx = gs * inv_x - x * coef.astype(x.dtype)
+    axes = tuple(range(x.ndim - 1))
+    gscale = jnp.sum((g * x * inv_x).astype(jnp.float32), axis=axes)
+    return gx, gscale.astype(scale.dtype)
+
+
+_rms_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    return _rms_core(x, params["scale"], eps)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ln_core(x, scale, bias, eps):
+    y, _, _ = _ln_stats(x, eps)
+    return y * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def _ln_stats(x, eps):
+    d = x.shape[-1]
+    mu = jnp.sum(x, axis=-1, keepdims=True, dtype=jnp.float32) / d
+    ex2 = _row_dot(x, x) / d
+    var = jnp.maximum(ex2 - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    xc = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return xc, mu, inv
+
+
+def _ln_fwd(x, scale, bias, eps):
+    xc, mu, inv = _ln_stats(x, eps)
+    y = xc * scale.astype(x.dtype) + bias.astype(x.dtype)
+    return y, jax.lax.optimization_barrier((xc, scale, inv))
+
+
+def _ln_bwd(eps, res, g):
+    xc, scale, inv = res
+    d = xc.shape[-1]
+    gs = g * scale.astype(xc.dtype)
+    m1 = jnp.sum(gs, axis=-1, keepdims=True, dtype=jnp.float32) / d
+    m2 = _row_dot(gs, xc) / d
+    gx = (gs - m1.astype(xc.dtype) - xc * m2.astype(xc.dtype)) * inv.astype(xc.dtype)
+    axes = tuple(range(xc.ndim - 1))
+    gscale = jnp.sum((g * xc).astype(jnp.float32), axis=axes)
+    gbias = jnp.sum(g.astype(jnp.float32), axis=axes)
+    return gx, gscale, gbias
+
+
+_ln_core.defvjp(_ln_fwd, _ln_bwd)
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    return _ln_core(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., S, H, Dh); positions (..., S) int32.  Pairwise (even, odd) rotation."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(2, 3, 3)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: head dim split into (t, h, w) sections.
+
+    positions (..., 3, S) — one position stream per section; ``sections``
+    are relative weights over Dh/2 frequency slots (16/24/24 of 64 for
+    Dh=128, matching mrope_section=[16,24,24]).
+    """
+    d_half = x.shape[-1] // 2
+    total = sum(sections)
+    bounds, acc = [], 0
+    for s in sections[:-1]:
+        acc += (d_half * s) // total
+        bounds.append(acc)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (Dh/2,)
+    slot = jnp.arange(d_half)
+    section_id = jnp.zeros((d_half,), jnp.int32)
+    for b in bounds:
+        section_id = section_id + (slot >= b).astype(jnp.int32)
+    # pick the position stream per frequency slot
+    pos = _mrope_pos(positions, section_id)                      # (..., S, Dh/2)
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def _mrope_pos(positions: jnp.ndarray, section_id: jnp.ndarray) -> jnp.ndarray:
+    """positions (..., 3, S), section_id (Dh/2,) -> (..., S, Dh/2) f32."""
+    p = jnp.moveaxis(positions, -2, -1).astype(jnp.float32)      # (..., S, 3)
+    return jnp.take(p, section_id, axis=-1)                      # (..., S, Dh/2)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff),
+        "w_up": dense_init(k2, d, d_ff),
+        "w_down": dense_init(k3, d_ff, d),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_init(key, d: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, d, d_ff), "w_down": dense_init(k2, d_ff, d)}
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_tokens(embedding: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(embedding, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def chunked_softmax_xent(logits_fn, h: jnp.ndarray, labels: jnp.ndarray,
+                         chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy over the vocab without materializing (B, S, V) at once.
+
+    logits_fn(h_chunk (B, c, D)) -> (B, c, V) f32; scans over sequence chunks.
+    Returns mean NLL over all tokens.
+    """
+    b, s, _ = h.shape
+    n = s // chunk
+
+    def step(carry, xs):
+        hc, yc = xs
+        logits = logits_fn(hc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    hs = jnp.moveaxis(h[:, : n * chunk].reshape(b, n, chunk, -1), 1, 0)
+    ys = jnp.moveaxis(labels[:, : n * chunk].reshape(b, n, chunk), 1, 0)
+    # checkpoint: backward recomputes the (B, chunk, V) logits per chunk
+    # instead of storing all of them (the vocab dim is the memory hog).
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.float32(0.0), (hs, ys))
+    rem = s - n * chunk
+    if rem:
+        logits = logits_fn(h[:, n * chunk:]).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, n * chunk:, None], axis=-1)[..., 0]
+        total = total + jnp.sum(logz - gold)
+    return total / (b * s)

@@ -1,0 +1,505 @@
+"""Public Model API: init / loss / prefill / decode_step per architecture.
+
+``make_model(cfg)`` returns a Model with pure functions:
+
+    init(key)                          -> params (stacked per-layer leaves)
+    loss(params, batch)                -> (scalar, metrics)      [train_4k]
+    prefill(params, batch)             -> (last_logits, cache)   [prefill_32k]
+    init_cache(batch, max_len)         -> zeroed cache pytree
+    decode_step(params, tokens, cache, cur_len) -> (logits, cache)  [decode_*]
+
+Batches are dicts of arrays; ``input_specs`` in configs/specs.py builds the
+matching ShapeDtypeStructs for abstract lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    chunked_softmax_xent,
+    embed_init,
+    embed_tokens,
+    hint,
+)
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def make_model(cfg: ArchConfig) -> Model:
+    if cfg.enc_dec:
+        return _make_encdec(cfg)
+    if cfg.mixer == "xlstm":
+        return _make_xlstm(cfg)
+    return _make_decoder(cfg)  # attn + hymba
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _aux0():
+    z = jnp.float32(0.0)
+    return {"lb_loss": z, "z_loss": z, "drop_frac": z}
+
+
+def _head_init(cfg, key):
+    p = {"embed": embed_init(key, cfg.vocab_size, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = embed_init(k2, cfg.vocab_size, cfg.d_model)
+    p["out_norm"] = tfm._norm_init(cfg)
+    return p
+
+
+def _logits_fn(cfg, params):
+    w = params["head"]["embed"] if cfg.tie_embeddings else params["head"]["lm_head"]
+
+    def f(hc):
+        return hint(jnp.einsum("...d,vd->...v", hc, w).astype(jnp.float32),
+                    "logits")
+
+    return f
+
+
+def _embed(cfg, params, tokens):
+    h = embed_tokens(params["head"]["embed"], tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, COMPUTE_DTYPE)
+    return hint(h, "act")
+
+
+def _final(cfg, params, h):
+    return tfm._norm(cfg, params["head"]["out_norm"], h)
+
+
+def _moe_metrics(cfg, aux, loss):
+    m = {k: v / cfg.n_layers for k, v in aux.items()}
+    total = loss + 0.01 * m["lb_loss"] + 0.001 * m["z_loss"]
+    m["ce_loss"] = loss
+    return total, m
+
+
+def _pin_carry(cfg, body):
+    """Re-pin the residual-stream carry OUTSIDE the remat wrapper: the scan's
+    saved-residual stack takes its sharding from ops visible at scan level,
+    and constraints buried inside jax.checkpoint don't reach it (observed:
+    a batch-replicated f32[L,B,S,D/16] residual stack, 16x oversized)."""
+    def wrapped(carry, xs):
+        (hh, aux), ys = body(carry, xs)
+        return (hint(hh, "act"), aux), ys
+    return wrapped
+
+
+def _guard_entry(body):
+    """optimization_barrier on the carry at body entry.
+
+    The XLA CPU backend upcasts bf16 dot operands to f32 and then hoists
+    convert(dynamic-slice(residual_stack)) into a full f32 copy of the
+    per-layer residual stack (2x its memory — a CPU-lowering artifact; TPU
+    consumes bf16 dots natively).  A barrier between the saved stack and
+    its consumers blocks the hoist without changing semantics.
+    """
+    def wrapped(carry, xs):
+        hh, aux = carry
+        hh = jax.lax.optimization_barrier(hh)
+        return body((hh, aux), xs)
+    return wrapped
+
+
+def _maybe_remat(cfg, body):
+    """Activation-checkpoint a scan body per cfg.remat."""
+    if cfg.remat == "full":
+        return jax.checkpoint(_guard_entry(body))
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            _guard_entry(body),
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return body
+
+
+# ---------------------------------------------------------------------------
+# decoder-only stacks (attn blocks and hymba blocks)
+# ---------------------------------------------------------------------------
+
+def _make_decoder(cfg: ArchConfig) -> Model:
+    is_hymba = cfg.mixer == "hymba"
+    block_init = tfm.hymba_block_init if is_hymba else tfm.attn_block_init
+    block_apply = tfm.hymba_block_apply if is_hymba else tfm.attn_block_apply
+
+    def init(key):
+        kl, kh, km = jax.random.split(key, 3)
+        keys = jax.random.split(kl, cfg.n_layers)
+        blocks = jax.vmap(lambda k: block_init(k, cfg))(keys)
+        params = {"blocks": blocks, "head": _head_init(cfg, kh)}
+        if cfg.meta_tokens:
+            params["meta"] = (jax.random.normal(
+                km, (cfg.meta_tokens, cfg.d_model), jnp.float32) * 0.02
+            ).astype(COMPUTE_DTYPE)
+        return params
+
+    windows = jnp.asarray(dataclasses.replace(cfg).windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.thetas(), jnp.float32)
+
+    def _positions(batch, s, b):
+        if cfg.rope_kind == "mrope":
+            if "positions" in batch:
+                return batch["positions"]
+            p = jnp.broadcast_to(jnp.arange(s)[None, None, :], (b, 3, s))
+            return p
+        return jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = _embed(cfg, params, tokens)
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(params["meta"][None], (b, cfg.meta_tokens, cfg.d_model))
+            h = jnp.concatenate([meta, h], axis=1)
+            s = s + cfg.meta_tokens
+        positions = _positions(batch, s, b)
+
+        def body(carry, xs):
+            hh, aux = carry
+            p_l, w_l, t_l = xs
+            hh, aux = block_apply(cfg, p_l, hh, positions, w_l, t_l, aux)
+            return (hint(hh, "act"), aux), None
+
+        (h, aux), _ = jax.lax.scan(_pin_carry(cfg, _maybe_remat(cfg, body)),
+                                   (h, _aux0()),
+                                   (params["blocks"], windows, thetas))
+        if cfg.meta_tokens:
+            h = h[:, cfg.meta_tokens:]
+        return _final(cfg, params, h), aux
+
+    def loss(params, batch):
+        h, aux = forward(params, batch)
+        ce = chunked_softmax_xent(_logits_fn(cfg, params), h, batch["labels"],
+                                  cfg.loss_chunk)
+        return _moe_metrics(cfg, aux, ce)
+
+    def prefill(params, batch):
+        """Returns (last-position logits, cache at cur_len = S (+meta))."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = _embed(cfg, params, tokens)
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(params["meta"][None], (b, cfg.meta_tokens, cfg.d_model))
+            h = jnp.concatenate([meta, h], axis=1)
+            s = s + cfg.meta_tokens
+        positions = _positions(batch, s, b)
+
+        def body(carry, xs):
+            hh, aux = carry
+            p_l, w_l, t_l = xs
+            x = tfm._norm(cfg, p_l["ln1"], hh)
+            from repro.models import attention as attn_mod
+            a_out, (k, v) = attn_mod.attn_apply(
+                p_l["attn"], x, positions, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+                rope_kind=cfg.rope_kind, theta=t_l, window=w_l,
+                softcap=cfg.softcap, chunk=cfg.attn_chunk)
+            if is_hymba:
+                from repro.models import ssm as ssm_mod
+                m_out, mstate = ssm_mod.mamba_apply(
+                    p_l["mamba"], x, d_state=cfg.ssm_state,
+                    chunk=cfg.ssm_chunk, return_state=True)
+                hh = hh + (p_l["fuse_a"].astype(COMPUTE_DTYPE) * a_out
+                           + p_l["fuse_m"].astype(COMPUTE_DTYPE) * m_out)
+                hh = hh + tfm.swiglu(p_l["mlp"], tfm._norm(cfg, p_l["ln2"], hh))
+                return (hint(hh, "act"), aux), (k, v, mstate)
+            if cfg.parallel_block:
+                f_out, aux = tfm._ffn_apply(cfg, p_l, x, aux)
+                hh = hh + a_out + f_out
+            else:
+                hh = hh + a_out
+                if cfg.ffn != "none":
+                    f_out, aux = tfm._ffn_apply(
+                        cfg, p_l, tfm._norm(cfg, p_l["ln2"], hh), aux)
+                    hh = hh + f_out
+            return (hint(hh, "act"), aux), (k, v)
+
+        (h, _aux), ys = jax.lax.scan(body, (h, _aux0()),
+                                     (params["blocks"], windows, thetas))
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        if is_hymba:
+            k, v, mstate = ys
+            cache = {"k": k, "v": v, "mamba": mstate}
+        else:
+            cache = {"k": ys[0], "v": ys[1]}
+        return logits, cache
+
+    def init_cache(batch_size: int, max_len: int):
+        l, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        total = max_len + cfg.meta_tokens
+        cache = {
+            "k": jnp.zeros((l, batch_size, total, kvh, dh), COMPUTE_DTYPE),
+            "v": jnp.zeros((l, batch_size, total, kvh, dh), COMPUTE_DTYPE),
+        }
+        if is_hymba:
+            cache["mamba"] = {
+                "h": jnp.zeros((l, batch_size, cfg.d_model, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((l, batch_size, 3, cfg.d_model), COMPUTE_DTYPE),
+            }
+        return cache
+
+    def decode_step(params, tokens, cache, cur_len):
+        """tokens (B,1); cur_len counts real tokens (meta offset added here)."""
+        b = tokens.shape[0]
+        h = _embed(cfg, params, tokens)
+        pos = cur_len + cfg.meta_tokens
+
+        if is_hymba:
+            def body(hh, xs):
+                p_l, ck, cv, mst, w_l, t_l = xs
+                hh, ck, cv, mst = tfm.hymba_block_decode(
+                    cfg, p_l, hh, ck, cv, mst, pos, w_l, t_l)
+                return hh, (ck, cv, mst)
+
+            h, (ck, cv, mst) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"],
+                          cache["mamba"], windows, thetas))
+            cache = {"k": ck, "v": cv, "mamba": mst}
+        else:
+            def body(hh, xs):
+                p_l, ck, cv, w_l, t_l = xs
+                hh, ck, cv = tfm.attn_block_decode(cfg, p_l, hh, ck, cv, pos, w_l, t_l)
+                return hh, (ck, cv)
+
+            h, (ck, cv) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"], windows, thetas))
+            cache = {"k": ck, "v": cv}
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        return logits, cache
+
+    return Model(cfg, init, loss, prefill, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# xlstm (scan over super-blocks of 7 mLSTM + 1 sLSTM)
+# ---------------------------------------------------------------------------
+
+def _make_xlstm(cfg: ArchConfig) -> Model:
+    g = cfg.scan_group
+    n_groups = cfg.n_layers // g
+    assert n_groups * g == cfg.n_layers
+
+    def init(key):
+        kl, kh = jax.random.split(key)
+        keys = jax.random.split(kl, n_groups)
+        blocks = jax.vmap(lambda k: tfm.xlstm_group_init(k, cfg))(keys)
+        return {"blocks": blocks, "head": _head_init(cfg, kh)}
+
+    def forward(params, batch):
+        h = _embed(cfg, params, batch["tokens"])
+
+        def body(carry, p_g):
+            hh, aux = carry
+            hh, aux = tfm.xlstm_group_apply(cfg, p_g, hh, aux)
+            return (hint(hh, "act"), aux), None
+
+        (h, aux), _ = jax.lax.scan(_pin_carry(cfg, _maybe_remat(cfg, body)),
+                                   (h, _aux0()), params["blocks"])
+        return _final(cfg, params, h), aux
+
+    def loss(params, batch):
+        h, aux = forward(params, batch)
+        ce = chunked_softmax_xent(_logits_fn(cfg, params), h, batch["labels"],
+                                  cfg.loss_chunk)
+        return _moe_metrics(cfg, aux, ce)
+
+    def init_cache(batch_size: int, max_len: int):
+        d = cfg.d_model
+        di = int(d * cfg.mlstm_proj_factor)
+        dh = di // cfg.n_heads
+        b = batch_size
+        return {
+            "mlstm": {
+                "c": jnp.zeros((n_groups, g - 1, b, cfg.n_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((n_groups, g - 1, b, cfg.n_heads, dh), jnp.float32),
+                "m": jnp.zeros((n_groups, g - 1, b, cfg.n_heads), jnp.float32),
+                "conv": jnp.zeros((n_groups, g - 1, b, 3, di), COMPUTE_DTYPE),
+            },
+            "slstm": {
+                "c": jnp.zeros((n_groups, b, d), jnp.float32),
+                "n": jnp.zeros((n_groups, b, d), jnp.float32) + 1e-6,
+                "h": jnp.zeros((n_groups, b, d), jnp.float32),
+                "m": jnp.zeros((n_groups, b, d), jnp.float32),
+            },
+        }
+
+    def prefill(params, batch):
+        """Recurrent-state prefill: run the chunked forms, harvest states."""
+        h = _embed(cfg, params, batch["tokens"])
+
+        def body(carry, p_g):
+            hh, aux = carry
+            from repro.models import ssm as ssm_mod
+
+            def one_mlstm(hh, pl):
+                y, st = ssm_mod.mlstm_apply(
+                    pl["cell"], tfm._norm(cfg, pl["ln"], hh),
+                    n_heads=cfg.n_heads, chunk=cfg.ssm_chunk, return_state=True)
+                return hh + y, st
+
+            hh, mst = jax.lax.scan(one_mlstm, hh, p_g["mlstm"])
+            sl = p_g["slstm"]
+            y, sst = ssm_mod.slstm_apply(sl["cell"], tfm._norm(cfg, sl["ln"], hh),
+                                         n_heads=cfg.n_heads)
+            hh = hh + y
+            hh = hh + tfm.gelu_mlp(sl["mlp"], tfm._norm(cfg, sl["ln_ffn"], hh))
+            return (hh, aux), {"mlstm": mst, "slstm": sst}
+
+        (h, _aux), states = jax.lax.scan(body, (h, _aux0()), params["blocks"])
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        return logits, states
+
+    def decode_step(params, tokens, cache, cur_len):
+        h = _embed(cfg, params, tokens)
+
+        def body(hh, xs):
+            p_g, st = xs
+            hh, st = tfm.xlstm_group_decode(cfg, p_g, hh, st)
+            return hh, st
+
+        h, cache = jax.lax.scan(body, h, (params["blocks"], cache))
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        return logits, cache
+
+    return Model(cfg, init, loss, prefill, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+def _make_encdec(cfg: ArchConfig) -> Model:
+    def init(key):
+        ke, kd, kh = jax.random.split(key, 3)
+        enc = jax.vmap(lambda k: tfm.enc_block_init(k, cfg))(
+            jax.random.split(ke, cfg.n_enc_layers))
+        dec = jax.vmap(lambda k: tfm.dec_block_init(k, cfg))(
+            jax.random.split(kd, cfg.n_layers))
+        return {
+            "enc": enc,
+            "enc_norm": tfm._norm_init(cfg),
+            "dec": dec,
+            "head": _head_init(cfg, kh),
+        }
+
+    def encode(params, frames):
+        b, se, _ = frames.shape
+        h = frames.astype(COMPUTE_DTYPE) + tfm.sinusoid_positions(se, cfg.d_model)
+        positions = jnp.broadcast_to(jnp.arange(se)[None, :], (b, se))
+
+        def body(hh, p_l):
+            return hint(tfm.enc_block_apply(cfg, p_l, hh, positions), "act"), None
+
+        h, _ = jax.lax.scan(body, h, params["enc"])
+        return tfm._norm(cfg, params["enc_norm"], h)
+
+    def _dec_embed(params, tokens, offset=0):
+        h = _embed(cfg, params, tokens)
+        return h + tfm.sinusoid_positions(tokens.shape[1], cfg.d_model, offset)
+
+    def forward(params, batch):
+        enc_h = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = _dec_embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(carry, p_l):
+            hh, aux = carry
+            ek, ev = tfm.cross_kv(cfg, p_l["cross_attn"], enc_h)
+            hh, aux = tfm.dec_block_apply(cfg, p_l, hh, positions, ek, ev, aux)
+            return (hint(hh, "act"), aux), None
+
+        (h, aux), _ = jax.lax.scan(_pin_carry(cfg, _maybe_remat(cfg, body)),
+                                   (h, _aux0()), params["dec"])
+        return _final(cfg, params, h), aux
+
+    def loss(params, batch):
+        h, aux = forward(params, batch)
+        ce = chunked_softmax_xent(_logits_fn(cfg, params), h, batch["labels"],
+                                  cfg.loss_chunk)
+        return _moe_metrics(cfg, aux, ce)
+
+    def init_cache(batch_size: int, max_len: int):
+        l, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((l, batch_size, max_len, kvh, dh), COMPUTE_DTYPE),
+            "v": jnp.zeros((l, batch_size, max_len, kvh, dh), COMPUTE_DTYPE),
+            "xk": jnp.zeros((l, batch_size, cfg.enc_len, kvh, dh), COMPUTE_DTYPE),
+            "xv": jnp.zeros((l, batch_size, cfg.enc_len, kvh, dh), COMPUTE_DTYPE),
+        }
+
+    def prefill(params, batch):
+        enc_h = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = _dec_embed(params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+        def body(carry, p_l):
+            hh, aux = carry
+            from repro.models import attention as attn_mod
+            x = tfm._norm(cfg, p_l["ln1"], hh)
+            a, (k, v) = attn_mod.attn_apply(
+                p_l["self_attn"], x, positions, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+                rope_kind="none", causal=True, chunk=cfg.attn_chunk)
+            hh = hh + a
+            ek, ev = tfm.cross_kv(cfg, p_l["cross_attn"], enc_h)
+            hh = hh + tfm._cross_attend(cfg, p_l["cross_attn"],
+                                        tfm._norm(cfg, p_l["ln_x"], hh), ek, ev)
+            hh = hh + tfm.gelu_mlp(p_l["mlp"], tfm._norm(cfg, p_l["ln2"], hh))
+            return (hint(hh, "act"), aux), (k, v, ek, ev)
+
+        (h, _aux), (k, v, xk, xv) = jax.lax.scan(body, (h, _aux0()), params["dec"])
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        return logits, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+    def decode_step(params, tokens, cache, cur_len):
+        h = _embed(cfg, params, tokens) + _sinusoid_at(cur_len, cfg.d_model)
+
+        def body(hh, xs):
+            p_l, ck, cv, xk, xv = xs
+            hh, ck, cv = tfm.dec_block_decode(cfg, p_l, hh, ck, cv, xk, xv, cur_len)
+            return hh, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(
+            body, h, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        h = _final(cfg, params, h)
+        logits = _logits_fn(cfg, params)(h[:, -1])
+        return logits, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}
+
+    return Model(cfg, init, loss, prefill, init_cache, decode_step)
+
+
+def _sinusoid_at(pos, d):
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((1, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe[None].astype(COMPUTE_DTYPE)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts: top-k routing, capacity-factor dispatch, EP sharding.
+
+Dispatch is scatter-based (tokens scattered into a (G, E, C, D) expert
+buffer, combined back with router gates), the static-shape formulation that
+SPMD partitions cleanly: the buffer is annotated expert-sharded over the
+``model`` mesh axis at the dispatch boundary (via sharding_hint), so XLA
+lowers the dispatch/return into all_to_all pairs — the GShard pattern, and
+the same fixed-capacity routing this framework uses for distributed cache
+queries (core/sharded.py).
+
+Group-chunking: the dispatch buffer is the MoE memory hog
+(tokens × top_k × cf × D).  We scan over chunks of the batch-group axis so
+live memory is bounded regardless of top_k (OLMoE is top-8).
+
+Aux losses: load-balance (Switch) + router z-loss, returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init, hint as _hint
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int):
+    ks = jax.random.split(key, 4)
+    scale_in = (1.0 / d_model) ** 0.5
+    scale_out = (1.0 / d_ff) ** 0.5
+    return {
+        "router": dense_init(ks[0], d_model, n_experts, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d_model, d_ff), jnp.float32)
+                   * scale_in).astype(COMPUTE_DTYPE),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d_model, d_ff), jnp.float32)
+                 * scale_in).astype(COMPUTE_DTYPE),
+        "w_down": (jax.random.normal(ks[3], (n_experts, d_ff, d_model), jnp.float32)
+                   * scale_out).astype(COMPUTE_DTYPE),
+    }
+
+
+def moe_apply(params, x, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, group_chunk: int = 2):
+    """x (B, S, D) -> (y (B, S, D), aux) with aux = {lb_loss, z_loss, drop_frac}.
+
+    B is the dispatch-group axis (sharded over data); each group routes its
+    own S tokens into per-expert capacity C = S*top_k*cf/E slots.  Overflow
+    tokens fall back to their residual stream (standard capacity semantics).
+    """
+    b, s, d = x.shape
+    e, k = n_experts, top_k
+    cap = max(4, int(s * k * capacity_factor / e))
+    gc = min(group_chunk, b)
+    assert b % gc == 0
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_v, gate_i = jax.lax.top_k(probs, k)                     # (B,S,k)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch Transformer load balance + z-loss)
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_i[..., 0], e), axis=(0, 1))
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    def run_group(xg, gate_vg, gate_ig):
+        # xg (gc, S, D); flatten expert choices: (gc, S*k)
+        ef = gate_ig.reshape(gc, s * k)
+        gf = gate_vg.reshape(gc, s * k)
+        xf = jnp.repeat(xg, k, axis=1)                           # (gc, S*k, D)
+        onehot = jax.nn.one_hot(ef, e, dtype=jnp.int32)          # (gc, S*k, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1
+        my_pos = jnp.sum(pos * onehot, axis=-1)                  # (gc, S*k)
+        keep = my_pos < cap
+        slot = jnp.where(keep, my_pos, cap - 1)
+
+        gi = jnp.arange(gc)[:, None]
+        buf = jnp.zeros((gc, e, cap, d), xg.dtype)
+        buf = buf.at[gi, ef, slot].add(
+            jnp.where(keep[..., None], xf, 0).astype(xg.dtype))
+        buf = _hint(buf, "moe_dispatch")                         # expert-shard here
+
+        h_g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+        h_u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+        h = jax.nn.silu(h_g.astype(jnp.float32)).astype(buf.dtype) * h_u
+        out = jnp.einsum("becf,efd->becd", h, params["w_down"])
+        out = _hint(out, "moe_return")                           # back to token shard
+
+        yf = out[gi, ef, slot] * jnp.where(keep, gf, 0.0)[..., None].astype(out.dtype)
+        y = yf.reshape(gc, s, k, d).sum(axis=2)
+        return y, jnp.sum(~keep)
+
+    def scan_body(carry, xs):
+        xg, gvg, gig = xs
+        y, dropped = run_group(xg, gvg, gig)
+        return carry + dropped, y
+
+    # Layout note: reshape to (gc, ng, ...) then scan over the *minor* axis,
+    # so each scan step slices one row per batch shard — under pjit the
+    # (gc, S, D) step input stays block-sharded with no per-step resharding.
+    ng = b // gc
+
+    def chunks(t):
+        return jnp.moveaxis(t.reshape(gc, ng, *t.shape[1:]), 1, 0)
+
+    dropped, ys = jax.lax.scan(scan_body, jnp.int32(0),
+                               (chunks(x), chunks(gate_v), chunks(gate_i)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    aux = {
+        "lb_loss": lb_loss,
+        "z_loss": z_loss,
+        "drop_frac": dropped.astype(jnp.float32) / (b * s * k),
+    }
+    return y, aux
+
+
+def moe_decode(params, x, *, n_experts: int, top_k: int):
+    """Single-token MoE (B, 1, D): dense gather of the top-k experts' weights
+    would blow memory; instead compute all experts on the tiny token batch
+    and combine — O(B * E * D * F) flops but B is small in decode and E*F
+    streams from HBM once (memory-bound either way)."""
+    b, _, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)[:, 0]                # (B,E)
+    gate_v, gate_i = jax.lax.top_k(probs, top_k)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+    mask = jnp.zeros((b, n_experts), jnp.float32).at[
+        jnp.arange(b)[:, None], gate_i].set(gate_v)              # sparse combine
+
+    h_g = jnp.einsum("bd,edf->bef", x[:, 0], params["w_gate"])
+    h_u = jnp.einsum("bd,edf->bef", x[:, 0], params["w_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    out = jnp.einsum("bef,efd->bed", h, params["w_down"])
+    y = jnp.einsum("bed,be->bd", out.astype(jnp.float32), mask)
+    return y[:, None].astype(x.dtype)

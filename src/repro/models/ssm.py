@@ -1,0 +1,350 @@
+"""State-space / recurrent sequence mixers: Mamba, mLSTM, sLSTM.
+
+All three expose a chunked/parallel *train* form (full-sequence) and a
+*decode* form (single step with carried state) so the serving stack treats
+them uniformly with attention (the "KV cache" of an SSM is its fixed-size
+state — this is what makes the long_500k shapes tractable for xlstm/hymba).
+
+  * Mamba: diagonal selective SSM (Gu & Dao).  Train path scans over chunks
+    with an associative scan inside each chunk (work-efficient, memory
+    O(B·chunk·D·N)); decode path is the O(1) recurrence.
+  * mLSTM (xLSTM): matrix-memory cell with exponential gating, implemented in
+    the stabilized chunkwise-parallel form (intra-chunk quadratic attention
+    + inter-chunk recurrent state).
+  * sLSTM (xLSTM): scalar-memory cell with hidden-to-hidden block-diagonal
+    recurrence — inherently sequential, lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, d_model: int, d_inner: int, d_state: int, d_conv: int = 4):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner),       # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32) * 0.2
+                   ).astype(COMPUTE_DTYPE),
+        "w_bc": dense_init(ks[2], d_inner, 2 * d_state),       # B_t, C_t
+        "w_dt": dense_init(ks[3], d_inner, d_inner),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d_inner, 0),        # A = -exp(a_log)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[4], d_inner, d_model),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x (B,S,D); w (K,D) depthwise causal conv.  state (B,K-1,D) for decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out, new_state
+
+
+def _sel_scan_chunk(a, bx, h0):
+    """Associative scan h_t = a_t h_{t-1} + bx_t within a chunk, given h0.
+
+    a, bx: (B, L, D, N) f32; h0 (B, D, N).  Returns (h (B,L,D,N), h_last).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_c * h0[:, None] + b_c
+    return h, h[:, -1]
+
+
+def mamba_apply(params, x, *, d_state: int, chunk: int = 256,
+                return_state: bool = False):
+    """Train/prefill path. x (B,S,Dm) -> (B,S,Dm) [, final decode state]."""
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi_raw, params["conv_w"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    bc = jnp.einsum("bsd,dn->bsn", xi, params["w_bc"]).astype(jnp.float32)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)                        # (B,S,N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", xi, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"])                                    # (B,S,D)
+    a = -jnp.exp(params["a_log"])                               # (D,N)
+
+    nc = (s + chunk - 1) // chunk
+    pad = nc * chunk - s
+    if pad:
+        xi_p = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xi_p, dt_p, b_p, c_p = xi, dt, b_t, c_t
+
+    d_inner = xi.shape[-1]
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, t.shape[-1]), 1, 0)
+
+    def step(h0, xs):
+        xc, dc, bc_, cc = xs
+        da = jnp.exp(dc[..., None] * a)                         # (B,L,D,N)
+        dbx = (dc * xc.astype(jnp.float32))[..., None] * bc_[:, :, None, :]
+        h, h_last = _sel_scan_chunk(da, dbx, h0)
+        y = jnp.einsum("bldn,bln->bld", h, cc)
+        return h_last, y
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, (to_chunks(xi_p), to_chunks(dt_p),
+                                         to_chunks(b_p), to_chunks(c_p)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, d_inner)[:, :s]
+    y = y + params["d_skip"] * xi.astype(jnp.float32)
+    y = y.astype(COMPUTE_DTYPE) * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    if return_state:
+        return out, {"h": h_last, "conv": conv_state.astype(COMPUTE_DTYPE)}
+    return out
+
+
+def mamba_decode(params, x, state, *, d_state: int):
+    """Single-token step.  x (B,1,Dm); state {"h": (B,D,N), "conv": (B,K-1,D)}."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, params["conv_w"], state["conv"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    bc = jnp.einsum("bsd,dn->bsn", xi, params["w_bc"]).astype(jnp.float32)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", xi, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                         # (B,D,N)
+    h = da * state["h"] + (dt[:, 0] * xi[:, 0].astype(jnp.float32))[..., None] * b_t[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None, :]
+    y = y + params["d_skip"] * xi.astype(jnp.float32)
+    y = y.astype(COMPUTE_DTYPE) * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory, stabilized chunkwise-parallel form)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, proj_factor: float = 2.0):
+    d_inner = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * d_inner),        # x branch + gate z
+        "conv_w": (jax.random.normal(ks[1], (4, d_inner), jnp.float32) * 0.2
+                   ).astype(COMPUTE_DTYPE),
+        "wq": dense_init(ks[2], d_inner, d_inner),
+        "wk": dense_init(ks[3], d_inner, d_inner),
+        "wv": dense_init(ks[4], d_inner, d_inner),
+        "w_if": dense_init(ks[5], d_inner, 2 * n_heads),        # i/f gate pre-acts
+        "if_bias": jnp.concatenate([jnp.zeros((n_heads,), jnp.float32),
+                                    jnp.full((n_heads,), 3.0, jnp.float32)]),
+        "w_down": dense_init(ks[6], d_inner, d_model),
+        "skip_scale": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, lf, li, state):
+    """One stabilized chunk. q,k,v (B,H,L,D*); lf,li (B,H,L) logs; state (C,n,m).
+
+    Returns (h (B,H,L,Dv), new_state).  All f32.
+    """
+    c_in, n_in, m_in = state
+    fcum = jnp.cumsum(lf, axis=-1)                              # F_t (incl. t)
+    g = li - fcum                                               # ĩ_j - F_j
+    m_intra = jax.lax.cummax(g, axis=g.ndim - 1)                        # max_{j<=t}
+    m_t = jnp.maximum(fcum + m_in[..., None], fcum + m_intra)   # (B,H,L)
+
+    # intra-chunk decay matrix w[t, j] = exp(F_t - F_j + ĩ_j - m_t), j <= t
+    l = q.shape[2]
+    dmat = fcum[..., :, None] + g[..., None, :] - m_t[..., :, None]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.where(tri, jnp.exp(dmat), 0.0)                      # (B,H,L,L)
+
+    s_ = jnp.einsum("bhld,bhmd->bhlm", q, k)                    # scores
+    h_intra = jnp.einsum("bhlm,bhlm,bhmd->bhld", s_, w, v)
+    n_intra = jnp.einsum("bhlm,bhmd->bhld", w, k)
+
+    inter_w = jnp.exp(fcum + m_in[..., None] - m_t)             # (B,H,L)
+    h_inter = jnp.einsum("bhld,bhde->bhle", q, c_in) * inter_w[..., None]
+    n_inter = jnp.einsum("bhld,bhd->bhl", q, n_in) * inter_w
+
+    num = h_intra + h_inter
+    den = jnp.abs(jnp.einsum("bhld,bhld->bhl", q, n_intra) + n_inter)
+    h = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+
+    # state propagation to chunk end
+    f_total = fcum[..., -1]                                     # (B,H)
+    m_out = jnp.maximum(f_total + m_in, f_total + m_intra[..., -1])
+    carry_w = jnp.exp(f_total + m_in - m_out)
+    kv_w = jnp.exp(f_total[..., None] + g - m_out[..., None])   # (B,H,L)
+    c_out = carry_w[..., None, None] * c_in + jnp.einsum(
+        "bhl,bhld,bhle->bhde", kv_w, k, v)
+    n_out = carry_w[..., None] * n_in + jnp.einsum("bhl,bhld->bhd", kv_w, k)
+    return h, (c_out, n_out, m_out)
+
+
+def mlstm_apply(params, x, *, n_heads: int, chunk: int = 256,
+                return_state: bool = False):
+    """Train/prefill path. x (B,S,Dm) -> (B,S,Dm) [, final decode state]."""
+    b, s, d_model = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, params["conv_w"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    d_inner = xi.shape[-1]
+    dh = d_inner // n_heads
+
+    def heads(t):
+        return jnp.moveaxis(t.reshape(b, s, n_heads, dh), 2, 1).astype(jnp.float32)
+
+    q = heads(jnp.einsum("bsd,de->bse", xc, params["wq"]))
+    k = heads(jnp.einsum("bsd,de->bse", xc, params["wk"])) * (dh ** -0.5)
+    v = heads(jnp.einsum("bsd,de->bse", xi, params["wv"]))
+    gif = jnp.einsum("bsd,dh->bsh", xc, params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    li = jnp.moveaxis(gif[..., :n_heads], 2, 1)                 # log i (pre-act)
+    lf = jax.nn.log_sigmoid(jnp.moveaxis(gif[..., n_heads:], 2, 1))
+
+    nc = (s + chunk - 1) // chunk
+    pad = nc * chunk - s
+
+    def chunks(t, fill=0.0):
+        tp = jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3),
+                     constant_values=fill)
+        return jnp.moveaxis(
+            tp.reshape(t.shape[0], t.shape[1], nc, chunk) if t.ndim == 3
+            else tp.reshape(t.shape[0], t.shape[1], nc, chunk, t.shape[-1]), 2, 0)
+
+    def step(state, xs):
+        qc, kc, vc, lfc, lic = xs
+        h, state = _mlstm_chunk(qc, kc, vc, lfc, lic, state)
+        return state, h
+
+    state0 = (jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+              jnp.zeros((b, n_heads, dh), jnp.float32),
+              jnp.zeros((b, n_heads), jnp.float32))
+    # pad ĩ with -inf-ish so padded steps contribute nothing
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        step, state0, (chunks(q), chunks(k), chunks(v),
+                       chunks(lf), chunks(li, fill=-1e30)))
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, n_heads, nc * chunk, dh)[:, :, :s]
+    h = jnp.moveaxis(h, 1, 2).reshape(b, s, d_inner).astype(COMPUTE_DTYPE)
+    h = h + params["skip_scale"].astype(COMPUTE_DTYPE) * xc
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bsd,de->bse", out, params["w_down"])
+    if return_state:
+        return out, {"c": c_f, "n": n_f, "m": m_f,
+                     "conv": conv_state.astype(COMPUTE_DTYPE)}
+    return out
+
+
+def mlstm_decode(params, x, state, *, n_heads: int):
+    """Single-token step. state {"c": (B,H,Dk,Dv), "n": (B,H,Dk), "m": (B,H),
+    "conv": (B,3,Di)}."""
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, params["conv_w"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    d_inner = xi.shape[-1]
+    dh = d_inner // n_heads
+
+    def heads(t):
+        return t.reshape(b, n_heads, dh).astype(jnp.float32)
+
+    q = heads(jnp.einsum("bsd,de->bse", xc, params["wq"])[:, 0])
+    k = heads(jnp.einsum("bsd,de->bse", xc, params["wk"])[:, 0]) * (dh ** -0.5)
+    v = heads(jnp.einsum("bsd,de->bse", xi, params["wv"])[:, 0])
+    gif = jnp.einsum("bd,dh->bh", xc[:, 0], params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    li, lf_pre = gif[..., :n_heads], gif[..., n_heads:]
+    lf = jax.nn.log_sigmoid(lf_pre)
+
+    m_new = jnp.maximum(lf + state["m"], li)
+    f_w = jnp.exp(lf + state["m"] - m_new)
+    i_w = jnp.exp(li - m_new)
+    c = f_w[..., None, None] * state["c"] + i_w[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = f_w[..., None] * state["n"] + i_w[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, 1, d_inner).astype(COMPUTE_DTYPE)
+    h = h + params["skip_scale"].astype(COMPUTE_DTYPE) * xc
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bsd,de->bse", out, params["w_down"])
+    return out, {"c": c, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory; sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, n_heads: int):
+    ks = jax.random.split(key, 4)
+    dh = d_model // n_heads
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model),     # z i f o from x
+        "r_gates": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh), jnp.float32)
+                    * (1.0 / dh) ** 0.5).astype(COMPUTE_DTYPE),  # block-diag recurrence
+        "gate_bias": jnp.concatenate([
+            jnp.zeros((2 * d_model,), jnp.float32),
+            jnp.full((d_model,), 3.0, jnp.float32),             # f bias
+            jnp.zeros((d_model,), jnp.float32)]),
+        # paper's post-sLSTM ffn (pf = 4/3) lives in the block (transformer.py)
+    }
+
+
+def slstm_apply(params, x, *, n_heads: int, state=None):
+    """x (B,S,D).  Sequential scan; returns (y (B,S,D), final_state).
+
+    state: {"c","n","h","m"} each (B, D) f32.
+    """
+    b, s, d = x.shape
+    dh = d // n_heads
+    wx = jnp.einsum("bsd,de->bse", x, params["w_gates"]).astype(jnp.float32)
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = {"c": zeros, "n": zeros + 1e-6, "h": zeros,
+                 "m": jnp.zeros((b, d), jnp.float32)}
+
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(st, wx_t):
+        hh = st["h"].reshape(b, n_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(b, 4 * d)
+        pre = wx_t + rec + params["gate_bias"]
+        zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(zp)
+        o = jax.nn.sigmoid(op)
+        lf = jax.nn.log_sigmoid(fp)
+        m_new = jnp.maximum(lf + st["m"], ip)
+        i_w = jnp.exp(ip - m_new)
+        f_w = jnp.exp(lf + st["m"] - m_new)
+        c = f_w * st["c"] + i_w * z
+        n = f_w * st["n"] + i_w
+        h = o * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(COMPUTE_DTYPE)
+    return y, state

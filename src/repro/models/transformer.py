@@ -1,0 +1,321 @@
+"""Block assembly and layer stacks for every architecture family.
+
+Layer stacking uses lax.scan over *stacked* per-layer params (leaves carry a
+leading (L,) axis), keeping HLO size O(1) in depth — an 80-layer 72B model
+lowers as fast as a 2-layer one, and remat policies apply per scanned block.
+Heterogeneous stacks stay scannable:
+
+  * per-layer scalars (sliding window, rope theta) are scanned *data*, not
+    structure — the mask/rotation math consumes them dynamically (gemma3's
+    5:1 local:global, hymba's 3 global layers);
+  * xlstm's 7:1 mLSTM:sLSTM pattern scans over uniform super-blocks of
+    8 sub-layers (7 stacked mLSTM + 1 sLSTM).
+
+Decode caches ride the same scan as xs/ys slices, so the serve_step is also
+depth-O(1) in HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+)
+
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return layernorm_init(d) if cfg.norm == "ln" else rmsnorm_init(d)
+
+
+def _norm(cfg, p, x):
+    return layernorm(p, x, cfg.norm_eps) if cfg.norm == "ln" else rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder blocks (attention / hymba hybrid / xlstm)
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": _norm_init(cfg),
+        "attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, qk_norm=cfg.qk_norm),
+    }
+    if cfg.ffn == "swiglu":
+        p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    elif cfg.ffn == "gelu":
+        p["mlp"] = gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    elif cfg.ffn == "moe":
+        p["mlp"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts)
+    if not cfg.parallel_block and cfg.ffn != "none":
+        p["ln2"] = _norm_init(cfg)
+    return p
+
+
+def _ffn_apply(cfg, p, x, aux):
+    if cfg.ffn == "swiglu":
+        return swiglu(p["mlp"], x), aux
+    if cfg.ffn == "gelu":
+        return gelu_mlp(p["mlp"], x), aux
+    if cfg.ffn == "moe":
+        y, a = moe_mod.moe_apply(
+            p["mlp"], x, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor, group_chunk=cfg.moe_group_chunk)
+        aux = {k: aux[k] + a[k] for k in aux}
+        return y, aux
+    return jnp.zeros_like(x), aux
+
+
+def _ffn_decode(cfg, p, x):
+    if cfg.ffn == "moe":
+        return moe_mod.moe_decode(p["mlp"], x, n_experts=cfg.n_experts,
+                                  top_k=cfg.moe_top_k)
+    if cfg.ffn == "swiglu":
+        return swiglu(p["mlp"], x)
+    if cfg.ffn == "gelu":
+        return gelu_mlp(p["mlp"], x)
+    return jnp.zeros_like(x)
+
+
+def attn_block_apply(cfg, p, h, positions, window, theta, aux):
+    """Train/prefill. window/theta are dynamic per-layer scalars."""
+    x = _norm(cfg, p["ln1"], h)
+    a_out, _kv = attn.attn_apply(
+        p["attn"], x, positions, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim, rope_kind=cfg.rope_kind, theta=theta,
+        window=window, softcap=cfg.softcap, chunk=cfg.attn_chunk)
+    if cfg.parallel_block:
+        f_out, aux = _ffn_apply(cfg, p, x, aux)
+        return h + a_out + f_out, aux
+    h = h + a_out
+    if cfg.ffn != "none":
+        f_out, aux = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], h), aux)
+        h = h + f_out
+    return h, aux
+
+
+def attn_block_decode(cfg, p, h, cache_k, cache_v, cur_len, window, theta):
+    x = _norm(cfg, p["ln1"], h)
+    a_out, ck, cv = attn.attn_decode(
+        p["attn"], x, cache_k, cache_v, cur_len, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim, rope_kind=cfg.rope_kind,
+        theta=theta, window=window, softcap=cfg.softcap)
+    if cfg.parallel_block:
+        h = h + a_out + _ffn_decode(cfg, p, x)
+    else:
+        h = h + a_out
+        if cfg.ffn != "none":
+            h = h + _ffn_decode(cfg, p, _norm(cfg, p["ln2"], h))
+    return h, ck, cv
+
+
+# -- hymba: parallel attention + mamba heads, learned fusion gates ----------
+
+def hymba_block_init(key, cfg):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": _norm_init(cfg),
+        "attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim),
+        "mamba": ssm.mamba_init(ks[1], cfg.d_model, cfg.d_model, cfg.ssm_state),
+        "fuse_a": jnp.ones((cfg.d_model,), jnp.float32) * 0.5,
+        "fuse_m": jnp.ones((cfg.d_model,), jnp.float32) * 0.5,
+        "ln2": _norm_init(cfg),
+        "mlp": swiglu_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+    return p
+
+
+def hymba_block_apply(cfg, p, h, positions, window, theta, aux):
+    x = _norm(cfg, p["ln1"], h)
+    a_out, _ = attn.attn_apply(
+        p["attn"], x, positions, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim, rope_kind=cfg.rope_kind, theta=theta,
+        window=window, chunk=cfg.attn_chunk)
+    m_out = ssm.mamba_apply(p["mamba"], x, d_state=cfg.ssm_state,
+                            chunk=cfg.ssm_chunk)
+    mix = (p["fuse_a"].astype(COMPUTE_DTYPE) * a_out
+           + p["fuse_m"].astype(COMPUTE_DTYPE) * m_out)
+    h = h + mix
+    h = h + swiglu(p["mlp"], _norm(cfg, p["ln2"], h))
+    return h, aux
+
+
+def hymba_block_decode(cfg, p, h, cache_k, cache_v, mstate, cur_len, window, theta):
+    x = _norm(cfg, p["ln1"], h)
+    a_out, ck, cv = attn.attn_decode(
+        p["attn"], x, cache_k, cache_v, cur_len, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim, rope_kind=cfg.rope_kind,
+        theta=theta, window=window)
+    m_out, mstate = ssm.mamba_decode(p["mamba"], x, mstate, d_state=cfg.ssm_state)
+    mix = (p["fuse_a"].astype(COMPUTE_DTYPE) * a_out
+           + p["fuse_m"].astype(COMPUTE_DTYPE) * m_out)
+    h = h + mix
+    h = h + swiglu(p["mlp"], _norm(cfg, p["ln2"], h))
+    return h, ck, cv, mstate
+
+
+# -- xlstm super-block: (g-1) mLSTM + 1 sLSTM -------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def xlstm_ffn_dim(cfg) -> int:
+    """sLSTM post-MLP width (pf=4/3), rounded for TP/MXU divisibility."""
+    raw = int(cfg.d_model * 4 / 3)
+    return _round_up(raw, 128 if raw >= 1024 else 16)
+
+
+def xlstm_group_init(key, cfg):
+    g = cfg.scan_group
+    km = jax.random.split(key, g + 2)
+    ml = jax.vmap(lambda k: {
+        "ln": _norm_init(cfg),
+        "cell": ssm.mlstm_init(k, cfg.d_model, cfg.n_heads, cfg.mlstm_proj_factor),
+    })(km[: g - 1])
+    sl = {
+        "ln": _norm_init(cfg),
+        "cell": ssm.slstm_init(km[g - 1], cfg.d_model, cfg.n_heads),
+        "ln_ffn": _norm_init(cfg),
+        "mlp": gelu_mlp_init(km[g], cfg.d_model, xlstm_ffn_dim(cfg)),
+    }
+    return {"mlstm": ml, "slstm": sl}
+
+
+def xlstm_group_apply(cfg, p, h, aux):
+    def one_mlstm(h, pl):
+        y = ssm.mlstm_apply(pl["cell"], _norm(cfg, pl["ln"], h),
+                            n_heads=cfg.n_heads, chunk=cfg.ssm_chunk)
+        return h + y, None
+
+    h, _ = jax.lax.scan(one_mlstm, h, p["mlstm"])
+    sl = p["slstm"]
+    y, _ = ssm.slstm_apply(sl["cell"], _norm(cfg, sl["ln"], h), n_heads=cfg.n_heads)
+    h = h + y
+    h = h + gelu_mlp(sl["mlp"], _norm(cfg, sl["ln_ffn"], h))
+    return h, aux
+
+
+def xlstm_group_decode(cfg, p, h, states):
+    """states = {"mlstm": {...each (g-1, B, ...)}, "slstm": {...(B,...)}}"""
+    def one_mlstm(h, xs):
+        pl, st = xs
+        y, st = ssm.mlstm_decode(pl["cell"], _norm(cfg, pl["ln"], h),
+                                 st, n_heads=cfg.n_heads)
+        return h + y, st
+
+    h, mst = jax.lax.scan(one_mlstm, h, (p["mlstm"], states["mlstm"]))
+    sl = p["slstm"]
+    y, sst = ssm.slstm_apply(sl["cell"], _norm(cfg, sl["ln"], h),
+                             n_heads=cfg.n_heads, state=states["slstm"])
+    h = h + y
+    h = h + gelu_mlp(sl["mlp"], _norm(cfg, sl["ln_ffn"], h))
+    return h, {"mlstm": mst, "slstm": sst}
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder / decoder blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _norm_init(cfg),
+        "attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim),
+        "ln2": _norm_init(cfg),
+        "mlp": gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def enc_block_apply(cfg, p, h, positions):
+    a, _ = attn.attn_apply(p["attn"], _norm(cfg, p["ln1"], h), positions,
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           d_head=cfg.head_dim, rope_kind="none", causal=False,
+                           chunk=cfg.attn_chunk)
+    h = h + a
+    h = h + gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], h))
+    return h
+
+
+def dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _norm_init(cfg),
+        "self_attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim),
+        "ln_x": _norm_init(cfg),
+        "cross_attn": attn.attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim),
+        "ln2": _norm_init(cfg),
+        "mlp": gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _cross_attend(cfg, p, x, enc_k, enc_v):
+    """x (B,S,D) queries against precomputed encoder K/V (B,Senc,KVH,Dh)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    ctx = attn.chunked_attention(q, enc_k, enc_v, causal=False,
+                                 chunk=cfg.attn_chunk)
+    return jnp.einsum("bsh,hd->bsd",
+                      ctx.reshape(b, s, cfg.n_heads * cfg.head_dim), p["wo"])
+
+
+def cross_kv(cfg, p, enc_h):
+    b, se, _ = enc_h.shape
+    k = jnp.einsum("bsd,dh->bsh", enc_h, p["wk"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", enc_h, p["wv"]).reshape(
+        b, se, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def dec_block_apply(cfg, p, h, positions, enc_k, enc_v, aux):
+    a, _ = attn.attn_apply(p["self_attn"], _norm(cfg, p["ln1"], h), positions,
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           d_head=cfg.head_dim, rope_kind="none", causal=True,
+                           chunk=cfg.attn_chunk)
+    h = h + a
+    h = h + _cross_attend(cfg, p["cross_attn"], _norm(cfg, p["ln_x"], h),
+                          enc_k, enc_v)
+    h = h + gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], h))
+    return h, aux
+
+
+def dec_block_decode(cfg, p, h, cache_k, cache_v, enc_k, enc_v, cur_len):
+    a, ck, cv = attn.attn_decode(
+        p["self_attn"], _norm(cfg, p["ln1"], h), cache_k, cache_v, cur_len,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+        rope_kind="none")
+    h = h + a
+    h = h + _cross_attend(cfg, p["cross_attn"], _norm(cfg, p["ln_x"], h),
+                          enc_k, enc_v)
+    h = h + gelu_mlp(p["mlp"], _norm(cfg, p["ln2"], h))
+    return h, ck, cv
+
+
+def sinusoid_positions(s: int, d: int, offset: int = 0) -> jnp.ndarray:
+    pos = jnp.arange(offset, offset + s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(COMPUTE_DTYPE)

@@ -1,0 +1,145 @@
+"""Three-term roofline from a compiled (AOT) step.
+
+Terms (seconds), per the evaluation spec, for a TPU v5e target:
+
+    compute    = HLO_FLOPs_total   / (chips * 197e12)     bf16 peak
+    memory     = HLO_bytes_total   / (chips * 819e9)      HBM bandwidth
+    collective = coll_bytes_total  / (chips * 50e9)       ICI per link
+
+``compiled.cost_analysis()`` reports *per-device* flops/bytes for the SPMD
+program; totals are per-device × chips, so each term reduces to
+per-device / unit-rate.  Collective bytes are not in cost_analysis: we
+parse the partitioned HLO and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(first-order: result bytes ≈ bytes crossing each device's links for ring
+algorithms).
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops, keyed by op kind.
+
+    Matches lines like
+      %all-reduce.5 = f32[16,512]{1,0} all-reduce(f32[16,512]{1,0} %x), ...
+      ROOT %r = (f32[8], f32[8]) all-to-all(...)
+    Counts ``-start`` forms once and skips the matching ``-done``.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in _COLLECTIVES:
+            out[base] += _shape_bytes(result_type)
+            counts[base] += 1
+    out["_counts"] = counts
+    return out
+
+
+def analyze(compiled, *, chips: int, model_flops_total: float,
+            hlo_text: str | None = None) -> dict:
+    """Roofline record for one compiled (arch × shape × mesh) cell.
+
+    Loop-aware accounting (hlo_stats) is authoritative — XLA's own
+    cost_analysis counts while-loop bodies once and is kept only as a
+    reference field.
+    """
+    from repro.roofline.hlo_stats import analyze_hlo
+
+    cost = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    st = analyze_hlo(text)
+    flops_dev = st["flops"]
+    bytes_dev = st["hbm_bytes"]
+    coll_dev = st["collective_bytes"]
+    coll = dict(st["collectives"])
+    coll["_counts"] = st["collective_counts"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful_ratio = (model_flops_total / (flops_dev * chips)) if flops_dev else 0.0
+    # roofline fraction: time the useful math would take at peak / bound time
+    ideal = (model_flops_total / chips) / PEAK_FLOPS
+    frac = ideal / bound if bound > 0 else 0.0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_rec[attr] = int(getattr(mem, attr, 0) or 0)
+
+    return {
+        "chips": chips,
+        "per_device": {"flops": flops_dev, "bytes": bytes_dev,
+                       "collective_bytes": coll_dev},
+        "xla_cost_analysis_reference": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "loop bodies counted once by XLA; do not use for roofline",
+        },
+        "totals": {"flops": flops_dev * chips, "bytes": bytes_dev * chips,
+                   "collective_bytes": coll_dev * chips},
+        "collectives": coll,
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "model_flops": model_flops_total,
+        "useful_flop_ratio": useful_ratio,
+        "roofline_fraction": frac,
+        "memory_analysis": mem_rec,
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for prefill, 2·N·B per decode step.
+
+    N = active params (MoE: top-k experts only).  The standard MFU
+    convention; attention score FLOPs are excluded (reported separately by
+    the useful_flop_ratio discussion).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one decode token per sequence

@@ -1,0 +1,355 @@
+"""Loop-aware FLOP / HBM-traffic / collective accounting from optimized HLO.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE — a scan over 80
+layers is undercounted 80×, making it useless for roofline work on
+scan-structured models.  This module re-derives the three roofline inputs
+from the HLO text, multiplying every computation by its loop trip count
+(XLA CPU/TPU record ``backend_config={"known_trip_count":{"n":...}}`` on
+each while op; a constant-compare fallback handles the rest).
+
+Accounting model (per device — the HLO is the SPMD per-device program):
+  * flops        — 2 · |out| · |contraction| for every dot (batch dims are
+                   part of |out|), × multiplier.  Elementwise flops are
+                   ignored (decimal dust next to the dots).
+  * hbm_bytes    — for every *materializing* top-level op in a control
+                   computation (fusion, dot, copy, convert, reduce, slice,
+                   scatter, gather, collective, ...): result bytes + operand
+                   bytes.  Ops inside fused computations move no HBM bytes.
+                   Bitcasts / tuples / GTEs / parameters are free.
+  * coll_bytes   — result bytes of all-gather / all-reduce / reduce-scatter
+                   / all-to-all / collective-permute (ring first-order:
+                   result bytes ≈ bytes crossing each device's links).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+_FREE_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "iota", "reshape",
+             # control ops: their bodies are accounted separately; carries
+             # are buffer-aliased, not copied
+             "while", "conditional", "call", "optimization-barrier"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# op line: [ROOT] %name = <type> opcode(...operands...) [, attrs]
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _type_dims(type_str: str):
+    """First array shape in a type string -> (bytes, dims list)."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0, []
+    dt, dims = m.groups()
+    dl = [int(d) for d in dims.split(",")] if dims else []
+    n = 1
+    for d in dl:
+        n *= d
+    return n * _DTYPE_BYTES[dt], dl
+
+
+def _type_bytes_all(type_str: str) -> int:
+    """Total bytes across every array shape in a (possibly tuple) type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opcode", "rest")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.rest = rest
+
+
+def parse_module(text: str):
+    """-> (comps: {name: [Op]}, types: {op_name: type_str}, entry_name)."""
+    comps: dict = {}
+    types: dict = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY ") or (line and not line[0].isspace()
+                                         and line.rstrip().endswith("{")):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            op = Op(name, type_str, opcode, rest)
+            comps[cur].append(op)
+            types[name] = type_str
+    return comps, types, entry
+
+
+def _dot_flops(op: Op, types) -> float:
+    out_bytes, out_dims = _type_dims(op.type_str)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    lhs_m = _OPERAND_RE.search(op.rest)
+    if not mcd or not lhs_m:
+        return 0.0
+    lhs_type = types.get(lhs_m.group(1), "")
+    _, lhs_dims = _type_dims(lhs_type)
+    contract = 1
+    for idx in (int(i) for i in mcd.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * n_out * contract
+
+
+def _operand_bytes(op: Op, types) -> list[int]:
+    head = op.rest.split("),", 1)[0]
+    out = []
+    for m in _OPERAND_RE.finditer(head):
+        t = types.get(m.group(1))
+        if t:
+            out.append(_type_bytes_all(t))
+    return out
+
+
+def _op_traffic(op: Op, types, dus_roots: set,
+                fusion_op_bytes=None) -> int:
+    """HBM bytes for one top-level op.
+
+    In-place / aliased ops are NOT full-buffer copies on real hardware:
+      * dynamic-update-slice (and fusions rooted in one): the big operand is
+        aliased; traffic = 2x the non-aliased inputs (read update + write
+        slice) — this is how a KV-cache append costs O(slice), not O(cache).
+      * dynamic-slice / gather: read+write the *slice*, not the operand.
+      * fusion operands consumed ONLY via an interior dynamic-slice are
+        billed at slice size (a scanned recurrence reading one timestep of a
+        stacked input must not be billed the whole stack per step).
+      * while/call/tuple plumbing is free (bodies accounted separately).
+    Everything else: operands + results (the fusion-level HBM model).
+    """
+    if op.opcode in _FREE_OPS:
+        return 0
+    result = _type_bytes_all(op.type_str)
+    operands = _operand_bytes(op, types)
+    if op.opcode == "dynamic-update-slice" or (
+            op.opcode == "fusion" and _fusion_callee(op) in dus_roots):
+        big = max(operands) if operands else 0
+        return 2 * max(0, sum(operands) - big)
+    if op.opcode in ("dynamic-slice", "gather"):
+        return 2 * result
+    if op.opcode == "scatter":
+        big = max(operands) if operands else 0
+        return 2 * max(0, sum(operands) - big)
+    if op.opcode == "broadcast":
+        return result
+    if op.opcode == "fusion" and fusion_op_bytes is not None:
+        callee = _fusion_callee(op)
+        eff = fusion_op_bytes.get(callee)
+        if eff is not None:
+            return result + _effective_fusion_operands(operands, eff)
+    return result + sum(operands)
+
+
+def _effective_fusion_operands(operands, eff) -> int:
+    """eff: {param_index: slice_bytes or None(full)} from the callee scan."""
+    total = 0
+    for i, b in enumerate(operands):
+        cap = eff.get(i)
+        total += min(b, cap) if cap is not None else b
+    return total
+
+
+def _fusion_param_effects(comps, types):
+    """For every fused computation: param index -> slice bytes if the param
+    is consumed ONLY by dynamic-slice ops inside (else None = full cost)."""
+    out = {}
+    for cname, ops in comps.items():
+        params = {}
+        for op in ops:
+            if op.opcode == "parameter":
+                m = re.match(r"(\d+)\)", op.rest)
+                if m:
+                    params[op.name] = int(m.group(1))
+        if not params:
+            continue
+        slice_bytes = {}
+        full = set()
+        for op in ops:
+            if op.opcode == "parameter":
+                continue
+            used = set(_OPERAND_RE.findall(op.rest.split("),", 1)[0]))
+            for pname, pidx in params.items():
+                if pname in used:
+                    if op.opcode == "dynamic-slice":
+                        slice_bytes[pidx] = slice_bytes.get(pidx, 0) + \
+                            _type_bytes_all(op.type_str)
+                    else:
+                        full.add(pidx)
+        eff = {pidx: (slice_bytes[pidx] if pidx in slice_bytes and
+                      pidx not in full else None)
+               for pname, pidx in params.items()}
+        if any(v is not None for v in eff.values()):
+            out[cname] = eff
+    return out
+
+
+def _fusion_callee(op: Op) -> str | None:
+    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    return m.group(1) if m else None
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, types, entry = parse_module(text)
+
+    # --- control-flow multipliers -----------------------------------------
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    # fused computations get their caller's multiplier for dot-hunting
+    fusion_edges = []   # (caller, callee)
+    control_edges = []  # (caller, callee, factor)
+
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                for role in ("condition", "body"):
+                    mr = re.search(role + r"=%?([\w.\-]+)", op.rest)
+                    if mr:
+                        control_edges.append((cname, mr.group(1), float(trip)))
+            elif op.opcode == "conditional":
+                for mr in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      op.rest):
+                    blob = mr.group(1) or mr.group(2) or ""
+                    for b in _OPERAND_RE.finditer(blob):
+                        control_edges.append((cname, b.group(1), 1.0))
+            elif op.opcode == "call":
+                mr = re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+                if mr:
+                    control_edges.append((cname, mr.group(1), 1.0))
+            elif op.opcode == "fusion" or "calls=" in op.rest:
+                mr = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if mr:
+                    fusion_edges.append((cname, mr.group(1)))
+
+    # propagate multipliers (graph is a DAG of computations)
+    changed = True
+    passes = 0
+    while changed and passes < 100:
+        changed = False
+        passes += 1
+        for caller, callee, factor in control_edges:
+            want = mult[caller] * factor
+            if callee in comps and mult[callee] < want:
+                mult[callee] = want
+                changed = True
+        for caller, callee in fusion_edges:
+            want = mult[caller]
+            if callee in comps and mult[callee] < want:
+                mult[callee] = want
+                changed = True
+
+    control_comps = {entry}
+    for _, callee, _ in control_edges:
+        control_comps.add(callee)
+    fused_comps = {callee for _, callee in fusion_edges}
+    # a computation used only via fusion is not a traffic site
+    traffic_comps = control_comps - (fused_comps - control_comps)
+
+    # fused computations rooted in a dynamic-update-slice behave in-place
+    # (scheduled HLO lists the root last; a trailing convert wrapped around
+    # a DUS is the CPU bf16-upcast artifact — still in-place on TPU)
+    dus_roots = set()
+    convert_comps = set()
+    _PURE = {"parameter", "convert", "bitcast", "constant", "tuple",
+             "get-tuple-element"}
+    for cname, ops in comps.items():
+        if not ops:
+            continue
+        last = ops[-1].opcode
+        has_dus = any(o.opcode == "dynamic-update-slice" for o in ops)
+        if last == "dynamic-update-slice" or (last == "convert" and has_dus):
+            dus_roots.add(cname)
+        if all(o.opcode in _PURE for o in ops):
+            # pure dtype-convert plumbing: exists only because XLA:CPU
+            # upcasts bf16 dot operands; native-bf16 TPU has no such op
+            convert_comps.add(cname)
+    fusion_op_bytes = _fusion_param_effects(comps, types)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    coll_counts = defaultdict(float)
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        count_traffic = cname in traffic_comps
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, types)
+            if count_traffic:
+                base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+                if op.opcode.endswith("-done"):
+                    continue
+                if base in _COLLECTIVES:
+                    b = _type_bytes_all(op.type_str)
+                    coll[base] += m * b
+                    coll_counts[base] += m
+                    hbm += m * b
+                elif op.opcode == "convert":
+                    pass  # CPU bf16-dot upcast plumbing; free on TPU target
+                elif (op.opcode == "fusion"
+                      and _fusion_callee(op) in convert_comps):
+                    pass
+                elif op.opcode not in _FREE_OPS:
+                    hbm += m * _op_traffic(op, types, dus_roots,
+                                           fusion_op_bytes)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": {k: v for k, v in coll.items()},
+        "collective_counts": {k: v for k, v in coll_counts.items()},
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,71 @@
+"""Re-run the roofline analyzer over saved (compressed) HLO — no recompile.
+
+    PYTHONPATH=src python -m repro.roofline.reanalyze [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import zstandard
+
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.roofline.hlo_stats import analyze_hlo
+
+
+def reanalyze_cell(json_path: Path) -> dict | None:
+    rec = json.loads(json_path.read_text())
+    if rec.get("skipped"):
+        return rec
+    hlo_path = json_path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = json_path.parent / (json_path.stem + ".hlo.zst")
+    if not hlo_path.exists():
+        return None
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()).decode()
+    st = analyze_hlo(text)
+    chips = rec["chips"]
+    terms = {
+        "compute": st["flops"] / PEAK_FLOPS,
+        "memory": st["hbm_bytes"] / HBM_BW,
+        "collective": st["collective_bytes"] / LINK_BW,
+    }
+    bound = max(terms.values())
+    ideal = (rec["model_flops"] / chips) / PEAK_FLOPS
+    rec.update({
+        "per_device": {"flops": st["flops"], "bytes": st["hbm_bytes"],
+                       "collective_bytes": st["collective_bytes"]},
+        "totals": {k: v * chips for k, v in
+                   [("flops", st["flops"]), ("bytes", st["hbm_bytes"]),
+                    ("collective_bytes", st["collective_bytes"])]},
+        "collectives": st["collectives"],
+        "terms_seconds": terms,
+        "dominant": max(terms, key=terms.get),
+        "useful_flop_ratio": (rec["model_flops"] / (st["flops"] * chips)
+                              if st["flops"] else 0.0),
+        "roofline_fraction": ideal / bound if bound > 0 else 0.0,
+    })
+    json_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for f in sorted(Path(args.dir).glob("*.json")):
+        r = reanalyze_cell(f)
+        if r is not None and not r.get("skipped"):
+            t = r["terms_seconds"]
+            print(f"{r['cell']:46s} comp={t['compute']*1e3:8.1f}ms "
+                  f"mem={t['memory']*1e3:9.1f}ms coll={t['collective']*1e3:9.1f}ms "
+                  f"{r['dominant'][:6]} frac={r['roofline_fraction']:.3f}")
+            n += 1
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Serving substrate: paged KV pool, multi-step-LRU prefix cache, engine."""

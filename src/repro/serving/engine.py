@@ -1,0 +1,267 @@
+"""Continuous-batching serve engine with multi-step-LRU prefix reuse.
+
+Flow per request (attention-family archs):
+  1. chunk-hash the prompt; probe the PrefixCache for the longest cached
+     prefix chain;
+  2. gather those pages from the PagedKVPool straight into the request
+     slot's contiguous KV cache (a device-side copy — skips that many
+     tokens of prefill compute);
+  3. run *continuation prefill* on the remaining tokens (chunked attention
+     with q_offset, RoPE at absolute positions — cached pages are position-
+     consistent by the prefix property);
+  4. write the new chunks' KV into freshly allocated pages and insert them
+     into the prefix cache (evicted pages recycle to the pool);
+  5. decode with the jit'd serve step, one token per engine tick for every
+     active slot (continuous batching: retired slots refill immediately).
+
+SSM/hybrid archs skip prefix reuse (their state is not prefix-separable);
+the engine still serves them via model.prefill + decode_step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.models import attention as attn_mod
+from repro.models.model import Model
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache, chunk_chain_hashes
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (n,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pinned_pages: list = dataclasses.field(default_factory=list)
+    prefill_skipped: int = 0
+    prefill_computed: int = 0
+
+
+def continuation_prefill(cfg: ArchConfig, params, tokens, kv_prefix, prefix_len):
+    """Prefill `tokens` (B=1, S_rest) on top of an existing KV prefix.
+
+    kv_prefix: (k, v) each (L, 1, prefix_len, KVH, Dh) or None.
+    Returns (logits_last (V,), new_k, new_v (L, 1, S_rest, KVH, Dh)).
+    Only for mixer == 'attn' decoder archs.
+    """
+    from repro.models.model import _embed, _final, _logits_fn
+    import jax.numpy as jnp
+
+    b, s = tokens.shape
+    h = _embed(cfg, params, tokens)
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.thetas(), jnp.float32)
+    positions = prefix_len + jnp.arange(s)[None, :]
+
+    def body(carry, xs):
+        hh, aux = carry
+        p_l, w_l, t_l, kp_l, vp_l = xs
+        x = tfm._norm(cfg, p_l["ln1"], hh)
+        q, k, v = attn_mod._project_qkv(
+            p_l["attn"], x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            positions, cfg.rope_kind, t_l)
+        k_full = jnp.concatenate([kp_l, k], axis=1) if kp_l is not None else k
+        v_full = jnp.concatenate([vp_l, v], axis=1) if vp_l is not None else v
+        ctx = attn_mod.chunked_attention(
+            q, k_full, v_full, causal=True, window=w_l, softcap=cfg.softcap,
+            chunk=cfg.attn_chunk, q_offset=prefix_len)
+        a_out = jnp.einsum("bsh,hd->bsd",
+                           ctx.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                           p_l["attn"]["wo"])
+        if cfg.parallel_block:
+            f_out, aux = tfm._ffn_apply(cfg, p_l, x, aux)
+            hh = hh + a_out + f_out
+        else:
+            hh = hh + a_out
+            if cfg.ffn != "none":
+                f_out, aux = tfm._ffn_apply(cfg, p_l, tfm._norm(cfg, p_l["ln2"], hh), aux)
+                hh = hh + f_out
+        return (hh, aux), (k, v)
+
+    from repro.models.model import _aux0
+    kp = vp = None
+    if kv_prefix is not None:
+        kp, vp = kv_prefix
+    xs = (params["blocks"], windows, thetas, kp, vp)
+    if kv_prefix is None:
+        # scan without prefix KV slices
+        def body0(carry, xs0):
+            p_l, w_l, t_l = xs0
+            return body(carry, (p_l, w_l, t_l, None, None))
+        (h, _), kv = jax.lax.scan(body0, (h, _aux0()),
+                                  (params["blocks"], windows, thetas))
+    else:
+        (h, _), kv = jax.lax.scan(body, (h, _aux0()), xs)
+    h = _final(cfg, params, h)
+    logits = _logits_fn(cfg, params)(h[:, -1])
+    return logits[0], kv[0], kv[1]
+
+
+class ServeEngine:
+    """Host-side continuous batching driver around the jit'd decode step."""
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 512, prefix_cache: PrefixCache | None = None,
+                 pool: PagedKVPool | None = None, eos_token: int = -1):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.prefix_cache = prefix_cache
+        self.pool = pool
+        self.use_prefix = (prefix_cache is not None and pool is not None
+                           and self.cfg.mixer == "attn" and not self.cfg.enc_dec
+                           and self.cfg.meta_tokens == 0)
+        self.cache = model.init_cache(slots, max_len)
+        self.cur_len = np.zeros(slots, np.int32)
+        self.active: dict[int, Request] = {}
+        self._free_slots = list(range(slots))
+        self._decode = jax.jit(model.decode_step)
+        self._prefill1 = jax.jit(
+            lambda p, t, pk, pv, plen: continuation_prefill(
+                self.cfg, p, t, (pk, pv), plen),
+            static_argnames=("plen",)) if self.use_prefix else None
+        self._prefill0 = jax.jit(
+            lambda p, t: continuation_prefill(self.cfg, p, t, None, 0)
+        ) if self.use_prefix else None
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self, req: Request):
+        slot = self._free_slots.pop()
+        req.slot = slot
+        ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
+
+        if self.use_prefix and len(req.prompt) >= ct:
+            chain = chunk_chain_hashes(req.prompt, ct)
+            pages = self.prefix_cache.lookup_chain(chain)
+            plen = len(pages) * ct
+            req.prefill_skipped = plen
+            if pages:
+                for pg in pages:
+                    self.pool.pin(pg)
+                    req.pinned_pages.append(pg)
+                pk, pv = self.pool.gather_pages(np.array(pages))
+                pk, pv = pk[:, None], pv[:, None]              # (L,1,plen,..)
+            else:
+                pk = pv = None
+            rest = jnp.asarray(req.prompt[plen:][None], jnp.int32)
+            req.prefill_computed = rest.shape[1]
+            if pk is not None:
+                logits, nk, nv = self._prefill1(self.params, rest, pk, pv, plen)
+            else:
+                logits, nk, nv = self._prefill0(self.params, rest)
+            # write slot cache: prefix pages + fresh kv
+            k_all = jnp.concatenate([pk, nk], axis=2) if pk is not None else nk
+            v_all = jnp.concatenate([pv, nv], axis=2) if pv is not None else nv
+            total = k_all.shape[2]
+            self.cache["k"] = self.cache["k"].at[:, slot, :total].set(k_all[:, 0])
+            self.cache["v"] = self.cache["v"].at[:, slot, :total].set(v_all[:, 0])
+            # publish the new chunks' pages
+            new_full_chunks = (plen + req.prefill_computed) // ct - len(pages)
+            if new_full_chunks > 0:
+                new_pages = []
+                for _ in range(new_full_chunks):
+                    pg = self.pool.alloc()
+                    if pg is None:
+                        break
+                    new_pages.append(pg)
+                if new_pages:
+                    npg = len(new_pages)
+                    koff = plen
+                    kc = nk[:, 0, : npg * ct].reshape(
+                        self.cfg.n_layers, npg, ct, self.cfg.n_kv_heads,
+                        self.cfg.head_dim)
+                    vc = nv[:, 0, : npg * ct].reshape(
+                        self.cfg.n_layers, npg, ct, self.cfg.n_kv_heads,
+                        self.cfg.head_dim)
+                    self.pool.write_pages(np.array(new_pages), kc, vc)
+                    evicted = self.prefix_cache.insert_chain(
+                        chain[len(pages): len(pages) + npg], new_pages)
+                    for pg in evicted:
+                        self.pool.release(pg)
+            self.cur_len[slot] = len(req.prompt)
+            first_tok = int(jnp.argmax(logits))
+        else:
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            logits, pc = jax.jit(self.model.prefill)(self.params, batch)
+            self._install_prefill(slot, pc)
+            req.prefill_computed = len(req.prompt)
+            self.cur_len[slot] = len(req.prompt)
+            first_tok = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(first_tok)
+        self.active[req.rid] = req
+
+    def _install_prefill(self, slot, pc):
+        """Copy a model.prefill cache (batch=1 semantics) into `slot`."""
+        cache = self.cache
+        if "k" in cache and "k" in pc:
+            s = pc["k"].shape[2]
+            cache["k"] = cache["k"].at[:, slot, :s].set(pc["k"][:, 0])
+            cache["v"] = cache["v"].at[:, slot, :s].set(pc["v"][:, 0])
+        if "mamba" in cache:
+            cache["mamba"] = jax.tree.map(
+                lambda c, p: c.at[:, slot].set(p[:, 0]), cache["mamba"], pc["mamba"])
+        if "xk" in cache:
+            cache["xk"] = cache["xk"].at[:, slot].set(pc["xk"][:, 0])
+            cache["xv"] = cache["xv"].at[:, slot].set(pc["xv"][:, 0])
+        self.cache = cache
+
+    # -- main loop -------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit, decode one token for all active slots."""
+        while self.queue and self._free_slots:
+            self._admit(self.queue.pop(0))
+        if not self.active:
+            return
+        # decode uses a single cur_len: engine ticks groups of equal length;
+        # for simplicity all slots share max(cur_len of active) semantics by
+        # decoding each active slot's token at its own position via masking —
+        # here we step slots whose cur_len equals the minimum (round-robin).
+        lens = {r.slot: self.cur_len[r.slot] for r in self.active.values()}
+        cur = int(min(lens.values()))
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for r in self.active.values():
+            tokens[r.slot, 0] = r.out_tokens[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        done = []
+        for r in self.active.values():
+            if self.cur_len[r.slot] == cur:
+                tok = int(nxt[r.slot])
+                r.out_tokens.append(tok)
+                self.cur_len[r.slot] += 1
+                if (len(r.out_tokens) >= r.max_new_tokens
+                        or tok == self.eos
+                        or self.cur_len[r.slot] >= self.max_len - 1):
+                    done.append(r.rid)
+        for rid in done:
+            r = self.active.pop(rid)
+            for pg in r.pinned_pages:
+                self.pool.unpin(pg)
+            self._free_slots.append(r.slot)
+            self.finished.append(r)
+
+    def run_until_done(self, max_ticks: int = 10000):
+        t = 0
+        while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return t

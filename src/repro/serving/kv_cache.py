@@ -1,0 +1,83 @@
+"""Paged KV storage: a fixed pool of pages holding prefix-chunk KV.
+
+A page stores the K/V of ``page_tokens`` consecutive tokens for every layer
+(RoPE already applied, so a page is reusable by any request sharing the
+same absolute-position prefix — the prefix property).  The pool is a device
+array; page allocation/refcounting is host-side (numpy), mirroring how
+real engines (vLLM) split device storage from host bookkeeping.
+
+Eviction policy is NOT here: the pool only allocs/frees.  The multi-step
+LRU prefix cache (prefix_cache.py) decides which page to reuse or evict —
+with zero per-page recency metadata, which is the paper's point.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class PagedKVPool:
+    """Device storage (L, n_pages, page_tokens, KVH, Dh) ×2 + host free list."""
+
+    def __init__(self, cfg, n_pages: int, page_tokens: int = 64,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        shape = (cfg.n_layers, n_pages, page_tokens, cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._free = list(range(n_pages - 1, -1, -1))
+        self.refcount = np.zeros(n_pages, np.int32)
+        self._deferred_free: set = set()
+
+    # -- host bookkeeping ----------------------------------------------------
+    def alloc(self) -> int | None:
+        if not self._free:
+            return None
+        p = self._free.pop()
+        self.refcount[p] = 1
+        return p
+
+    def pin(self, page: int) -> None:
+        self.refcount[page] += 1
+
+    def unpin(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] <= 0 and page in self._deferred_free:
+            self._deferred_free.discard(page)
+            self.refcount[page] = 0
+            self._free.append(page)
+
+    def release(self, page: int) -> None:
+        """Policy evicted this page; free now or defer until unpinned."""
+        self.refcount[page] -= 1
+        if self.refcount[page] <= 0:
+            self.refcount[page] = 0
+            self._free.append(page)
+        else:
+            self._deferred_free.add(page)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    # -- device ops ------------------------------------------------------------
+    def write_pages(self, pages: np.ndarray, k_chunks, v_chunks) -> None:
+        """k/v_chunks (L, n, page_tokens, KVH, Dh) -> pool rows ``pages``."""
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k = self.k.at[:, idx].set(k_chunks.astype(self.k.dtype))
+        self.v = self.v.at[:, idx].set(v_chunks.astype(self.v.dtype))
+
+    def gather_pages(self, pages: np.ndarray):
+        """pages (n,) -> (L, n*page_tokens, KVH, Dh) contiguous K and V."""
+        idx = jnp.asarray(pages, jnp.int32)
+        l = self.cfg.n_layers
+        k = jnp.take(self.k, idx, axis=1)
+        v = jnp.take(self.v, idx, axis=1)
+        n = len(pages)
+        pt = self.page_tokens
+        return (k.reshape(l, n * pt, *k.shape[3:]),
+                v.reshape(l, n * pt, *v.shape[3:]))

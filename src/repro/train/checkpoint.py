@@ -1,0 +1,157 @@
+"""Sharded, atomic, reshardable checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<N>/
+             manifest.json          — pytree structure, shapes, dtypes, step
+             shard_<host>.npz       — this host's param/opt leaves (flat keys)
+         <dir>/LATEST               — atomically-renamed pointer file
+
+Fault-tolerance contract:
+  * writes go to step_<N>.tmp/ then os.replace -> step_<N>/ (atomic on POSIX),
+    LATEST is rewritten last, so a crash mid-save never corrupts the
+    restore path;
+  * ``save_async`` runs serialization on a background thread (device->host
+    copy happens on the caller's thread so training can donate buffers);
+  * **reshard-on-load**: leaves are saved as full (host-local) numpy arrays
+    keyed by pytree path; ``restore`` places them onto ANY mesh/sharding —
+    elastic restarts across different pod counts reuse the same checkpoint.
+
+Multi-host note: on a real cluster each host saves only the addressable
+shards of its arrays (jax.experimental.multihost_utils); this container is
+single-host so shard_0 carries everything.  The manifest format already
+records global shapes so the multi-host writer is a drop-in.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import ml_dtypes
+import jax
+
+# numpy can't savez/load extension dtypes; store them as same-width uints
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[name][1]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name][0])
+    return arr
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree, extra: dict | None = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    tmp.mkdir(exist_ok=True)
+
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a, name = _to_storable(np.asarray(jax.device_get(v)))
+        arrays[k] = a
+        dtypes[k] = name
+    np.savez(tmp / "shard_0.npz", **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": {k: {"shape": list(v.shape), "dtype": dtypes[k]}
+                 for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    latest_tmp = ckpt_dir / "LATEST.tmp"
+    latest_tmp.write_text(str(step))
+    os.replace(latest_tmp, ckpt_dir / "LATEST")
+    return final
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; at most one outstanding save."""
+
+    def __init__(self, ckpt_dir: str | Path):
+        self.ckpt_dir = Path(ckpt_dir)
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore(ckpt_dir: str | Path, tree_template, step: int | None = None,
+            shardings=None):
+    """Load into the template's structure; place per ``shardings`` if given.
+
+    The template supplies the pytree structure; arrays are validated against
+    the manifest and device_put with the target sharding (resharding happens
+    here — the mesh may differ from the one that saved).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step}"
+    data = np.load(d / "shard_0.npz")
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_t = _flatten(tree_template)
+    flat_s = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key, leaf in flat_t.items():
+        arr = _from_storable(data[key], manifest["keys"][key]["dtype"])
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if key in flat_s:
+            out[key] = jax.device_put(arr.astype(leaf.dtype), flat_s[key])
+        else:
+            out[key] = jax.device_put(arr.astype(leaf.dtype))
+    # rebuild tree
+    treedef = jax.tree_util.tree_structure(tree_template)
+    keys = list(_flatten(tree_template).keys())
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys]), step

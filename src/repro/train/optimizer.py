@@ -1,0 +1,72 @@
+"""AdamW on raw pytrees with mixed-precision master weights.
+
+Memory layout per parameter (the production picture, 16 B/param):
+    bf16 params (compute) + f32 master + f32 m + f32 v
+Optimizer states carry the same sharding as their parameter (and the
+trainer additionally ZeRO-1 shards them over 'data' — see steps.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray       # () int32
+    master: dict            # f32 copy of params
+    m: dict                 # f32 first moment
+    v: dict                 # f32 second moment
+
+
+def adamw_init(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt: OptState, params, *, lr_fn, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_opt_state, stats).  ``params`` supplies the
+    compute dtypes the new master weights are cast back to."""
+    step = opt.step + 1
+    lr = lr_fn(step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt.v, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(master, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return master - lr * (u + weight_decay * master)
+
+    master = jax.tree.map(upd, opt.master, m, v)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, OptState(step, master, m, v), {"grad_norm": gn, "lr": lr}

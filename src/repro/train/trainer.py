@@ -1,0 +1,71 @@
+"""Training loop: step bundle + data + checkpoint + fault-tolerance hooks."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import StepBundle
+from repro.train import checkpoint as ckpt_mod
+from repro.train import optimizer as opt_mod
+
+
+class Trainer:
+    def __init__(self, model, bundle: StepBundle, *, ckpt_dir: str | None = None,
+                 ckpt_every: int = 100, seed: int = 0):
+        self.model = model
+        self.bundle = bundle
+        self.ckpt_dir = Path(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.async_ckpt = (ckpt_mod.AsyncCheckpointer(self.ckpt_dir)
+                           if self.ckpt_dir else None)
+        self.seed = seed
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.history: list[dict] = []
+
+    def init_state(self, resume: bool = True):
+        params_shape, opt_shape, _ = self.bundle.abstract_args
+        p_shard, o_shard, _ = self.bundle.in_shardings
+        if resume and self.ckpt_dir and ckpt_mod.latest_step(self.ckpt_dir) is not None:
+            state, step = ckpt_mod.restore(
+                self.ckpt_dir, {"params": params_shape, "opt": opt_shape},
+                shardings={"params": p_shard, "opt": o_shard})
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = step
+            return "resumed"
+        key = jax.random.PRNGKey(self.seed)
+        self.params = jax.jit(self.model.init, out_shardings=p_shard)(key)
+        self.opt_state = jax.jit(opt_mod.adamw_init, out_shardings=o_shard)(self.params)
+        return "fresh"
+
+    def run(self, data: SyntheticLM, n_steps: int, log_every: int = 10):
+        t_last = time.time()
+        for _ in range(n_steps):
+            batch = data.batch(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self.bundle.fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if self.step % log_every == 0 or self.step == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t_last
+                t_last = time.time()
+                m.update(step=self.step, sec_per_step=dt / log_every)
+                self.history.append(m)
+                print(f"step {self.step:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}")
+            if self.async_ckpt and self.step % self.ckpt_every == 0:
+                self.async_ckpt.save(
+                    self.step, {"params": self.params, "opt": self.opt_state})
+        if self.async_ckpt:
+            self.async_ckpt.save(
+                self.step, {"params": self.params, "opt": self.opt_state})
+            self.async_ckpt.wait()
+        return self.history

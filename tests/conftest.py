@@ -1,0 +1,8 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see the real single device; only dryrun.py gets 512.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

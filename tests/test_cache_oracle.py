@@ -1,0 +1,114 @@
+"""Property tests: JAX cache engines == pure-Python oracle, bit for bit."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MSLRUConfig, MultiStepLRUCache, init_table,
+                        make_batched_engine)
+from repro.core.policies import MultiStepLRUOracle
+
+GEOMS = [(8, 2, 4), (4, 1, 4), (16, 4, 2), (8, 2, 8), (32, 8, 4)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    geom=st.sampled_from(GEOMS),
+    policy=st.sampled_from(["multistep", "set_lru"]),
+    data=st.data(),
+)
+def test_sequential_matches_oracle(geom, policy, data):
+    s, m, p = geom
+    n = data.draw(st.integers(50, 300))
+    key_range = data.draw(st.integers(5, 400))
+    keys = data.draw(st.lists(st.integers(1, key_range),
+                              min_size=n, max_size=n))
+    keys = np.asarray(keys, np.int32)
+    cfg = MSLRUConfig(num_sets=s, m=m, p=p, value_planes=1, policy=policy)
+    cache = MultiStepLRUCache(cfg)
+    oracle = MultiStepLRUOracle(s, m, p, policy=policy)
+    out = cache.access_seq(keys, vals=keys[:, None])
+    jh, jp = np.asarray(out.hit), np.asarray(out.pos)
+    for i, k in enumerate(keys):
+        h, pos, _ = oracle.access(int(k), int(k))
+        assert bool(jh[i]) == h, f"hit mismatch at {i}"
+        assert int(jp[i]) == pos, f"pos mismatch at {i}"
+    assert (np.asarray(cache.table[:, :, 0]).astype(np.int64)
+            == oracle.dump_keys()).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    geom=st.sampled_from(GEOMS[:3]),
+    batch=st.sampled_from([16, 64, 256]),
+    data=st.data(),
+)
+def test_batched_engine_exact(geom, batch, data):
+    """Batched engine (rounds conflict serialization) == sequential."""
+    s, m, p = geom
+    key_range = data.draw(st.integers(10, 500))
+    n = batch * 4
+    keys = np.asarray(
+        data.draw(st.lists(st.integers(1, key_range), min_size=n, max_size=n)),
+        np.int32)
+    cfg = MSLRUConfig(num_sets=s, m=m, p=p, value_planes=1)
+    c_seq = MultiStepLRUCache(cfg)
+    out = c_seq.access_seq(keys, vals=keys[:, None])
+    run = make_batched_engine(cfg)
+    tbl = init_table(cfg)
+    hits = []
+    for i in range(0, n, batch):
+        tbl, res = run(tbl, jnp.asarray(keys[i:i+batch, None]),
+                       jnp.asarray(keys[i:i+batch, None]))
+        hits.append(np.asarray(res.hit))
+    assert (np.concatenate(hits) == np.asarray(out.hit)).all()
+    assert (np.asarray(tbl) == np.asarray(c_seq.table)).all()
+
+
+def test_delete_invalidates():
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    cache = MultiStepLRUCache(cfg)
+    cache.access_seq(np.array([5, 6, 7], np.int32))
+    out = cache.access_seq(np.array([5, 5], np.int32),
+                           ops=np.array([2, 1], np.int32))  # DELETE, GET
+    assert bool(out.hit[0]) and not bool(out.hit[1])
+    oracle = MultiStepLRUOracle(8, 2, 4)
+    for k in (5, 6, 7):
+        oracle.access(k)
+    assert oracle.delete(5) and not oracle.get(5)[0]
+
+
+def test_values_roundtrip():
+    cfg = MSLRUConfig(num_sets=16, m=2, p=4, value_planes=2)
+    cache = MultiStepLRUCache(cfg)
+    keys = np.arange(1, 33, dtype=np.int32)
+    vals = np.stack([keys * 10, keys * 100], -1).astype(np.int32)
+    cache.access_seq(keys, vals=vals)
+    out = cache.access_seq(keys, ops=np.full(32, 1, np.int32))  # GET
+    hit = np.asarray(out.hit)
+    got = np.asarray(out.value)
+    assert (got[hit, 0] == keys[hit] * 10).all()
+    assert (got[hit, 1] == keys[hit] * 100).all()
+
+
+def test_eviction_reports_victim():
+    # capacity 8 (1 set), 9 distinct inserts -> exactly one real eviction
+    cfg = MSLRUConfig(num_sets=1, m=2, p=4, value_planes=1)
+    cache = MultiStepLRUCache(cfg)
+    out = cache.access_seq(np.arange(1, 10, dtype=np.int32),
+                           vals=np.arange(1, 10, dtype=np.int32)[:, None])
+    ev = np.asarray(out.evicted_valid)
+    assert ev.sum() == 1 and ev[-1]
+    assert int(out.evicted_key[-1, 0]) == 1  # the set-LRU victim (first key)
+
+
+def test_key64_dual_plane():
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, key_planes=2, value_planes=1)
+    cache = MultiStepLRUCache(cfg)
+    # two keys sharing the low plane but different high plane must not alias
+    keys = np.array([[1, 100], [2, 100], [1, 200]], np.int32)
+    cache.access(keys, np.array([[7], [8], [9]], np.int32))
+    out = cache.access(keys)
+    assert np.asarray(out.hit).all()
+    assert (np.asarray(out.value)[:, 0] == [7, 8, 9]).all()

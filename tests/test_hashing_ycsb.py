@@ -1,0 +1,69 @@
+"""Hashing parity (JAX vs Python vs reference vectors) + workload shapes."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.policies import fmix32_py
+from repro.data.ycsb import latest, make_workload, scan, zipfian
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_fmix32_jax_matches_python(x):
+    j = int(np.asarray(hashing.fmix32(jnp.uint32(x))))
+    assert j == fmix32_py(x)
+
+
+def test_fmix32_reference_vectors():
+    # reference values from the canonical MurmurHash3 fmix32
+    assert fmix32_py(0) == 0
+    assert fmix32_py(1) == 0x514E28B7
+    assert fmix32_py(0xFFFFFFFF) == 0x81F16F39
+
+
+def test_fmix64_planes_reference():
+    # fmix64(1) = 0xB456BCFC34C2CB2C
+    hi, lo = hashing.fmix64_planes(jnp.uint32(0), jnp.uint32(1))
+    val = (int(np.asarray(hi)) << 32) | int(np.asarray(lo))
+    assert val == 0xB456BCFC34C2CB2C
+
+
+def test_set_index_range():
+    keys = jnp.arange(1, 1001, dtype=jnp.int32)
+    s = np.asarray(hashing.set_index(keys, 64))
+    assert s.min() >= 0 and s.max() < 64
+    # roughly uniform
+    counts = np.bincount(s, minlength=64)
+    assert counts.max() < 4 * counts.mean()
+
+
+def test_workloads_basic():
+    for name in ("zipfian", "latest", "scan"):
+        k = make_workload(name, 10_000, 50_000, 0.99, seed=1)
+        assert k.dtype == np.int32 and len(k) == 50_000
+        assert k.min() >= 1
+
+
+def test_zipfian_skew():
+    k = zipfian(100_000, 200_000, alpha=0.99, seed=2)
+    _, counts = np.unique(k, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[0] / len(k) > 0.02          # hot keys exist
+    k_flat = zipfian(100_000, 200_000, alpha=0.2, seed=2)
+    _, c2 = np.unique(k_flat, return_counts=True)
+    assert np.sort(c2)[::-1][0] < top[0]   # lower alpha -> flatter
+
+
+def test_latest_drifts():
+    k = latest(10_000, 100_000, seed=3)
+    early = set(k[:10_000].tolist())
+    late = set(k[-10_000:].tolist())
+    assert len(late - early) > 100          # new keys appear over time
+
+
+def test_scan_has_runs():
+    k = scan(100_000, 50_000, seed=4)
+    sequential = np.sum(k[1:] == k[:-1] + 1)
+    assert sequential > 20_000              # majority of accesses are run continuations

@@ -1,0 +1,81 @@
+"""Pallas kernel vs pure-jnp oracle: exhaustive geometry/dtype sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MSLRUConfig
+from repro.core.invector import EMPTY_KEY
+from repro.kernels.msl_cache import msl_access_kernel_call
+from repro.kernels.ref import msl_access_ref
+
+GEOMS = [
+    (2, 4, 1, 2, "multistep"),
+    (1, 4, 1, 1, "multistep"),
+    (4, 2, 2, 2, "multistep"),
+    (2, 8, 1, 0, "multistep"),
+    (1, 8, 1, 2, "multistep"),
+    (2, 4, 1, 2, "set_lru"),
+    (8, 4, 2, 3, "multistep"),
+]
+
+
+def _random_case(rng, m, p, kp, v, b=257):
+    a = m * p
+    c = kp + v
+    tbl = np.zeros((b, a, c), np.int32)
+    for i in range(b):
+        ks = rng.choice(np.arange(1, 100000), size=a, replace=False)
+        empty = rng.random(a) < 0.25
+        tbl[i, :, 0] = np.where(empty, EMPTY_KEY, ks)
+        if c > 1:
+            tbl[i, :, 1:] = rng.integers(-1000, 1000, (a, c - 1))
+    qk = np.zeros((b, kp), np.int32)
+    for i in range(b):
+        if rng.random() < 0.5:
+            valid = np.nonzero(tbl[i, :, 0] != EMPTY_KEY)[0]
+            if len(valid):
+                j = rng.choice(valid)
+                qk[i] = tbl[i, j, :kp]
+                continue
+        qk[i, 0] = rng.integers(200000, 300000)
+        if kp > 1:
+            qk[i, 1] = rng.integers(0, 50)
+    qv = rng.integers(-500, 500, (b, v)).astype(np.int32)
+    return tbl, qk, qv
+
+
+@pytest.mark.parametrize("m,p,kp,v,policy", GEOMS)
+@pytest.mark.parametrize("block_b", [64, 257])
+def test_kernel_matches_ref(m, p, kp, v, policy, block_b):
+    rng = np.random.default_rng(m * 100 + p * 10 + kp + v)
+    cfg = MSLRUConfig(num_sets=64, m=m, p=p, key_planes=kp, value_planes=v,
+                      policy=policy)
+    tbl, qk, qv = _random_case(rng, m, p, kp, v)
+    ref = msl_access_ref(jnp.asarray(tbl), jnp.asarray(qk), jnp.asarray(qv), cfg)
+    ker = msl_access_kernel_call(jnp.asarray(tbl), jnp.asarray(qk),
+                                 jnp.asarray(qv), cfg=cfg, block_b=block_b,
+                                 interpret=True)
+    names = ["rows", "hit", "pos", "value", "evicted"]
+    for name, r, k in zip(names, ref, ker):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(k),
+                                      err_msg=f"{name} mismatch")
+
+
+def test_kernel_engine_end_to_end():
+    from repro.core import MultiStepLRUCache, init_table
+    from repro.kernels.ops import make_kernel_batched_engine
+    rng = np.random.default_rng(0)
+    cfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+    keys = rng.integers(1, 500, 1024).astype(np.int32)
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=keys[:, None])
+    eng = make_kernel_batched_engine(cfg)
+    tbl = init_table(cfg)
+    hits = []
+    for i in range(0, 1024, 128):
+        tbl, res = eng(tbl, jnp.asarray(keys[i:i+128, None]),
+                       jnp.asarray(keys[i:i+128, None]))
+        hits.append(np.asarray(res.hit))
+    assert (np.concatenate(hits) == np.asarray(out.hit)).all()
+    assert (np.asarray(tbl) == np.asarray(seq.table)).all()

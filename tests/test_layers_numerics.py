@@ -1,0 +1,99 @@
+"""Numerics: custom-vjp norms vs autodiff reference; rope; attention vs naive."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.layers import (apply_rope, layernorm, layernorm_init,
+                                 rmsnorm, rmsnorm_init)
+from repro.models.attention import chunked_attention
+
+
+def _rms_ref(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def _ln_ref(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+@pytest.mark.parametrize("fn,ref,init", [
+    (rmsnorm, _rms_ref, rmsnorm_init), (layernorm, _ln_ref, layernorm_init)])
+def test_norm_custom_vjp_matches_autodiff(fn, ref, init):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 64), jnp.float32)
+    p = init(64)
+    np.testing.assert_allclose(np.asarray(fn(p, x)), np.asarray(ref(p, x)),
+                               rtol=3e-5, atol=3e-5)
+    g1 = jax.grad(lambda xx: jnp.sum(jnp.sin(fn(p, xx))))(x)
+    g2 = jax.grad(lambda xx: jnp.sum(jnp.sin(ref(p, xx))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-4)
+    gp1 = jax.grad(lambda pp: jnp.sum(jnp.sin(fn(pp, x))))(p)
+    gp2 = jax.grad(lambda pp: jnp.sum(jnp.sin(ref(pp, x))))(p)
+    for k in gp1:
+        np.testing.assert_allclose(np.asarray(gp1[k]), np.asarray(gp2[k]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_rope_orthogonality():
+    """RoPE preserves norms and relative-position inner products."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 32), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-4)
+    # shift equivariance: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 32), jnp.float32)
+    def ip(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 1e4)
+        kj = apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(ip(3, 1) - ip(7, 5)) < 1e-3
+
+
+def _naive_attn(q, k, v, causal=True, window=None):
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * dh ** -0.5
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+    if window:
+        mask &= (jnp.arange(sq)[:, None] - jnp.arange(k.shape[1])[None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.moveaxis(jnp.einsum("bhqk,bkhd->bhqd", p, vv), 1, 2)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("kvh", [4, 1])
+def test_chunked_attention_matches_naive(window, kvh):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 48, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 48, kvh, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 48, kvh, 16), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, window=window, chunk=16)
+    ref = _naive_attn(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_q_offset():
+    """Continuation prefill: q_offset slice == full-sequence slice."""
+    key = jax.random.PRNGKey(4)
+    q = jax.random.normal(key, (1, 32, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 16), jnp.float32)
+    full = chunked_attention(q, k, v, causal=True, chunk=8)
+    tail = chunked_attention(q[:, 16:], k, v, causal=True, chunk=8, q_offset=16)
+    np.testing.assert_allclose(np.asarray(full[:, 16:]), np.asarray(tail),
+                               rtol=2e-3, atol=2e-3)

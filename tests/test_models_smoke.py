@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting shapes and finite outputs (the assignment's required smokes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models.model import make_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.enc_len, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_loss(arch):
+    cfg = get_config(arch, smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    loss, metrics = jax.jit(model.loss)(params, _batch(cfg, rng))
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    assert np.isfinite(float(metrics["ce_loss"]))
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "xlstm-1.3b", "hymba-1.5b",
+                                  "olmoe-1b-7b", "whisper-medium"])
+def test_smoke_grad(arch):
+    cfg = get_config(arch, smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    g = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, _batch(cfg, rng))
+    norms = [float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+             for x in jax.tree.leaves(g)]
+    assert all(np.isfinite(n) for n in norms)
+    assert sum(norms) > 0
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "xlstm-1.3b", "hymba-1.5b",
+                                  "whisper-medium"])
+def test_smoke_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    batch = _batch(cfg, rng)
+    batch.pop("labels")
+    logits, pc = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    if cfg.mixer == "xlstm":
+        cache = pc
+    else:
+        cache = model.init_cache(B, S + 4)
+        if "k" in cache:
+            cache["k"] = cache["k"].at[:, :, :pc["k"].shape[2]].set(pc["k"])
+            cache["v"] = cache["v"].at[:, :, :pc["v"].shape[2]].set(pc["v"])
+        if "mamba" in cache:
+            cache["mamba"] = pc["mamba"]
+        if "xk" in cache:
+            cache["xk"], cache["xv"] = pc["xk"], pc["xv"]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(params, tok, cache, jnp.int32(S))
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_exact_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published dimensions."""
+    spec = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (nl, d, h, kv, ff, v), arch
+
+
+def test_moe_configs():
+    o = get_config("olmoe-1b-7b")
+    assert (o.n_experts, o.moe_top_k) == (64, 8)
+    p = get_config("phi3.5-moe-42b-a6.6b")
+    assert (p.n_experts, p.moe_top_k) == (16, 2)
+    # active < total for MoE
+    assert o.active_param_count() < o.param_count()
+
+
+def test_param_counts_in_range():
+    """Analytic param counts should be near the advertised sizes."""
+    expected = {
+        # xlstm: full-matrix mLSTM qkv projections (the official 1.3B uses
+        # per-head block-diagonal qkv; width is not pinned by the assignment)
+        "xlstm-1.3b": (1.0e9, 3.8e9),
+        "qwen2-vl-72b": (6.5e10, 8.0e10),
+        "hymba-1.5b": (1.1e9, 2.0e9),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "command-r-35b": (3.1e10, 4.0e10),
+        "gemma3-1b": (0.7e9, 1.4e9),
+        "starcoder2-7b": (6.0e9, 8.0e9),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "phi3.5-moe-42b-a6.6b": (3.7e10, 4.6e10),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"

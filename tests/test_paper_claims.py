@@ -1,0 +1,103 @@
+"""Reduced-scale validation of the paper's qualitative claims (EXPERIMENTS.md
+§Paper-validation runs the full-scale versions via benchmarks/).
+
+Claims (paper Figs. 2, 7, 11, 12):
+  C1  multistep > exact LRU           (zipfian hit ratio)
+  C2  multistep > in-vector (M=1)     (zipfian hit ratio)
+  C3  in-vector <= set-assoc exact LRU <= global exact LRU
+  C4  hit ratio increases with M, approaching ARC
+  C5  vector 0 receives the plurality of hits (upgrade concentrates heat)
+  C6  warm-up from garbage is slower for multistep than per-set exact LRU
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MSLRUConfig, init_table, make_sequential_engine
+from repro.core.policies import ARC, ExactLRU, ReuseDistanceLRU
+from repro.data.ycsb import zipfian
+
+N_KEYS = 50_000
+N_Q = 300_000
+CAP = 4096
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return zipfian(N_KEYS, N_Q, alpha=0.99, seed=42)
+
+
+def _msl_hits(trace, cap, m, p=4, policy="multistep", table=None):
+    cfg = MSLRUConfig(num_sets=cap // (m * p), m=m, p=p, value_planes=0,
+                      policy=policy)
+    eng = make_sequential_engine(cfg)
+    tbl = init_table(cfg) if table is None else table
+    _, out = eng(tbl, jnp.asarray(trace[:, None], jnp.int32),
+                 jnp.zeros((len(trace), 0), jnp.int32))
+    return np.asarray(out.hit), np.asarray(out.pos)
+
+
+@pytest.fixture(scope="module")
+def results(trace):
+    res = {}
+    for m in (1, 2, 4, 8):
+        hits, pos = _msl_hits(trace, CAP, m)
+        res[f"m{m}"] = hits.mean()
+        res[f"m{m}_pos"] = pos
+    hits, _ = _msl_hits(trace, CAP, 2, policy="set_lru")
+    res["set_lru"] = hits.mean()
+    rd = ReuseDistanceLRU(len(trace))
+    rd.feed(trace)
+    res["lru"] = rd.hit_ratio(CAP)
+    arc = ARC(CAP)
+    res["arc"] = np.mean([arc.access(int(k)) for k in trace])
+    return res
+
+
+def test_c1_multistep_beats_exact_lru(results):
+    assert results["m2"] > results["lru"]
+
+
+def test_c2_multistep_beats_invector(results):
+    assert results["m2"] > results["m1"]
+
+
+def test_c3_invector_below_set_lru_below_lru(results):
+    assert results["m1"] <= results["set_lru"] + 0.002
+    assert results["set_lru"] <= results["lru"] + 0.002
+
+
+def test_c4_hit_ratio_rises_with_m_toward_arc(results):
+    # rising from M=1 to the M=2..4 sweet spot; beyond that the paper itself
+    # reports diminishing/plateauing returns ("increasing M too much does not
+    # significantly improve the cache hit ratio")
+    assert results["m1"] < results["m2"] <= results["m4"] + 5e-3
+    assert results["m8"] >= results["m4"] - 0.01
+    assert max(results["m4"], results["m8"]) >= 0.85 * results["arc"]
+
+
+def test_c5_vector0_dominates(results):
+    pos = results["m4_pos"]
+    vec = pos[pos >= 0] // 4
+    counts = np.bincount(vec, minlength=4)
+    assert counts[0] == counts.max()
+
+
+def test_c6_warmup_penalty(trace):
+    cfg = MSLRUConfig(num_sets=CAP // 8, m=2, p=4, value_planes=0)
+    rng = np.random.default_rng(0)
+    tbl = np.asarray(init_table(cfg)).copy()
+    tbl[:, :, 0] = rng.integers(2**29, 2**30, tbl[:, :, 0].shape).astype(np.int32)
+    garbage = jnp.asarray(tbl)
+    h_ms, _ = _msl_hits(trace[:100_000], CAP, 2, table=garbage)
+
+    cfg2 = MSLRUConfig(num_sets=CAP // 8, m=2, p=4, value_planes=0,
+                       policy="set_lru")
+    tbl2 = np.asarray(init_table(cfg2)).copy()
+    tbl2[:, :, 0] = tbl[:, :, 0]
+    h_sl, _ = _msl_hits(trace[:100_000], CAP, 2, policy="set_lru",
+                        table=jnp.asarray(tbl2))
+    # early-window hit ratio: multistep ramps no faster than per-set LRU
+    w = 20_000
+    assert h_ms[:w].mean() <= h_sl[:w].mean() + 0.005

@@ -1,0 +1,74 @@
+"""Serving stack: prefix cache semantics, paged pool, engine equivalence."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import make_model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache, chunk_chain_hashes
+
+
+def test_chain_hashes_prefix_property():
+    rng = np.random.default_rng(0)
+    a = rng.integers(1, 1000, 64).astype(np.int32)
+    b = rng.integers(1, 1000, 64).astype(np.int32)
+    h_ab = chunk_chain_hashes(np.concatenate([a, b]), 32)
+    h_a = chunk_chain_hashes(a, 32)
+    assert h_ab[:2] == h_a                 # shared prefix -> shared hashes
+    c = b.copy()
+    c[0] += 1
+    h_ac = chunk_chain_hashes(np.concatenate([a, c]), 32)
+    assert h_ab[:2] == h_ac[:2] and h_ab[2] != h_ac[2]
+
+
+def test_pool_alloc_refcount():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    pool = PagedKVPool(cfg, n_pages=4, page_tokens=8)
+    pages = [pool.alloc() for _ in range(4)]
+    assert pool.alloc() is None
+    pool.pin(pages[0])
+    pool.release(pages[0])       # still pinned -> deferred
+    assert pool.free_pages == 0
+    pool.unpin(pages[0])
+    pool.unpin(pages[0])
+    assert pool.free_pages == 1
+
+
+def test_prefix_cache_evicts_to_pool():
+    pc = PrefixCache(num_sets=1, m=1, p=4, chunk_tokens=8)  # capacity 4
+    chains = [h for h in range(1, 7)]
+    evicted = []
+    for i, h in enumerate(chains):
+        evicted += pc.insert_chain([h * 7 + 1], [i])
+    assert len(evicted) == 2             # 6 inserts into capacity 4
+    assert pc.stats()["evictions"] == 2
+
+
+@pytest.mark.slow
+def test_prefix_reuse_equals_vanilla_decode():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pool = PagedKVPool(cfg, n_pages=32, page_tokens=16)
+    pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=16)
+    eng = ServeEngine(model, params, slots=2, max_len=128,
+                      prefix_cache=pc, pool=pool)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, cfg.vocab_size, 48).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, cfg.vocab_size, 8 + i).astype(np.int32)])
+               for i in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    eng.run_until_done()
+    assert any(r.prefill_skipped > 0 for r in eng.finished)
+
+    eng2 = ServeEngine(model, params, slots=1, max_len=128)
+    r = Request(rid=9, prompt=prompts[2], max_new_tokens=3)
+    eng2.submit(r)
+    eng2.run_until_done()
+    reused = [x for x in eng.finished if x.rid == 2][0]
+    assert reused.out_tokens == r.out_tokens

@@ -1,0 +1,50 @@
+"""Distributed cache engine: exactness across device counts (subprocess —
+the fake-device count is locked at first jax init)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import MSLRUConfig, init_table, MultiStepLRUCache
+from repro.core.sharded import make_sharded_engine, shard_table
+
+mesh = jax.make_mesh((8,), ("cache",), axis_types=(jax.sharding.AxisType.Auto,))
+cfg = MSLRUConfig(num_sets=1024, m=2, p=4, value_planes=1)
+eng = make_sharded_engine(cfg, mesh, cap=512)
+t = shard_table(init_table(cfg), mesh)
+rng = np.random.default_rng(1)
+keys = rng.integers(1, 5000, size=(4096, 1)).astype(np.int32)
+hits = 0
+for i in range(0, 4096, 1024):
+    t, hit, val, served = eng(t, jnp.asarray(keys[i:i+1024]),
+                              jnp.asarray(keys[i:i+1024]))
+    hits += int(hit.sum())
+    h = np.asarray(hit); vv = np.asarray(val)
+    assert (vv[h, 0] == keys[i:i+1024][h, 0]).all(), "wrong values on hits"
+
+c = MultiStepLRUCache(cfg)
+out = c.access_seq(keys[:, 0], vals=keys)
+seq_hits = int(np.asarray(out.hit).sum())
+table_match = bool((np.asarray(jax.device_get(t)) == np.asarray(c.table)).all())
+print(json.dumps({"hits": hits, "seq_hits": seq_hits, "table_match": table_match}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_exact_on_8_devices():
+    res = subprocess.run([sys.executable, "-c", _CHILD],
+                         capture_output=True, text=True, cwd=ROOT, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    assert rec["hits"] == rec["seq_hits"]
+    assert rec["table_match"]

@@ -1,0 +1,101 @@
+"""Sharding-rule unit tests + a tiny-mesh pjit integration run."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import build_serve_step, build_train_step
+from repro.models.model import make_model
+
+
+def _mesh11():
+    return make_debug_mesh((1, 1))
+
+
+def test_param_spec_col_row():
+    mesh = _mesh11()
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    wq = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    spec = shd.param_spec(cfg, mesh, ("blocks", "attn", "wq"), wq)
+    assert spec == P("data", "model")
+    wo = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    assert shd.param_spec(cfg, mesh, ("blocks", "attn", "wo"), wo) == P("model", "data")
+
+
+def test_param_spec_divisibility_fallback():
+    """hymba vocab 32001 is not divisible by 16 -> replicated dim."""
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    cfg = get_config("hymba-1.5b")
+    emb = jax.ShapeDtypeStruct((32001, 1600), jnp.bfloat16)
+    spec = shd.param_spec(cfg, FakeMesh, ("head", "embed"), emb)
+    assert spec[0] is None          # vocab not divisible by model=16
+    assert spec[1] == "data"        # 1600 % 16 == 0
+    assert shd._if_div(FakeMesh, "model", 32001) is None
+    assert shd._if_div(FakeMesh, "model", 32000) == "model"
+
+
+def test_moe_expert_spec():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    # phi3.5-moe: 2.5 GiB/layer experts -> expert-parallel over 'model'
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    w = jax.ShapeDtypeStruct((16, 4096, 6400), jnp.bfloat16)  # (E, D, F)
+    spec = shd.param_spec(cfg, FakeMesh, ("blocks", "mlp", "w_gate"), w)
+    assert spec == P("model", "data", None)
+    wd = jax.ShapeDtypeStruct((16, 6400, 4096), jnp.bfloat16)
+    assert shd.param_spec(cfg, FakeMesh, ("blocks", "mlp", "w_down"), wd) == \
+        P("model", None, "data")
+    # olmoe: 805 MiB/layer -> replicated over 'model' (dispatch-collective fix)
+    cfg2 = get_config("olmoe-1b-7b")
+    assert shd.moe_experts_replicated(cfg2)
+    w2 = jax.ShapeDtypeStruct((64, 2048, 1024), jnp.bfloat16)
+    spec2 = shd.param_spec(cfg2, FakeMesh, ("blocks", "mlp", "w_gate"), w2)
+    assert spec2 == P(None, "data", None)
+
+
+def test_kv_cache_spec_split_kv():
+    """KV heads < model axis -> sequence-dim sharding (split-KV decode)."""
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    cfg = get_config("command-r-35b")  # kv=8 < 16
+    leaf = jax.ShapeDtypeStruct((40, 128, 32768, 8, 128), jnp.bfloat16)
+    spec = shd.kv_cache_spec(cfg, FakeMesh, 128, "k", leaf)
+    assert spec == P(None, ("pod", "data") if "pod" in FakeMesh.shape else "data",
+                     "model", None, None) or spec[2] == "model"
+
+    cfg2 = get_config("phi3-mini-3.8b")  # kv=32 >= 16
+    leaf2 = jax.ShapeDtypeStruct((32, 128, 32768, 32, 96), jnp.bfloat16)
+    spec2 = shd.kv_cache_spec(cfg2, FakeMesh, 128, "k", leaf2)
+    assert spec2[3] == "model"          # head sharding preferred
+
+
+def test_train_and_serve_step_run_on_tiny_mesh():
+    cfg = get_config("gemma3-1b", smoke=True)
+    model = make_model(cfg)
+    mesh = _mesh11()
+    shape = ShapeSpec("t", 64, 4, "train")
+    bundle = build_train_step(model, mesh, shape, microbatches=2)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    from repro.train.optimizer import adamw_init
+    opt = jax.jit(adamw_init)(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32)}
+    with mesh:
+        params2, opt2, metrics = bundle.fn(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+    sshape = ShapeSpec("d", 64, 4, "decode")
+    sb = build_serve_step(model, mesh, sshape, batch=4)
+    cache = model.init_cache(4, 64)
+    with mesh:
+        logits, cache = sb.fn(params2, jnp.zeros((4, 1), jnp.int32), cache,
+                              jnp.int32(3))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
