@@ -5,11 +5,21 @@ with the Pallas kernel body in interpret mode is validated elsewhere — the
 XLA path is the performance path on CPU) against the Python baselines.
 The paper's claim: in-vector fastest, multi-step a close second, ARC
 slowest, gaps widening with cache size (LRU metadata cache misses).
+
+``--engine {rounds,onepass}`` selects the batched conflict scheme.  Every
+run also emits a machine-readable ``BENCH_fig08.json`` at the repo root
+(queries/sec per engine/capacity, the rounds-per-batch histogram of the
+trace, and the resulting HBM-touching passes per batch: the rounds engine
+pays one gather + one scatter per conflict round, the one-pass engine pays
+exactly one of each) so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 import jax.numpy as jnp
@@ -17,15 +27,19 @@ import jax.numpy as jnp
 from benchmarks.common import N_KEYS, cached, msl_cfg, run_python_algo
 from repro.core import init_table
 from repro.core.engine import make_batched_engine
+from repro.core.multistep import set_index_for
 from repro.data.ycsb import zipfian
 
 CAPACITIES = [16384, 262144]
 N_Q = 1_000_000
+BATCH = 8192
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_fig08.json"
 
 
-def _batched_throughput(trace, capacity, m, policy="multistep", batch=8192):
+def _batched_throughput(trace, capacity, m, policy="multistep", batch=BATCH,
+                        engine="rounds"):
     cfg = msl_cfg(capacity, m=m, policy=policy)
-    eng = make_batched_engine(cfg)
+    eng = make_batched_engine(cfg, engine=engine)
     tbl = init_table(cfg)
     qv = jnp.zeros((batch, 0), jnp.int32)
     tbl, _ = eng(tbl, jnp.asarray(trace[:batch, None]), qv)  # warm/compile
@@ -34,35 +48,110 @@ def _batched_throughput(trace, capacity, m, policy="multistep", batch=8192):
     for i in range(batch, len(trace) - batch, batch):
         tbl, _ = eng(tbl, jnp.asarray(trace[i:i+batch, None]), qv)
         n += batch
+    tbl.block_until_ready()  # async dispatch: wait before reading the clock
     dt = time.time() - t0
     return {"us_per_query": dt / n * 1e6, "qps": n / dt}
 
 
-def run(force: bool = False):
+def _rounds_histogram(trace, capacity, m, batch=BATCH):
+    """Conflict rounds per batch = max per-set multiplicity in the batch.
+
+    This is the trip count of the rounds engine's gather→update→scatter
+    loop, i.e. half its HBM-touching passes; the one-pass engine always
+    does exactly one gather + one scatter.
+    """
+    cfg = msl_cfg(capacity, m=m)
+    nb = len(trace) // batch
+    sids = np.asarray(set_index_for(cfg, jnp.asarray(trace[:nb * batch, None])))
+    per_batch = [int(np.bincount(row, minlength=cfg.num_sets).max())
+                 for row in sids.reshape(nb, batch)]
+    hist: dict[int, int] = {}
+    for rounds in per_batch:
+        hist[rounds] = hist.get(rounds, 0) + 1
+    mean_rounds = sum(per_batch) / max(nb, 1)
+    return {
+        "hist": {str(k): v for k, v in sorted(hist.items())},
+        "mean_rounds_per_batch": mean_rounds,
+        "hbm_passes_per_batch": {"rounds": 2.0 * mean_rounds, "onepass": 2.0},
+        "passes_ratio_rounds_over_onepass": mean_rounds,
+    }
+
+
+def run(force: bool = False, engine: str = "rounds"):
+    assert engine in ("rounds", "onepass"), engine
+
     def compute():
         trace = zipfian(N_KEYS, N_Q, alpha=0.99, seed=11)
         out = {}
         for cap in CAPACITIES:
             rec = {
-                "invector_batched": _batched_throughput(trace, cap, m=1),
-                "multistep_batched": _batched_throughput(trace, cap, m=2),
+                "invector_batched": _batched_throughput(trace, cap, m=1,
+                                                        engine=engine),
+                "multistep_batched": _batched_throughput(trace, cap, m=2,
+                                                         engine=engine),
                 "lru_py": run_python_algo("lru", trace[:300_000], cap),
                 "gclock_py": run_python_algo("gclock", trace[:300_000], cap),
                 "arc_py": run_python_algo("arc", trace[:300_000], cap),
             }
+            rec["_rounds"] = _rounds_histogram(trace, cap, m=2)
             out[str(cap)] = rec
         return out
 
-    return cached("fig08_throughput", compute, force)
+    res = cached(f"fig08_throughput_{engine}_b{BATCH}", compute, force)
+    _emit_bench_json(res, engine)
+    return res
+
+
+def _emit_bench_json(res: dict, engine: str) -> None:
+    """Merge this engine's numbers into the cross-PR BENCH_fig08.json."""
+    doc = {}
+    if BENCH_JSON.exists():
+        try:
+            doc = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["figure"] = "fig08_throughput"
+    engines = doc.setdefault("engines", {})
+    engines[engine] = {
+        # batch recorded per engine entry: a later BATCH edit re-running one
+        # engine must not relabel the other's cached numbers
+        "batch": BATCH,
+        "capacities": {
+            cap: {
+                "qps": rec["multistep_batched"]["qps"],
+                "us_per_query": rec["multistep_batched"]["us_per_query"],
+                "rounds_per_batch_hist": rec["_rounds"]["hist"],
+                "mean_rounds_per_batch": rec["_rounds"]["mean_rounds_per_batch"],
+                "hbm_passes_per_batch": rec["_rounds"]["hbm_passes_per_batch"][engine],
+            }
+            for cap, rec in res.items()
+        },
+    }
+    # the headline comparison: HBM-touching passes per batch, both schemes
+    doc["hbm_passes_per_batch"] = {
+        cap: rec["_rounds"]["hbm_passes_per_batch"] for cap, rec in res.items()
+    }
+    BENCH_JSON.write_text(json.dumps(doc, indent=1, sort_keys=True))
 
 
 def report(res: dict) -> list[str]:
     lines = ["fig08: throughput (us/query; vectorized engines vs python baselines)"]
     for cap, rec in res.items():
         lines.append(f"  [size {cap}] " + "  ".join(
-            f"{a}={r['us_per_query']:.2f}us" for a, r in rec.items()))
+            f"{a}={r['us_per_query']:.2f}us" for a, r in rec.items()
+            if not a.startswith("_")))
+        rr = rec.get("_rounds")
+        if rr:
+            lines.append(
+                f"    conflict rounds/batch: mean={rr['mean_rounds_per_batch']:.1f}"
+                f"  hbm passes/batch: rounds={rr['hbm_passes_per_batch']['rounds']:.1f}"
+                f" vs onepass={rr['hbm_passes_per_batch']['onepass']:.1f}")
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(report(run())))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=["rounds", "onepass"], default="rounds")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    print("\n".join(report(run(force=args.force, engine=args.engine))))

@@ -24,9 +24,10 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import MSLRUConfig, init_table
 from repro.core.sharded import make_sharded_engine, shard_table
 from repro.data.ycsb import zipfian
+from repro.launch.mesh import make_mesh_compat
 
 D = %d
-mesh = jax.make_mesh((D,), ("cache",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((D,), ("cache",))
 cfg = MSLRUConfig(num_sets=16384, m=2, p=4, value_planes=0)
 eng = make_sharded_engine(cfg, mesh, cap=8192 // D + 64)
 tbl = shard_table(init_table(cfg), mesh)

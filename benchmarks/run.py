@@ -23,6 +23,9 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest modules (fig07 python baselines)")
+    ap.add_argument("--engine", choices=["rounds", "onepass"], default="rounds",
+                    help="batched conflict scheme for fig08 (other figures "
+                         "keep their pinned engines)")
     args = ap.parse_args()
 
     from benchmarks import (fig06_invector_small, fig07_hit_ratio,
@@ -48,7 +51,10 @@ def main() -> None:
     csv = ["name,us_per_call,derived"]
     for name, mod in modules:
         t0 = time.time()
-        res = mod.run(force=args.force)
+        if name == "fig08":
+            res = mod.run(force=args.force, engine=args.engine)
+        else:
+            res = mod.run(force=args.force)
         print("\n".join(mod.report(res)))
         print(f"  ({name} wall: {time.time()-t0:.1f}s)\n")
         us, derived = _csv_scalars(name, res)

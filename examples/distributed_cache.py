@@ -21,16 +21,16 @@ import jax.numpy as jnp
 from repro.core import MSLRUConfig, MultiStepLRUCache, init_table
 from repro.core.sharded import make_sharded_engine, shard_table
 from repro.data.ycsb import zipfian
+from repro.launch.mesh import make_mesh_compat
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("cache",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((8,), ("cache",))
     cfg = MSLRUConfig(num_sets=4096, m=2, p=4, value_planes=1)
     print(f"sharded cache: {cfg.capacity} items over {mesh.shape['cache']} "
           f"devices ({cfg.num_sets // 8} sets/device)")
 
-    engine = make_sharded_engine(cfg, mesh, cap=2048)
+    engine = make_sharded_engine(cfg, mesh, cap=2048, engine="onepass")
     table = shard_table(init_table(cfg), mesh)
 
     trace = zipfian(100_000, 65536, alpha=0.99, seed=5)

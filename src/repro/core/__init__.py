@@ -53,7 +53,11 @@ class MultiStepLRUCache:
         self.cfg = cfg
         self.table = init_table(cfg)
         self._seq = make_sequential_engine(cfg, with_ops=True)
-        self._batched = make_batched_engine(cfg)
+        # one-pass conflict resolution (bit-exact with the rounds engine,
+        # one HBM gather/scatter per batch); jnp chain — the XLA path is
+        # the performance path off-TPU
+        self._batched = make_batched_engine(cfg, engine="onepass",
+                                            use_kernel=False)
 
     # -- batched high-throughput path ----------------------------------------
     def access(self, keys: np.ndarray, vals: np.ndarray | None = None):

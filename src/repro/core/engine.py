@@ -10,12 +10,19 @@ Two execution models, both built on the row ops in multistep.py:
   analogue of the paper's multi-core fine-grained locking: queries to
   *different* sets are independent (the set-associative property), so they
   process in parallel with no coordination.  Queries that collide on a set
-  are serialized across *rounds* (round r applies the r-th query of every
-  set, a bounded retry loop — the paper's spin-lock, made data-parallel),
-  which makes the batched engine **bit-exact** w.r.t. the sequential one:
-  the number of rounds is the maximum per-set multiplicity in the batch
-  (≈1-3 when B ≲ S), and every round is one full-width gather → row_access
-  → scatter.
+  are serialized, and both conflict-resolution schemes are **bit-exact**
+  w.r.t. the sequential engine:
+
+  - ``engine="rounds"`` — round r applies the r-th query of every set (a
+    bounded retry loop, the paper's spin-lock made data-parallel).  Every
+    round is one full-width gather → row_access → scatter, so the work is
+    O(rounds × B) HBM traffic; kept as the bit-exactness oracle.
+
+  - ``engine="onepass"`` — the single-pass conflict-aware pipeline in
+    kernels/ops.py: sort the batch by set id once, gather each distinct
+    set's row once, resolve the intra-set duplicate chain on-chip (Pallas
+    kernel or jnp mirror), scatter once.  O(B) HBM traffic regardless of
+    the conflict structure — the hot path.
 """
 
 from __future__ import annotations
@@ -41,8 +48,11 @@ __all__ = [
     "SeqOutputs",
     "make_sequential_engine",
     "make_batched_engine",
-    "first_occurrence_mask",
-    "canonicalize_duplicate_rows",
+    "make_chunked_stream_runner",
+    "make_conflict_update",
+    "group_offsets",
+    "sorted_group_ranks",
+    "batched_rounds_update",
 ]
 
 OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
@@ -117,56 +127,46 @@ def make_sequential_engine(cfg: MSLRUConfig, with_ops: bool = False):
     return run
 
 
-def first_occurrence_mask(ids: jnp.ndarray) -> jnp.ndarray:
-    """mask[i] = True iff ids[i] does not appear at any j < i.  O(B log B)."""
-    b = ids.shape[0]
-    order = jnp.argsort(ids, stable=True)
-    sorted_ids = ids[order]
-    firsts_sorted = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
-    return jnp.zeros((b,), bool).at[order].set(firsts_sorted)
+def sorted_group_ranks(sorted_ids: jnp.ndarray):
+    """(firsts, offset) for an already-sorted id array.
 
-
-def canonicalize_duplicate_rows(ids: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
-    """For queries sharing a set id, replace every row with the first query's row.
-
-    After this, scattering all B rows back is order-independent (duplicate
-    indices carry identical payloads), so the batched update is deterministic
-    without any lock or dummy-row padding.
+    firsts[i] marks group heads; offset[i] is the rank within the group.
+    Shared core of ``group_offsets`` and the one-pass prologue in
+    kernels/ops.py — one implementation of the rank derivation, two sorts.
     """
-    b = ids.shape[0]
-    order = jnp.argsort(ids, stable=True)
-    sorted_ids = ids[order]
-    sorted_rows = rows[order]
-    firsts = jnp.concatenate([jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
-    src = jax.lax.cummax(jnp.where(firsts, jnp.arange(b), -1))
-    filled = sorted_rows[src]
-    inv = jnp.zeros((b,), jnp.int32).at[order].set(jnp.arange(b, dtype=jnp.int32))
-    return filled[inv]
+    b = sorted_ids.shape[0]
+    i = jnp.arange(b, dtype=jnp.int32)
+    firsts = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    group_start = jax.lax.cummax(jnp.where(firsts, i, -1))
+    return firsts, (i - group_start).astype(jnp.int32)
 
 
 def group_offsets(ids: jnp.ndarray) -> jnp.ndarray:
     """offset[i] = #{j < i : ids[j] == ids[i]} (rank within its id group)."""
     b = ids.shape[0]
     order = jnp.argsort(ids, stable=True)
-    sorted_ids = ids[order]
-    firsts = jnp.concatenate([jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
-    group_start = jax.lax.cummax(jnp.where(firsts, jnp.arange(b), -1))
-    off_sorted = jnp.arange(b) - group_start
-    return jnp.zeros((b,), jnp.int32).at[order].set(off_sorted.astype(jnp.int32))
+    _, off_sorted = sorted_group_ranks(ids[order])
+    return jnp.zeros((b,), jnp.int32).at[order].set(off_sorted)
 
 
 def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
-                          max_rounds: int | None = None):
+                          max_rounds: int | None = None, row_op=None):
     """Exact multi-query update: serialize same-set queries across rounds.
 
     table: (S, A, C); gsid: (B,) set id per query (entries with ``valid`` False
-    are ignored); returns (table, AccessResult, rounds).  Bit-exact w.r.t.
+    are ignored); returns (table, AccessResult, served).  Bit-exact w.r.t.
     processing the valid queries sequentially in batch order, because queries
     to distinct sets commute and round r applies exactly the r-th query of
     each set.  ``max_rounds`` bounds latency; excess queries are dropped
     (reported via res.hit=False and the served mask = offset < rounds).
+
+    ``row_op(rows, qkeys, qvals) -> (new_rows, AccessResult)`` is the batch
+    row transition; defaults to ``row_access``.  kernels/ops.py passes the
+    Pallas kernel here so both backends share this one serialization loop.
     """
+    if row_op is None:
+        row_op = functools.partial(row_access, cfg)
     s = cfg.num_sets if table.shape[0] == cfg.num_sets else table.shape[0]
     b = gsid.shape[0]
     gsid = jnp.where(valid, gsid, s)                  # sentinel group
@@ -186,7 +186,7 @@ def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     def body(carry):
         r, padded, acc = carry
         rows = jnp.take(padded, gsid, axis=0)
-        new_rows, res = row_access(cfg, rows, qkeys, qvals)
+        new_rows, res = row_op(rows, qkeys, qvals)
         sel = (offset == r) & valid
         scatter_id = jnp.where(sel, gsid, s)          # losers pile onto dummy row
         padded = padded.at[scatter_id].set(new_rows)
@@ -212,27 +212,63 @@ def AccessResultZero(cfg: MSLRUConfig, b: int):
     )
 
 
-def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None):
+def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
+                         max_rounds: int | None = None,
+                         use_kernel: bool = False, block_b: int = 2048,
+                         interpret: bool | None = None):
+    """Bind the chosen conflict scheme to ``update(table, gsid, valid,
+    qkeys, qvals) -> (table, AccessResult, served)``.
+
+    The single dispatch point for the ``engine`` switch — the batched and
+    sharded engines both resolve through here so the option set, the
+    deferred kernels import, and the rounds-is-XLA-only guard live once.
+    """
+    assert engine in ("rounds", "onepass"), engine
+    if engine == "onepass":
+        from repro.kernels.ops import onepass_update  # deferred: kernels -> core
+
+        def update(table, gsid, valid, qkeys, qvals):
+            return onepass_update(cfg, table, gsid, valid, qkeys, qvals,
+                                  max_rounds, use_kernel, block_b, interpret)
+    else:
+        assert not use_kernel, (
+            "engine='rounds' here is XLA-only; the kernel-backed rounds path "
+            "lives in repro.kernels.ops.make_kernel_batched_engine")
+
+        def update(table, gsid, valid, qkeys, qvals):
+            return batched_rounds_update(cfg, table, gsid, valid, qkeys,
+                                         qvals, max_rounds)
+    return update
+
+
+def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
+                        engine: str = "rounds", use_kernel: bool = False,
+                        block_b: int = 2048, interpret: bool | None = None):
     """Returns jit'd run(table, qkeys (B,KP), qvals (B,V)) -> (table, result).
 
     Exact (sequential-equivalent) unless ``max_rounds`` caps the conflict
-    serialization loop.
+    serialization.  ``engine`` selects the conflict scheme: ``"rounds"``
+    (per-round gather/scatter, the oracle) or ``"onepass"`` (single
+    gather/scatter with on-chip chain resolution; ``use_kernel`` routes the
+    chain loop through the Pallas kernel instead of its jnp mirror).
     """
+    update = make_conflict_update(cfg, engine, max_rounds, use_kernel,
+                                  block_b, interpret)
 
     @jax.jit
     def run(table, qkeys, qvals):
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
-        table, res, _served = batched_rounds_update(
-            cfg, table, sids, valid, qkeys, qvals, max_rounds)
+        table, res, _served = update(table, sids, valid, qkeys, qvals)
         return table, res
 
     return run
 
 
-def make_chunked_stream_runner(cfg: MSLRUConfig, batch: int):
+def make_chunked_stream_runner(cfg: MSLRUConfig, batch: int,
+                               engine: str = "rounds", **engine_kwargs):
     """Throughput driver: scan the batched engine over a (N//batch, batch) stream."""
-    run_batch = make_batched_engine(cfg)
+    run_batch = make_batched_engine(cfg, engine=engine, **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def run(table, qkeys, qvals):

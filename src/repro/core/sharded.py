@@ -16,7 +16,11 @@ cap ≈ 2×expected).
 The routing/update pipeline per device:
   1. hash local queries -> (owner shard, slot within send buffer)
   2. all_to_all send buffers (D, cap, planes)
-  3. batched row_access on the local table shard (padded queries masked)
+  3. batched update on the local table shard (padded queries masked) — the
+     conflict scheme is selectable: ``engine="rounds"`` re-gathers the shard
+     per conflict round; ``engine="onepass"`` sorts once and resolves
+     duplicate chains on-chip (kernels/ops.onepass_update), one
+     gather/scatter per step
   4. all_to_all results back; unpack by (owner, slot)
 """
 
@@ -28,9 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.engine import batched_rounds_update
+from repro.core.engine import make_conflict_update
 from repro.core.invector import EMPTY_KEY
 from repro.core.multistep import MSLRUConfig, set_index_for
+from repro.launch.mesh import shard_map_compat as _shard_map
 
 __all__ = ["make_sharded_engine", "shard_table"]
 
@@ -42,14 +47,21 @@ def shard_table(table, mesh, axis: str = "cache"):
 
 
 def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | None = None,
-                        max_rounds: int | None = None):
+                        max_rounds: int | None = None, engine: str = "rounds",
+                        use_kernel: bool = False, block_b: int = 2048,
+                        interpret: bool | None = None):
     """Build jit(shard_map) run(table, qkeys, qvals) -> (table, hit, served).
 
     table: (S, A, C) sharded over sets on ``axis``.
     qkeys: (Q, KP), qvals: (Q, V) sharded over queries on ``axis``.
     hit:   (Q,) bool — False for misses AND overflow-dropped queries.
     served:(Q,) bool — False only for overflow-dropped queries.
+    engine: per-shard conflict scheme — "rounds" (gather/scatter per round)
+    or "onepass" (sort once, on-chip chains; ``use_kernel`` additionally
+    routes the chain loop through the Pallas kernel).
     """
+    update = make_conflict_update(cfg, engine, max_rounds, use_kernel,
+                                  block_b, interpret)
     ndev = mesh.shape[axis]
     assert cfg.num_sets % ndev == 0
     s_local = cfg.num_sets // ndev
@@ -85,10 +97,9 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         r_keys, r_vals = rq[:, :kp], rq[:, kp:]
         valid = r_keys[:, 0] != EMPTY_KEY
 
-        # exact local update (same rounds scheme as the batched engine)
+        # exact local update (same conflict schemes as the batched engine)
         lsid = set_index_for(cfg, r_keys) % s_local
-        table, res, _served = batched_rounds_update(
-            cfg, table, lsid, valid, r_keys, r_vals, max_rounds=max_rounds)
+        table, res, _served = update(table, lsid, valid, r_keys, r_vals)
 
         hit_back = (res.hit & valid).astype(jnp.int32).reshape(ndev, k, 1)
         val_back = (res.value if v else
@@ -102,20 +113,21 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         my_val = back[didx, sidx, 1:]
         return table, my_hit, my_val, served
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None), P(axis, None)),
         out_specs=(P(axis, None, None), P(axis), P(axis, None), P(axis)),
-        check_vma=False,
     )
     return jax.jit(fn)
 
 
 def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",
-                               cap: int | None = None, batch: int = 4096):
+                               cap: int | None = None, batch: int = 4096,
+                               engine: str = "rounds", **engine_kwargs):
     """scan the sharded engine over a long stream (throughput/scaling bench)."""
-    engine = make_sharded_engine(cfg, mesh, axis, cap)
+    engine = make_sharded_engine(cfg, mesh, axis, cap, engine=engine,
+                                 **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def run(table, qkeys, qvals):

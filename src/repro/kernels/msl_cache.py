@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the batched multi-step LRU access op.
+"""Pallas TPU kernels for the batched multi-step LRU access op.
 
 This is the compute hot-spot the paper optimizes with AVX intrinsics: the
 compare + permute + insert over a set's A = M*P lanes.  On TPU the unit of
@@ -8,14 +8,43 @@ entire fused get-or-put transition with lane-select arithmetic on the VPU —
 no gathers, no scalar loops, no pattern table (see invector.py for the
 mapping from the paper's ``vpermd`` idiom).
 
+Two kernels share the transition math (``_transition``):
+
+* ``msl_access_kernel_call`` — stateless: one transition per row, conflicts
+  (duplicate set ids in the batch) are the *caller's* problem (the rounds
+  engine re-invokes it once per conflict round, re-gathering from HBM each
+  time).
+
+* ``msl_onepass_kernel_call`` — conflict-aware single pass: queries arrive
+  *sorted by set id* with per-query chain metadata (local rank within the
+  duplicate chain, served mask), so the whole batch needs exactly one HBM
+  gather before and one scatter after the kernel.  Same-set duplicates are
+  resolved on-chip: a ``fori_loop`` whose trip count is the block's maximum
+  chain rank (scalar-prefetched, so the scalar core knows it before the
+  vector body runs) hands each updated row to the next chain member by a
+  batch-axis shift — the rounds loop of the XLA engine collapsed into lane
+  arithmetic over VMEM-resident rows.  A (1, A, C) VMEM + (1,) SMEM scratch
+  carries the last row/set-id across grid cells (TPU grid cells execute
+  sequentially on a core), so duplicate chains may span block boundaries.
+
 Grid/BlockSpec: 1-D grid over query blocks; every ref is blocked on the
-batch axis only, so the VMEM working set per cell is
-BB*(A*C + KP + V + A*C + small outputs) * 4 bytes ≈ 0.5 MB at BB=2048,
-A=8, C=3 — comfortably inside the ~16 MB v5e VMEM while long enough to hide
-the HBM->VMEM DMA behind compute.
+batch axis only.  VMEM working set per cell for the one-pass kernel is the
+input tile, the loop's double-buffered row state, and the outputs:
+
+    rows_in  BB*A*C          (gathered set rows, one per sorted query)
+    loop     2 * BB*A*C      (``cur`` chain state + ``after`` committed state)
+    queries  BB*(KP + V)
+    meta     3*BB            (set id, local rank, served)
+    outputs  BB*(A*C + 2 + V + C)
+    carry    A*C + 1         (cross-block chain scratch)
+
+≈ 4*BB*A*C + small terms int32 words ≈ 1.6 MB at BB=2048, A=8, C=3 —
+comfortably inside the ~16 MB v5e VMEM budget even at BB=8192 (6.3 MB),
+while the scalar-prefetched ``n_rounds`` array (n_blocks int32 in SMEM) lets
+each cell run only as many chain steps as its worst duplicate chain needs.
 
 All index movement uses select+reduce (never take_along_axis/gather), so the
-kernel lowers to pure vector ops on TPU.  Correctness is pinned to the
+kernels lower to pure vector ops on TPU.  Correctness is pinned to the
 pure-jnp oracle (ref.msl_access_ref == core row_access) in interpret mode —
 bit-exact, every geometry/dtype in the test sweep.
 """
@@ -27,22 +56,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.invector import EMPTY_KEY
 from repro.core.multistep import MSLRUConfig
 
-__all__ = ["msl_access_kernel_call"]
+__all__ = ["msl_access_kernel_call", "msl_onepass_kernel_call"]
 
 
-def _kernel(cfg: MSLRUConfig, krows_ref, qkey_ref, qval_ref,
-            out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref):
-    a, c = cfg.assoc, cfg.planes
+def _transition(cfg: MSLRUConfig, rows, qk, qv):
+    """Fused get-or-put on (BB, A, C) rows; pure lane select/reduce arithmetic.
+
+    Returns (new_rows, hit (BB,) bool, pos (BB,) int32, at_pos (BB, C),
+    ev (BB, C) with key plane 0 == EMPTY_KEY when nothing was evicted).
+    """
+    a = cfg.assoc
     kp, v = cfg.key_planes, cfg.value_planes
     p = cfg.p
-
-    rows = krows_ref[...]                     # (BB, A, C) int32
-    qk = qkey_ref[...]                        # (BB, KP)
-    qv = qval_ref[...]                        # (BB, V)
 
     lane = jax.lax.broadcasted_iota(jnp.int32, rows.shape[:-1], 1)  # (BB, A)
 
@@ -94,6 +124,59 @@ def _kernel(cfg: MSLRUConfig, krows_ref, qkey_ref, qval_ref,
          jnp.zeros((rows.shape[0], v), jnp.int32)], axis=-1
     ) if v else jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32)
     ev = jnp.where(hit[:, None], empty_ev, displaced)
+    return out, hit, pos, at_pos, ev
+
+
+def _chain_body(cfg: MSLRUConfig, qk, qv, lrank, served):
+    """fori_loop body resolving one duplicate-chain step (shared verbatim by
+    the Pallas one-pass kernel and its jnp mirror in ops.py).
+
+    State: (cur chain rows, after committed rows, hit, pos, val, ev).  At
+    step r the queries with chain rank r apply their transition (identity
+    when not ``served``), commit into ``after``, and hand the updated row to
+    rank r+1 via a batch-axis shift (sorted order makes chain neighbours
+    adjacent).
+    """
+    kp, v = cfg.key_planes, cfg.value_planes
+
+    def body(r, state):
+        cur, after, h, po, va, ev = state
+        new_rows, hitv, posv, at_pos, evv = _transition(cfg, cur, qk, qv)
+        active = lrank == r
+        act = active & served                 # dropped queries: identity
+        eff = jnp.where(act[:, None, None], new_rows, cur)
+        after = jnp.where(active[:, None, None], eff, after)
+        h = jnp.where(act, hitv.astype(jnp.int32), h)
+        po = jnp.where(act, posv, po)
+        if v:
+            va = jnp.where(act[:, None], at_pos[:, kp:], va)
+        ev = jnp.where(act[:, None], evv, ev)
+        nxt = jnp.roll(after, 1, axis=0)
+        cur = jnp.where((lrank == r + 1)[:, None, None], nxt, cur)
+        return cur, after, h, po, va, ev
+
+    return body
+
+
+def _chain_state0(cfg: MSLRUConfig, rows):
+    """Initial chain-loop state for (B, A, C) gathered rows."""
+    b = rows.shape[0]
+    ve = max(cfg.value_planes, 1)
+    return (rows, rows,
+            jnp.zeros((b,), jnp.int32),
+            jnp.full((b,), -1, jnp.int32),
+            jnp.zeros((b, ve), jnp.int32),
+            jnp.zeros((b, rows.shape[-1]), jnp.int32))
+
+
+def _kernel(cfg: MSLRUConfig, krows_ref, qkey_ref, qval_ref,
+            out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref):
+    kp, v = cfg.key_planes, cfg.value_planes
+    rows = krows_ref[...]                     # (BB, A, C) int32
+    qk = qkey_ref[...]                        # (BB, KP)
+    qv = qval_ref[...]                        # (BB, V)
+
+    out, hit, pos, at_pos, ev = _transition(cfg, rows, qk, qv)
 
     out_rows_ref[...] = out
     hit_ref[...] = hit.astype(jnp.int32)
@@ -155,6 +238,114 @@ def msl_access_kernel_call(rows, qkeys, qvals, *, cfg: MSLRUConfig,
         interpret=interpret,
     )(rows, qkeys, qvals_e)
     rows_o, hit_o, pos_o, val_o, ev_o = (o[:b] for o in out)
+    return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
+
+
+def _onepass_kernel(cfg: MSLRUConfig, nrounds_ref, krows_ref, qkey_ref,
+                    qval_ref, sid_ref, lrank_ref, served_ref,
+                    out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+                    carry_row_ref, carry_sid_ref):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init_carry():
+        carry_sid_ref[0] = jnp.int32(-1)
+        carry_row_ref[...] = jnp.zeros((1, cfg.assoc, cfg.planes), jnp.int32)
+
+    rows = krows_ref[...]                     # (BB, A, C) gathered set rows
+    qk = qkey_ref[...]                        # (BB, KP) sorted by set id
+    qv = qval_ref[...]                        # (BB, Ve)
+    sid = sid_ref[...]                        # (BB,) sorted set ids
+    lrank = lrank_ref[...]                    # (BB,) rank in duplicate chain
+    served = served_ref[...] != 0             # (BB,) bool
+
+    # Splice the cross-block carry into local position 0: when the first
+    # query continues the previous block's duplicate chain, its gathered row
+    # is stale (another chain member already updated the set on-chip).
+    cont = sid[0] == carry_sid_ref[0]
+    row0 = jnp.where(cont, carry_row_ref[0], rows[0])
+    bidx = jax.lax.broadcasted_iota(jnp.int32, rows.shape[:-1], 0)  # (BB, A)
+    rows = jnp.where((bidx == 0)[..., None], row0[None], rows)
+
+    bb = rows.shape[0]
+    n_rounds = nrounds_ref[pid]               # scalar-prefetched trip count
+    _, after, h, po, va, ev = jax.lax.fori_loop(
+        0, n_rounds, _chain_body(cfg, qk, qv, lrank, served),
+        _chain_state0(cfg, rows))
+
+    out_rows_ref[...] = after
+    hit_ref[...] = h
+    pos_ref[...] = po
+    val_ref[...] = va
+    ev_ref[...] = ev
+    carry_row_ref[...] = after[bb - 1][None]
+    carry_sid_ref[0] = sid[bb - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
+def msl_onepass_kernel_call(rows, qkeys, qvals, sids, lrank, served, nrounds,
+                            *, cfg: MSLRUConfig, block_b: int = 2048,
+                            interpret: bool = True):
+    """Conflict-aware single-pass access over *sorted-by-set-id* queries.
+
+    rows (B, A, C) int32 — set rows gathered once (only the entry at each
+    duplicate chain's head needs to be live; the rest are resolved on-chip);
+    qkeys (B, KP); qvals (B, V); sids (B,) sorted set ids; lrank (B,) rank of
+    each query within its block-local duplicate chain; served (B,) int32
+    mask (0 ⇒ the transition is skipped, identity on the chain); nrounds
+    (ceil(B/block_b),) int32 per-block chain depth (scalar-prefetched).
+
+    B must already be a multiple of block_b (the one-pass prologue pads with
+    unserved sentinel queries).  Returns (rows_after, hit, pos, value, ev)
+    where rows_after[i] is the set's state *after* query i — the epilogue
+    scatters it back at each chain's tail.
+    """
+    b, a, c = rows.shape
+    kp, v = cfg.key_planes, cfg.value_planes
+    ve = max(v, 1)
+    bb = min(block_b, b)
+    assert b % bb == 0, "one-pass kernel expects pre-padded batch"
+    qvals_e = qvals if v else jnp.zeros((b, 1), jnp.int32)
+
+    row_spec = pl.BlockSpec((bb, a, c), lambda i, nr: (i, 0, 0))
+    flat_spec = pl.BlockSpec((bb,), lambda i, nr: (i,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b // bb,),
+        in_specs=[
+            row_spec,
+            pl.BlockSpec((bb, kp), lambda i, nr: (i, 0)),
+            pl.BlockSpec((bb, ve), lambda i, nr: (i, 0)),
+            flat_spec,
+            flat_spec,
+            flat_spec,
+        ],
+        out_specs=[
+            row_spec,
+            flat_spec,
+            flat_spec,
+            pl.BlockSpec((bb, ve), lambda i, nr: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i, nr: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, a, c), jnp.int32),   # carry row across blocks
+            pltpu.SMEM((1,), jnp.int32),        # carry set id
+        ],
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, a, c), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, ve), jnp.int32),
+        jax.ShapeDtypeStruct((b, c), jnp.int32),
+    )
+    out = pl.pallas_call(
+        functools.partial(_onepass_kernel, cfg),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(nrounds, rows, qkeys, qvals_e, sids, lrank, served)
+    rows_o, hit_o, pos_o, val_o, ev_o = out
     return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
 
 

@@ -1,26 +1,51 @@
-"""jit'd public wrappers for the msl_cache kernel.
+"""jit'd public wrappers for the msl_cache kernels.
 
 ``msl_access`` routes between the Pallas kernel (TPU target; interpret mode
 on CPU so the kernel body is exercised everywhere) and the pure-jnp oracle.
-The batched engine (core/engine.py) can be built on either backend via
-``make_kernel_batched_engine`` — the gather/scatter around the kernel stays
-in XLA, which is the intended TPU decomposition (dynamic row indexing is an
-XLA strength; the dense lane arithmetic is the kernel's job).
+
+``onepass_update`` is the single-pass, conflict-aware batched update (the
+performance path): an XLA prologue sorts the batch by set id once and derives
+the duplicate-chain metadata, the table is gathered **once** (one live row
+per distinct set; duplicate-chain members read the dummy row), the chain is
+resolved on-chip (Pallas kernel, or an identical jnp loop when
+``use_kernel=False``), and one scatter epilogue commits each chain's tail
+row.  Contract: bit-exact with ``engine.batched_rounds_update`` — same
+(table, AccessResult, served) for any (valid, max_rounds) — while touching
+HBM exactly twice per batch instead of twice per conflict round.
+
+``kernel_rounds_update`` is the legacy rounds path with the kernel as the
+row transition, kept as the bit-exactness oracle for the one-pass engine;
+it now carries the same ``valid``/``max_rounds`` semantics as the XLA
+rounds engine (they previously diverged on capped/padded streams).
+
+The gather/scatter around the kernels stays in XLA, which is the intended
+TPU decomposition (dynamic row indexing is an XLA strength; the dense lane
+arithmetic is the kernel's job).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.multistep import AccessResult, MSLRUConfig, set_index_for
-from repro.core.engine import group_offsets
-from repro.kernels.msl_cache import msl_access_kernel_call
+from repro.core.engine import (batched_rounds_update, make_batched_engine,
+                               sorted_group_ranks)
+from repro.core.invector import EMPTY_KEY
+from repro.kernels.msl_cache import (
+    _chain_body,
+    _chain_state0,
+    msl_access_kernel_call,
+    msl_onepass_kernel_call,
+)
 from repro.kernels.ref import msl_access_ref
 
-__all__ = ["msl_access", "make_kernel_batched_engine"]
+__all__ = [
+    "msl_access",
+    "onepass_update",
+    "kernel_rounds_update",
+    "make_kernel_batched_engine",
+]
 
 
 def _on_cpu() -> bool:
@@ -38,51 +63,168 @@ def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, use_kernel: bool = True,
         rows, qkeys, qvals, cfg=cfg, block_b=block_b, interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# One-pass conflict-aware update
+# ---------------------------------------------------------------------------
+
+def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, lrank, served, n_rounds):
+    """jnp mirror of the one-pass kernel: the same ``_chain_body`` loop, run
+    in XLA over the whole sorted batch (no blocks, so no carry needed).
+
+    rows (B, A, C) sorted-by-set gathered rows; lrank (B,) chain rank;
+    served (B,) bool; n_rounds: dynamic trip count (max chain length).
+    Returns (rows_after, hit_i32, pos, value, ev) like the kernel.
+    """
+    _, after, h, po, va, ev = jax.lax.fori_loop(
+        0, n_rounds, _chain_body(cfg, qk, qv, lrank, served),
+        _chain_state0(cfg, rows))
+    return after, h, po, va[:, : cfg.value_planes], ev
+
+
+def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
+                   max_rounds: int | None = None, use_kernel: bool = True,
+                   block_b: int = 2048, interpret: bool | None = None):
+    """Single-pass exact multi-query update (one HBM gather + one scatter).
+
+    Same contract as ``engine.batched_rounds_update``: table (S, A, C);
+    gsid (B,) set id per query (``valid`` False entries are ignored);
+    returns (table, AccessResult, served).  Bit-exact w.r.t. processing the
+    valid queries sequentially in batch order; ``max_rounds`` drops queries
+    whose within-set rank exceeds the cap (res.hit=False, served=False),
+    matching the rounds engine.  Unlike the rounds engine the cap does not
+    shorten the wall-clock pass: dropped queries ride the on-chip chain as
+    identities so the chain tail still commits the right row.
+    """
+    s = table.shape[0]
+    b = gsid.shape[0]
+    kp, v = cfg.key_planes, cfg.value_planes
+
+    # --- prologue: pad, sort by set id, derive duplicate-chain metadata ---
+    bb = min(block_b, b) if use_kernel else b
+    pad = (-b) % bb
+    bp = b + pad
+    if pad:
+        gsid = jnp.concatenate([gsid, jnp.zeros((pad,), gsid.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+        qkeys = jnp.concatenate([qkeys, jnp.zeros((pad, kp), jnp.int32)])
+        qvals = jnp.concatenate([qvals, jnp.zeros((pad, v), jnp.int32)])
+
+    i = jnp.arange(bp, dtype=jnp.int32)
+    sid_key = jnp.where(valid, gsid, s).astype(jnp.int32)  # invalid -> dummy
+    order = jnp.argsort(sid_key, stable=True)
+    ssid = sid_key[order]
+    svalid = valid[order]
+    sqk = qkeys[order]
+    sqv = qvals[order]
+
+    firsts, offset = sorted_group_ranks(ssid)   # chain heads + chain ranks
+    n_valid_rounds = jnp.max(jnp.where(svalid, offset, -1)) + 1
+    n_rounds = (jnp.minimum(n_valid_rounds, max_rounds)
+                if max_rounds is not None else n_valid_rounds)
+    served_s = svalid & (offset < n_rounds)
+    # block-local chain rank: a chain crossing a block boundary restarts at
+    # rank 0 there and is re-seeded from the kernel's cross-block carry
+    lrank = jnp.where(svalid, jnp.minimum(offset, i % bb), 0)
+
+    # --- one gather: a live row per *distinct* set (chain heads); everyone
+    # else reads the dummy row and is resolved on-chip -----------------
+    padded = jnp.concatenate([table, jnp.zeros((1,) + table.shape[1:], table.dtype)])
+    rows_in = jnp.take(padded, jnp.where(firsts, ssid, s), axis=0)
+
+    # --- resolve chains on-chip -------------------------------------------
+    if use_kernel:
+        if interpret is None:
+            interpret = _on_cpu()
+        nrounds_blocks = lrank.reshape(bp // bb, bb).max(axis=1).astype(jnp.int32) + 1
+        rows_after, hit, pos, val, ev = msl_onepass_kernel_call(
+            rows_in, sqk, sqv, ssid, lrank.astype(jnp.int32),
+            served_s.astype(jnp.int32), nrounds_blocks,
+            cfg=cfg, block_b=bb, interpret=interpret)
+    else:
+        rows_after, hit, pos, val, ev = _chain_resolve_xla(
+            cfg, rows_in, sqk, sqv, lrank, served_s, n_valid_rounds)
+
+    # --- one scatter: each chain's tail commits its set's final row -------
+    lasts = jnp.concatenate([ssid[:-1] != ssid[1:], jnp.ones((1,), bool)])
+    scatter_sid = jnp.where(lasts, ssid, s)     # non-tails pile on the dummy
+    padded = padded.at[scatter_sid].set(rows_after)
+    table = padded[:-1]
+
+    # --- unsort outputs; unserved queries report like the rounds engine ---
+    inv = jnp.zeros((bp,), jnp.int32).at[order].set(i)
+
+    def unsort(x):
+        return x[inv][:b]
+
+    served = unsort(served_s)
+    hit_u, pos_u, val_u, ev_u = unsort(hit), unsort(pos), unsort(val), unsort(ev)
+    res = AccessResult(
+        hit=(hit_u != 0) & served,
+        value=jnp.where(served[:, None], val_u, 0) if v else val_u,
+        pos=jnp.where(served, pos_u, -1),
+        evicted_key=jnp.where(served[:, None], ev_u[:, :kp], 0),
+        evicted_val=jnp.where(served[:, None], ev_u[:, kp:], 0),
+        evicted_valid=served & (ev_u[:, 0] != EMPTY_KEY),
+    )
+    return table, res, served
+
+
+# ---------------------------------------------------------------------------
+# Rounds path with the kernel as the row transition (bit-exactness oracle)
+# ---------------------------------------------------------------------------
+
+def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
+                         max_rounds: int | None = None, use_kernel: bool = True,
+                         block_b: int = 2048, interpret: bool | None = None):
+    """``engine.batched_rounds_update`` with ``msl_access`` as the row op.
+
+    Re-gathers/scatters all B rows from HBM once per conflict round — the
+    O(rounds × B) behaviour the one-pass path eliminates.  The conflict
+    serialization loop itself (valid masking, ``max_rounds`` capping, dummy
+    row scatter) is the one in core/engine.py — only the row transition
+    differs, so the two rounds engines cannot drift.
+    """
+    def row_op(rows, qk, qv):
+        new_rows, hit, pos, val, ev = msl_access(
+            rows, qk, qv, cfg=cfg, use_kernel=use_kernel,
+            block_b=block_b, interpret=interpret)
+        res = AccessResult(
+            hit=hit.astype(bool), value=val, pos=pos,
+            evicted_key=ev[:, : cfg.key_planes],
+            evicted_val=ev[:, cfg.key_planes:],
+            evicted_valid=(ev[:, 0] != EMPTY_KEY),
+        )
+        return new_rows, res
+
+    return batched_rounds_update(cfg, table, gsid, valid, qkeys, qvals,
+                                 max_rounds, row_op=row_op)
+
+
 def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
-                               block_b: int = 2048, interpret: bool | None = None):
+                               block_b: int = 2048, interpret: bool | None = None,
+                               engine: str = "onepass",
+                               max_rounds: int | None = None):
     """Batched engine with the row transition done by the Pallas kernel.
 
-    Same exact rounds-serialization semantics as engine.make_batched_engine;
-    only the inner row op differs.
+    ``engine="onepass"`` (default) delegates to the one factory in
+    core/engine.py (single-pass conflict-aware pipeline, kernel-backed);
+    ``engine="rounds"`` runs the shared serialization loop with
+    ``msl_access`` as the row op.  Both are bit-exact w.r.t.
+    ``make_sequential_engine`` for any ``max_rounds``.
     """
-    from repro.core.invector import EMPTY_KEY
+    assert engine in ("onepass", "rounds"), engine
+    if engine == "onepass":
+        return make_batched_engine(cfg, max_rounds, engine="onepass",
+                                   use_kernel=use_kernel, block_b=block_b,
+                                   interpret=interpret)
 
     @jax.jit
     def run(table, qkeys, qvals):
-        s = table.shape[0]
-        b = qkeys.shape[0]
         sids = set_index_for(cfg, qkeys)
-        offset = group_offsets(sids)
-        n_rounds = jnp.max(offset) + 1
-        padded = jnp.concatenate([table, jnp.zeros((1,) + table.shape[1:], table.dtype)])
-
-        def cond(carry):
-            r, _, _ = carry
-            return r < n_rounds
-
-        def body(carry):
-            r, padded, acc = carry
-            rows = jnp.take(padded, sids, axis=0)
-            new_rows, hit, pos, val, ev = msl_access(
-                rows, qkeys, qvals, cfg=cfg, use_kernel=use_kernel,
-                block_b=block_b, interpret=interpret)
-            sel = offset == r
-            scatter_id = jnp.where(sel, sids, s)
-            padded = padded.at[scatter_id].set(new_rows)
-            res = AccessResult(
-                hit=hit.astype(bool), value=val, pos=pos,
-                evicted_key=ev[:, : cfg.key_planes],
-                evicted_val=ev[:, cfg.key_planes:],
-                evicted_valid=(ev[:, 0] != EMPTY_KEY),
-            )
-            acc = jax.tree.map(
-                lambda a, n: jnp.where(sel.reshape((b,) + (1,) * (n.ndim - 1)), n, a),
-                acc, res)
-            return r + 1, padded, acc
-
-        from repro.core.engine import AccessResultZero
-        _, padded, acc = jax.lax.while_loop(
-            cond, body, (jnp.int32(0), padded, AccessResultZero(cfg, b)))
-        return padded[:-1], acc
+        valid = jnp.ones(sids.shape, bool)
+        table, res, _served = kernel_rounds_update(
+            cfg, table, sids, valid, qkeys, qvals, max_rounds,
+            use_kernel, block_b, interpret)
+        return table, res
 
     return run

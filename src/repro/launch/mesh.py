@@ -17,26 +17,52 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_cache_mesh", "batch_axes", "AXIS_DATA",
-           "AXIS_MODEL", "AXIS_POD"]
+__all__ = ["make_mesh_compat", "shard_map_compat", "make_production_mesh",
+           "make_cache_mesh", "batch_axes", "AXIS_DATA", "AXIS_MODEL",
+           "AXIS_POD"]
 
 AXIS_POD = "pod"
 AXIS_DATA = "data"
 AXIS_MODEL = "model"
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh with Auto axis types where the jax version has them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (>=0.6 top-level vs experimental),
+    always with the replication check disabled (check_vma / check_rep,
+    whichever this version spells it)."""
+    if hasattr(jax, "shard_map"):
+        for kw in ({"check_vma": False}, {"check_rep": False}):
+            try:
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+        # last resort: no disable kwarg recognized; let real errors propagate
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (AXIS_POD, AXIS_DATA, AXIS_MODEL) if multi_pod else (AXIS_DATA, AXIS_MODEL)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_cache_mesh(n_devices: int | None = None):
     """1-D mesh over all (or n) devices for the sharded key-value cache."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("cache",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh_compat((n,), ("cache",))
 
 
 def batch_axes(mesh) -> tuple:
@@ -46,5 +72,4 @@ def batch_axes(mesh) -> tuple:
 
 def make_debug_mesh(shape=(1, 1), axes=(AXIS_DATA, AXIS_MODEL)):
     """Tiny mesh for CPU tests (shape product must be <= live devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)

@@ -17,7 +17,8 @@ def test_quantize_roundtrip_error_bounded():
 
 def test_compressed_psum_single_shard_matches():
     """axis of size 1: compressed psum == identity up to quantization."""
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat, shard_map_compat
+    mesh = make_mesh_compat((1,), ("d",))
     g = jax.random.normal(jax.random.PRNGKey(1), (64,), jnp.float32)
 
     def f(g):
@@ -25,9 +26,9 @@ def test_compressed_psum_single_shard_matches():
         out, _ = compressed_psum(g, "d", r)
         return out
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh,
-                                in_specs=jax.sharding.PartitionSpec(),
-                                out_specs=jax.sharding.PartitionSpec()))(g)
+    out = jax.jit(shard_map_compat(f, mesh=mesh,
+                                   in_specs=jax.sharding.PartitionSpec(),
+                                   out_specs=jax.sharding.PartitionSpec()))(g)
     q, s = quantize_int8(g)
     np.testing.assert_allclose(np.asarray(out), np.asarray(g),
                                atol=float(s) * 0.51)

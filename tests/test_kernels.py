@@ -79,3 +79,28 @@ def test_kernel_engine_end_to_end():
         hits.append(np.asarray(res.hit))
     assert (np.concatenate(hits) == np.asarray(out.hit)).all()
     assert (np.asarray(tbl) == np.asarray(seq.table)).all()
+
+
+@pytest.mark.parametrize("m,p,kp,v,policy", GEOMS)
+@pytest.mark.parametrize("block_b", [64, 256])
+def test_onepass_kernel_matches_jnp_chain(m, p, kp, v, policy, block_b):
+    """One-pass Pallas kernel == its jnp chain mirror, every geometry, with
+    conflict chains crossing block boundaries (num_sets << batch)."""
+    from repro.core import init_table
+    from repro.core.multistep import set_index_for
+    from repro.kernels.ops import onepass_update
+    rng = np.random.default_rng(m * 97 + p * 13 + kp * 3 + v)
+    cfg = MSLRUConfig(num_sets=16, m=m, p=p, key_planes=kp, value_planes=v,
+                      policy=policy)
+    b = 512
+    qk = rng.integers(1, 200, (b, kp)).astype(np.int32)
+    qv = rng.integers(-500, 500, (b, v)).astype(np.int32)
+    valid = jnp.asarray(rng.random(b) < 0.9)
+    keys, vals = jnp.asarray(qk), jnp.asarray(qv)
+    sids = set_index_for(cfg, keys)
+    t0 = init_table(cfg)
+    from test_onepass_engine import assert_update_parity
+    assert_update_parity(
+        onepass_update(cfg, t0, sids, valid, keys, vals, use_kernel=False),
+        onepass_update(cfg, t0, sids, valid, keys, vals, use_kernel=True,
+                       block_b=block_b))

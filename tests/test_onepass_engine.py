@@ -1,0 +1,183 @@
+"""One-pass conflict-aware engine: bit-exactness vs sequential + rounds.
+
+The one-pass path (kernels/ops.onepass_update) must be bit-exact with the
+sequential engine on duplicate-heavy streams (the hard case: Zipfian θ≥0.99
+on a tiny set space drives per-set multiplicity well past 3), for every
+policy, with and without value planes, through both the Pallas kernel (in
+interpret mode on CPU) and its jnp mirror — and must match the rounds
+engine's served/result conventions exactly under ``max_rounds`` capping and
+``valid`` masking.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MSLRUConfig, MultiStepLRUCache, init_table
+from repro.core.engine import batched_rounds_update, make_batched_engine
+from repro.core.multistep import set_index_for
+from repro.data.ycsb import zipfian
+from repro.kernels.ops import (kernel_rounds_update, make_kernel_batched_engine,
+                               onepass_update)
+
+
+def assert_update_parity(expected, actual):
+    """(table, AccessResult, served) triples must match field-for-field."""
+    te, re_, se = expected
+    ta, ra, sa = actual
+    np.testing.assert_array_equal(np.asarray(se), np.asarray(sa))
+    np.testing.assert_array_equal(np.asarray(te), np.asarray(ta))
+    for f in re_._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(re_, f)),
+                                      np.asarray(getattr(ra, f)),
+                                      err_msg=f"{f} mismatch")
+
+
+def _duplicate_heavy_trace(n, num_sets, seed=7):
+    """Zipfian θ=0.99 over a key space ~8× the set count: per-set
+    multiplicity in a batch is routinely 3+ (asserted below)."""
+    return zipfian(8 * num_sets, n, alpha=0.99, seed=seed)
+
+
+@pytest.mark.parametrize("policy", ["multistep", "set_lru"])
+@pytest.mark.parametrize("value_planes", [0, 2])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_onepass_bitexact_vs_sequential_duplicate_heavy(policy, value_planes,
+                                                        use_kernel):
+    cfg = MSLRUConfig(num_sets=16, m=2, p=4, value_planes=value_planes,
+                      policy=policy)
+    keys = _duplicate_heavy_trace(2048, cfg.num_sets).astype(np.int32)
+    vals = (np.stack([keys * 3, keys * 5], -1).astype(np.int32)
+            if value_planes else np.zeros((len(keys), 0), np.int32))
+
+    # the stream must actually exercise 3+ chains for this test to mean much
+    sids = np.asarray(set_index_for(cfg, jnp.asarray(keys[:256, None])))
+    mult = np.bincount(sids, minlength=cfg.num_sets).max()
+    assert mult >= 3, f"trace too uniform (max per-set multiplicity {mult})"
+
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals)
+
+    eng = make_batched_engine(cfg, engine="onepass", use_kernel=use_kernel,
+                              block_b=64)
+    tbl = init_table(cfg)
+    hits, poss, values = [], [], []
+    batch = 256
+    for i in range(0, len(keys), batch):
+        tbl, res = eng(tbl, jnp.asarray(keys[i:i+batch, None]),
+                       jnp.asarray(vals[i:i+batch]))
+        hits.append(np.asarray(res.hit))
+        poss.append(np.asarray(res.pos))
+        values.append(np.asarray(res.value))
+    hits = np.concatenate(hits)
+    poss = np.concatenate(poss)
+    np.testing.assert_array_equal(hits, np.asarray(out.hit))
+    np.testing.assert_array_equal(poss, np.asarray(out.pos))
+    if value_planes:
+        values = np.concatenate(values)
+        h = hits
+        np.testing.assert_array_equal(values[h], np.asarray(out.value)[h])
+    np.testing.assert_array_equal(np.asarray(tbl), np.asarray(seq.table))
+
+
+def test_onepass_bitexact_100k_zipfian():
+    """Acceptance: bit-exact vs the sequential engine on a 100k-query
+    Zipfian stream (α=0.99, realistic geometry)."""
+    cfg = MSLRUConfig(num_sets=256, m=2, p=4, value_planes=0)
+    keys = zipfian(20_000, 100_000, alpha=0.99, seed=11).astype(np.int32)
+    vals = np.zeros((len(keys), 0), np.int32)
+
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals)
+
+    eng = make_batched_engine(cfg, engine="onepass", use_kernel=True,
+                              block_b=2048)
+    tbl = init_table(cfg)
+    hits = []
+    batch = 4096
+    n = len(keys) // batch * batch
+    for i in range(0, n, batch):
+        tbl, res = eng(tbl, jnp.asarray(keys[i:i+batch, None]),
+                       jnp.asarray(vals[i:i+batch]))
+        hits.append(np.asarray(res.hit))
+    seq_hits = np.asarray(out.hit)[:n]
+    np.testing.assert_array_equal(np.concatenate(hits), seq_hits)
+    # replay the tail through the sequential engine's table for the final
+    # state comparison
+    tail_tbl, _ = MultiStepLRUCache(cfg)._batched(jnp.asarray(np.asarray(tbl)),
+                                                  jnp.asarray(keys[n:, None]),
+                                                  jnp.asarray(vals[n:]))
+    np.testing.assert_array_equal(np.asarray(tail_tbl), np.asarray(seq.table))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("max_rounds", [None, 1, 2, 4])
+def test_onepass_matches_rounds_capped_and_masked(use_kernel, max_rounds):
+    """served mask, dropped-query reporting, and table must match the rounds
+    engine exactly under max_rounds capping and valid masking."""
+    rng = np.random.default_rng(42)
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=2)
+    b = 192
+    keys = jnp.asarray(rng.integers(1, 100, (b, 1)).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-99, 99, (b, 2)).astype(np.int32))
+    valid = jnp.asarray(rng.random(b) < 0.75)
+    sids = set_index_for(cfg, keys)
+    t0 = init_table(cfg)
+
+    assert_update_parity(
+        batched_rounds_update(cfg, t0, sids, valid, keys, vals, max_rounds),
+        onepass_update(cfg, t0, sids, valid, keys, vals, max_rounds,
+                       use_kernel=use_kernel, block_b=64))
+
+
+@pytest.mark.parametrize("max_rounds", [None, 1, 3])
+def test_kernel_rounds_update_parity(max_rounds):
+    """Satellite: the kernel-backed rounds engine now honours valid masking
+    and max_rounds identically to the XLA rounds engine."""
+    rng = np.random.default_rng(5)
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    b = 160
+    keys = jnp.asarray(rng.integers(1, 90, (b, 1)).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-9, 9, (b, 1)).astype(np.int32))
+    valid = jnp.asarray(rng.random(b) < 0.8)
+    sids = set_index_for(cfg, keys)
+    t0 = init_table(cfg)
+
+    assert_update_parity(
+        batched_rounds_update(cfg, t0, sids, valid, keys, vals, max_rounds),
+        kernel_rounds_update(cfg, t0, sids, valid, keys, vals, max_rounds,
+                             use_kernel=True, block_b=64))
+
+
+@pytest.mark.parametrize("engine", ["rounds", "onepass"])
+def test_kernel_batched_engine_switch(engine):
+    """Both switch positions of the unified kernel engine match sequential."""
+    rng = np.random.default_rng(1)
+    cfg = MSLRUConfig(num_sets=32, m=2, p=4, value_planes=1)
+    keys = rng.integers(1, 400, 1024).astype(np.int32)
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=keys[:, None])
+    eng = make_kernel_batched_engine(cfg, engine=engine, block_b=128)
+    tbl = init_table(cfg)
+    hits = []
+    for i in range(0, 1024, 256):
+        tbl, res = eng(tbl, jnp.asarray(keys[i:i+256, None]),
+                       jnp.asarray(keys[i:i+256, None]))
+        hits.append(np.asarray(res.hit))
+    np.testing.assert_array_equal(np.concatenate(hits), np.asarray(out.hit))
+    np.testing.assert_array_equal(np.asarray(tbl), np.asarray(seq.table))
+
+
+def test_onepass_key64_dual_plane():
+    """64-bit keys (two planes) route through the one-pass path intact."""
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, key_planes=2, value_planes=1)
+    keys = np.array([[1, 100], [2, 100], [1, 200], [1, 100]], np.int32)
+    vals = np.array([[7], [8], [9], [70]], np.int32)
+    eng = make_batched_engine(cfg, engine="onepass", use_kernel=True, block_b=4)
+    tbl = init_table(cfg)
+    tbl, _ = eng(tbl, jnp.asarray(keys), jnp.asarray(vals))
+    tbl, res = eng(tbl, jnp.asarray(keys[:3]), jnp.asarray(vals[:3]))
+    assert np.asarray(res.hit).all()
+    # the duplicate [1,100] in batch 1 hit the chain head's insert, so the
+    # stored value is the first writer's (access == get-or-put, not upsert)
+    assert (np.asarray(res.value)[:, 0] == [7, 8, 9]).all()

@@ -12,15 +12,16 @@ ROOT = Path(__file__).resolve().parent.parent
 
 _CHILD = r"""
 import os, sys, json
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
 sys.path.insert(0, "src")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import MSLRUConfig, init_table, MultiStepLRUCache
 from repro.core.sharded import make_sharded_engine, shard_table
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((8,), ("cache",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((%(ndev)d,), ("cache",))
 cfg = MSLRUConfig(num_sets=1024, m=2, p=4, value_planes=1)
-eng = make_sharded_engine(cfg, mesh, cap=512)
+eng = make_sharded_engine(cfg, mesh, cap=512, engine="%(engine)s")
 t = shard_table(init_table(cfg), mesh)
 rng = np.random.default_rng(1)
 keys = rng.integers(1, 5000, size=(4096, 1)).astype(np.int32)
@@ -40,11 +41,24 @@ print(json.dumps({"hits": hits, "seq_hits": seq_hits, "table_match": table_match
 """
 
 
-@pytest.mark.slow
-def test_sharded_engine_exact_on_8_devices():
-    res = subprocess.run([sys.executable, "-c", _CHILD],
+def _run_child(ndev: int, engine: str) -> dict:
+    src = _CHILD % {"ndev": ndev, "engine": engine}
+    res = subprocess.run([sys.executable, "-c", src],
                          capture_output=True, text=True, cwd=ROOT, timeout=600)
     assert res.returncode == 0, res.stderr[-2000:]
-    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_engine_exact_on_8_devices():
+    rec = _run_child(8, "rounds")
+    assert rec["hits"] == rec["seq_hits"]
+    assert rec["table_match"]
+
+
+@pytest.mark.slow
+def test_sharded_engine_onepass_exact_on_2_devices():
+    """The one-pass per-shard update is exact through the all_to_all route."""
+    rec = _run_child(2, "onepass")
     assert rec["hits"] == rec["seq_hits"]
     assert rec["table_match"]

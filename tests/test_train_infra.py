@@ -59,8 +59,8 @@ def test_checkpoint_latest_and_atomicity(tmp_path):
 def test_checkpoint_reshard(tmp_path):
     """Save unsharded, restore with an explicit (trivial) sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("x",))
     tree = {"w": jnp.arange(8, dtype=jnp.float32)}
     ck.save(tmp_path, 0, tree)
     sh = {"w": NamedSharding(mesh, P("x"))}
