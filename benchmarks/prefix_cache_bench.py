@@ -6,9 +6,24 @@ cache itself* — multi-step LRU vs exact-LRU-per-set (set_lru) vs in-vector
 (M=1) — holding everything else fixed.  The metric is the chunk hit ratio =
 fraction of prefill work skipped.  Scan-resistance matters: a burst of
 one-off prompts must not evict the hot templates.
+
+The cache is driven through the op-coded batched chain API
+(``lookup_chains``/``insert_chains``: one LOOKUP + one GET + one ACCESS
+batch per request), so the bench also reports ``device_calls`` — compare
+with ``per_chunk_calls``, what the per-chunk B=1 probing this replaced
+would have issued.  ``--engine`` selects the batched conflict scheme
+(onepass = the single-gather hot path, rounds = the oracle).
+
+``run()`` (standalone ``python -m benchmarks.prefix_cache_bench`` or via
+``benchmarks.run``) merges the engine's numbers into BENCH_prefix.json at
+the repo root, one entry per engine (the fig08 pattern).
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import numpy as np
 
@@ -38,43 +53,85 @@ def _workload(seed=0):
     return out
 
 
-def _run_policy(policy: str, m: int) -> dict:
+def _run_policy(policy: str, m: int, engine: str = "onepass") -> dict:
     pc = PrefixCache(num_sets=CACHE_SETS, m=m, p=4, chunk_tokens=CHUNK,
-                     policy=policy)
+                     policy=policy, engine=engine)
     page = 0
     skipped = total = 0
+    per_chunk_calls = 0  # what get-until-miss + per-chunk insert would cost
     for prompt in _workload():
         chain = chunk_chain_hashes(prompt, CHUNK)
-        pages = pc.lookup_chain(chain)
+        pages = pc.lookup_chains([chain])[0]
         skipped += len(pages) * CHUNK
         total += len(prompt)
         new = chain[len(pages):]
-        pc.insert_chain(new, list(range(page, page + len(new))))
+        per_chunk_calls += min(len(pages) + 1, len(chain)) + len(new)
+        pc.insert_chains([new], [list(range(page, page + len(new)))])
         page += len(new)
     st = pc.stats()
     st["prefill_saved_frac"] = skipped / total
+    st["device_calls"] = pc.device_calls
+    st["per_chunk_calls"] = per_chunk_calls
+    st["calls_per_request"] = pc.device_calls / N_REQUESTS
     return st
 
 
-def run(force: bool = False):
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_prefix.json"
+
+
+def run(force: bool = False, engine: str = "onepass"):
     def compute():
-        return {
-            "multistep_m2": _run_policy("multistep", 2),
-            "set_lru_m2": _run_policy("set_lru", 2),
-            "invector_m1": _run_policy("multistep", 1),
+        return {"engine": engine} | {
+            "multistep_m2": _run_policy("multistep", 2, engine),
+            "set_lru_m2": _run_policy("set_lru", 2, engine),
+            "invector_m1": _run_policy("multistep", 1, engine),
         }
 
-    return cached("prefix_cache_bench", compute, force)
+    # engine-keyed like fig08, so --engine never serves the other engine's
+    # cached blob
+    res = cached(f"prefix_cache_bench_{engine}", compute, force)
+    _emit_bench_json(res, engine)
+    return res
+
+
+def _emit_bench_json(res: dict, engine: str) -> None:
+    """Merge this engine's numbers into the cross-PR BENCH_prefix.json."""
+    doc = {}
+    if BENCH_JSON.exists():
+        try:
+            doc = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["benchmark"] = "prefix_cache"
+    doc.setdefault("engines", {})[engine] = {
+        k: v for k, v in res.items() if isinstance(v, dict)}
+    BENCH_JSON.write_text(json.dumps(doc, indent=1))
 
 
 def report(res: dict) -> list[str]:
-    lines = ["prefix-cache policy comparison (prefill tokens saved)"]
+    lines = [f"prefix-cache policy comparison (prefill tokens saved; "
+             f"engine={res.get('engine', 'onepass')})"]
     for k, r in res.items():
+        if not isinstance(r, dict):
+            continue
         lines.append(f"  {k:14s} saved={r['prefill_saved_frac']:.2%} "
                      f"chunk_hit_ratio={r['hit_ratio']:.3f} "
-                     f"evictions={r['evictions']}")
+                     f"evictions={r['evictions']} "
+                     f"device_calls={r.get('device_calls', 0)} "
+                     f"(vs {r.get('per_chunk_calls', 0)} per-chunk)")
     return lines
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--engine", choices=["rounds", "onepass"],
+                    default="onepass")
+    args = ap.parse_args()
+    res = run(force=args.force, engine=args.engine)
+    print("\n".join(report(res)))
+    print(f"merged into {BENCH_JSON}")
+
+
 if __name__ == "__main__":
-    print("\n".join(report(run())))
+    main()

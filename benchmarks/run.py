@@ -24,8 +24,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest modules (fig07 python baselines)")
     ap.add_argument("--engine", choices=["rounds", "onepass"], default="rounds",
-                    help="batched conflict scheme for fig08 (other figures "
-                         "keep their pinned engines)")
+                    help="batched conflict scheme for fig08 and the prefix "
+                         "bench (other figures keep their pinned engines)")
     args = ap.parse_args()
 
     from benchmarks import (fig06_invector_small, fig07_hit_ratio,
@@ -51,7 +51,7 @@ def main() -> None:
     csv = ["name,us_per_call,derived"]
     for name, mod in modules:
         t0 = time.time()
-        if name == "fig08":
+        if name in ("fig08", "prefix"):
             res = mod.run(force=args.force, engine=args.engine)
         else:
             res = mod.run(force=args.force)

@@ -17,6 +17,7 @@ from repro.core.multistep import (  # noqa: F401
     MSLRUConfig,
     init_table,
     row_access,
+    row_apply,
     row_delete,
     row_get,
     row_lookup,
@@ -27,6 +28,7 @@ from repro.core.engine import (  # noqa: F401
     OP_ACCESS,
     OP_DELETE,
     OP_GET,
+    OP_LOOKUP,
     make_batched_engine,
     make_chunked_stream_runner,
     make_sequential_engine,
@@ -37,6 +39,10 @@ __all__ = [
     "MSLRUConfig",
     "MultiStepLRUCache",
     "AccessResult",
+    "OP_ACCESS",
+    "OP_GET",
+    "OP_DELETE",
+    "OP_LOOKUP",
     "init_table",
     "EMPTY_KEY",
 ]
@@ -49,23 +55,29 @@ class MultiStepLRUCache:
     >>> res = cache.access(np.array([42]))
     """
 
-    def __init__(self, cfg: MSLRUConfig):
+    def __init__(self, cfg: MSLRUConfig, engine: str = "onepass",
+                 use_kernel: bool = False):
         self.cfg = cfg
         self.table = init_table(cfg)
         self._seq = make_sequential_engine(cfg, with_ops=True)
         # one-pass conflict resolution (bit-exact with the rounds engine,
-        # one HBM gather/scatter per batch); jnp chain — the XLA path is
-        # the performance path off-TPU
-        self._batched = make_batched_engine(cfg, engine="onepass",
-                                            use_kernel=False)
+        # one HBM gather/scatter per batch); the jnp chain is the default —
+        # ``use_kernel=True`` routes it through the Pallas kernel
+        self._batched = make_batched_engine(cfg, engine=engine,
+                                            use_kernel=use_kernel)
 
     # -- batched high-throughput path ----------------------------------------
-    def access(self, keys: np.ndarray, vals: np.ndarray | None = None):
-        """Batched get-or-insert. keys (B,) or (B, KP); vals (B, V)."""
+    def access(self, keys: np.ndarray, vals: np.ndarray | None = None,
+               ops: np.ndarray | None = None):
+        """Batched mixed-op call. keys (B,) or (B, KP); vals (B, V); ops (B,)
+        per-query opcodes (OP_* in this module; None = all OP_ACCESS)."""
         keys = self._canon_keys(keys)
         if vals is None:
             vals = np.zeros((keys.shape[0], self.cfg.value_planes), np.int32)
-        self.table, res = self._batched(self.table, keys, jnp.asarray(vals, jnp.int32))
+        if ops is not None:
+            ops = jnp.asarray(ops, jnp.int32)
+        self.table, res = self._batched(self.table, keys,
+                                        jnp.asarray(vals, jnp.int32), ops)
         return res
 
     # -- exact sequential path -------------------------------------------------

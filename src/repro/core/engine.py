@@ -23,6 +23,32 @@ Two execution models, both built on the row ops in multistep.py:
     set's row once, resolve the intra-set duplicate chain on-chip (Pallas
     kernel or jnp mirror), scatter once.  O(B) HBM traffic regardless of
     the conflict structure — the hot path.
+
+Opcodes
+-------
+Every engine takes an optional per-query ``ops`` vector (int32 OP_* codes;
+omitted = all OP_ACCESS) and applies the selected operation branch-free —
+a batch may freely mix the paper's §III.B operation set.  One normalized
+result contract holds across the sequential, rounds, one-pass (jnp and
+Pallas), and sharded engines, bit-for-bit:
+
+    op          hit path mutation     miss path mutation   result fields
+    ----------  --------------------  -------------------  --------------------
+    OP_ACCESS   promote / upgrade     insert; may evict    hit, pos, value;
+                                      the set-LRU victim   evicted_{key,val,
+                                                           valid} on eviction
+    OP_GET      promote / upgrade     none (no-op)         hit, pos, value
+    OP_LOOKUP   none (read-only)      none                 hit, pos, value
+    OP_DELETE   invalidate in place   none                 hit; pos = -1,
+                (no compaction)                            value = 0
+
+``value`` is the stored value planes of the hit item (on a miss it carries
+the same deterministic garbage in every engine — the probed row's lane-0
+value — so differential tests can compare outputs bitwise).  For served
+queries ``evicted_key`` is the EMPTY_KEY sentinel whenever nothing was
+evicted; queries dropped by a ``max_rounds`` cap (``served`` False) report
+all-zero evicted fields — test ``evicted_valid``, which is authoritative
+in both cases.
 """
 
 from __future__ import annotations
@@ -33,11 +59,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.multistep import (
+from repro.core.multistep import (  # noqa: F401  (OP_* re-exported)
     MSLRUConfig,
+    OP_ACCESS,
+    OP_DELETE,
+    OP_GET,
+    OP_LOOKUP,
     row_access,
-    row_delete,
-    row_get,
+    row_apply,
     set_index_for,
 )
 
@@ -45,6 +74,7 @@ __all__ = [
     "OP_ACCESS",
     "OP_GET",
     "OP_DELETE",
+    "OP_LOOKUP",
     "SeqOutputs",
     "make_sequential_engine",
     "make_batched_engine",
@@ -54,10 +84,6 @@ __all__ = [
     "sorted_group_ranks",
     "batched_rounds_update",
 ]
-
-OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
-OP_GET = 1     # get only (miss leaves the cache untouched)
-OP_DELETE = 2  # invalidate
 
 
 class SeqOutputs(NamedTuple):
@@ -74,38 +100,21 @@ def make_sequential_engine(cfg: MSLRUConfig, with_ops: bool = False):
 
     Scans the query stream one element at a time; each step touches exactly
     one set row (dynamic_slice / dynamic_update_slice), the JAX rendering of
-    the paper's single-threaded loop.
+    the paper's single-threaded loop.  ``with_ops=True`` adds the per-query
+    opcode argument (OP_ACCESS/OP_GET/OP_DELETE/OP_LOOKUP).
     """
     a, c = cfg.assoc, cfg.planes
 
     def one(table, qkey, qval, op):
         sid = set_index_for(cfg, qkey[None])[0]
         rows = jax.lax.dynamic_slice(table, (sid, 0, 0), (1, a, c))
-
-        def do_access(rows):
-            new_rows, res = row_access(cfg, rows, qkey[None], qval[None])
-            return new_rows, (res.hit[0], res.pos[0], res.value[0],
-                              res.evicted_key[0], res.evicted_val[0],
-                              res.evicted_valid[0])
-
-        def do_get(rows):
-            new_rows, hit, val, pos = row_get(cfg, rows, qkey[None])
-            ek = jnp.full((cfg.key_planes,), 0, jnp.int32)
-            ev = jnp.full((cfg.value_planes,), 0, jnp.int32)
-            return new_rows, (hit[0], pos[0], val[0], ek, ev, jnp.bool_(False))
-
-        def do_delete(rows):
-            new_rows, hit = row_delete(cfg, rows, qkey[None])
-            ek = jnp.full((cfg.key_planes,), 0, jnp.int32)
-            ev = jnp.full((cfg.value_planes,), 0, jnp.int32)
-            return new_rows, (hit[0], jnp.int32(-1), ev * 0, ek, ev, jnp.bool_(False))
-
-        if with_ops:
-            new_rows, out = jax.lax.switch(op, [do_access, do_get, do_delete], rows)
-        else:
-            new_rows, out = do_access(rows)
+        # row_apply is the single op-dispatch used by every engine, so the
+        # sequential oracle and the batched paths cannot drift per-op.
+        new_rows, res = row_apply(cfg, rows, qkey[None], qval[None], op[None])
         table = jax.lax.dynamic_update_slice(table, new_rows, (sid, 0, 0))
-        return table, out
+        return table, (res.hit[0], res.pos[0], res.value[0],
+                       res.evicted_key[0], res.evicted_val[0],
+                       res.evicted_valid[0])
 
     if with_ops:
         @jax.jit
@@ -151,22 +160,30 @@ def group_offsets(ids: jnp.ndarray) -> jnp.ndarray:
 
 
 def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
-                          max_rounds: int | None = None, row_op=None):
+                          max_rounds: int | None = None, row_op=None,
+                          ops=None):
     """Exact multi-query update: serialize same-set queries across rounds.
 
     table: (S, A, C); gsid: (B,) set id per query (entries with ``valid`` False
-    are ignored); returns (table, AccessResult, served).  Bit-exact w.r.t.
+    are ignored); ``ops`` (B,) optional per-query opcodes (default all
+    OP_ACCESS); returns (table, AccessResult, served).  Bit-exact w.r.t.
     processing the valid queries sequentially in batch order, because queries
     to distinct sets commute and round r applies exactly the r-th query of
     each set.  ``max_rounds`` bounds latency; excess queries are dropped
     (reported via res.hit=False and the served mask = offset < rounds).
 
-    ``row_op(rows, qkeys, qvals) -> (new_rows, AccessResult)`` is the batch
-    row transition; defaults to ``row_access``.  kernels/ops.py passes the
-    Pallas kernel here so both backends share this one serialization loop.
+    ``row_op(rows, qkeys, qvals, ops) -> (new_rows, AccessResult)`` is the
+    batch row transition; defaults to ``row_apply`` (``row_access`` when
+    ``ops`` is None — the ACCESS-only fast path compiles no op selects).
+    kernels/ops.py passes the Pallas kernel here so both backends share
+    this serialization loop.
     """
     if row_op is None:
-        row_op = functools.partial(row_access, cfg)
+        if ops is None:
+            def row_op(rows, qk, qv, _ops):
+                return row_access(cfg, rows, qk, qv)
+        else:
+            row_op = functools.partial(row_apply, cfg)
     s = cfg.num_sets if table.shape[0] == cfg.num_sets else table.shape[0]
     b = gsid.shape[0]
     gsid = jnp.where(valid, gsid, s)                  # sentinel group
@@ -186,7 +203,7 @@ def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     def body(carry):
         r, padded, acc = carry
         rows = jnp.take(padded, gsid, axis=0)
-        new_rows, res = row_op(rows, qkeys, qvals)
+        new_rows, res = row_op(rows, qkeys, qvals, ops)
         sel = (offset == r) & valid
         scatter_id = jnp.where(sel, gsid, s)          # losers pile onto dummy row
         padded = padded.at[scatter_id].set(new_rows)
@@ -217,7 +234,7 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
                          use_kernel: bool = False, block_b: int = 2048,
                          interpret: bool | None = None):
     """Bind the chosen conflict scheme to ``update(table, gsid, valid,
-    qkeys, qvals) -> (table, AccessResult, served)``.
+    qkeys, qvals, ops=None) -> (table, AccessResult, served)``.
 
     The single dispatch point for the ``engine`` switch — the batched and
     sharded engines both resolve through here so the option set, the
@@ -227,40 +244,50 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
     if engine == "onepass":
         from repro.kernels.ops import onepass_update  # deferred: kernels -> core
 
-        def update(table, gsid, valid, qkeys, qvals):
+        def update(table, gsid, valid, qkeys, qvals, ops=None):
             return onepass_update(cfg, table, gsid, valid, qkeys, qvals,
-                                  max_rounds, use_kernel, block_b, interpret)
+                                  max_rounds, use_kernel, block_b, interpret,
+                                  ops=ops)
     else:
         assert not use_kernel, (
             "engine='rounds' here is XLA-only; the kernel-backed rounds path "
             "lives in repro.kernels.ops.make_kernel_batched_engine")
 
-        def update(table, gsid, valid, qkeys, qvals):
+        def update(table, gsid, valid, qkeys, qvals, ops=None):
             return batched_rounds_update(cfg, table, gsid, valid, qkeys,
-                                         qvals, max_rounds)
+                                         qvals, max_rounds, ops=ops)
     return update
 
 
 def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
                         engine: str = "rounds", use_kernel: bool = False,
                         block_b: int = 2048, interpret: bool | None = None):
-    """Returns jit'd run(table, qkeys (B,KP), qvals (B,V)) -> (table, result).
+    """Returns run(table, qkeys (B,KP), qvals (B,V), ops=None) -> (table, result).
 
     Exact (sequential-equivalent) unless ``max_rounds`` caps the conflict
     serialization.  ``engine`` selects the conflict scheme: ``"rounds"``
     (per-round gather/scatter, the oracle) or ``"onepass"`` (single
     gather/scatter with on-chip chain resolution; ``use_kernel`` routes the
     chain loop through the Pallas kernel instead of its jnp mirror).
+    ``ops`` is an optional (B,) opcode vector (see the module docstring);
+    omitted means all OP_ACCESS.
     """
     update = make_conflict_update(cfg, engine, max_rounds, use_kernel,
                                   block_b, interpret)
 
     @jax.jit
-    def run(table, qkeys, qvals):
+    def run_ops(table, qkeys, qvals, ops):
+        # ops=None is a distinct (static) pytree structure: the ACCESS-only
+        # specialization compiles with no opcode operand at all.
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
-        table, res, _served = update(table, sids, valid, qkeys, qvals)
+        table, res, _served = update(table, sids, valid, qkeys, qvals, ops)
         return table, res
+
+    def run(table, qkeys, qvals, ops=None):
+        if ops is not None:
+            ops = jnp.asarray(ops, jnp.int32)
+        return run_ops(table, qkeys, qvals, ops)
 
     return run
 
@@ -271,17 +298,24 @@ def make_chunked_stream_runner(cfg: MSLRUConfig, batch: int,
     run_batch = make_batched_engine(cfg, engine=engine, **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run(table, qkeys, qvals):
+    def run_stream(table, qkeys, qvals, ops):
+        # ops=None (a static pytree structure) scans the ACCESS-only path
         n = qkeys.shape[0] // batch * batch
         qk = qkeys[:n].reshape(-1, batch, qkeys.shape[-1])
         qv = qvals[:n].reshape(-1, batch, qvals.shape[-1])
+        qo = None if ops is None else ops[:n].reshape(-1, batch)
 
         def step(tbl, xs):
-            k, v = xs
-            tbl, res = run_batch(tbl, k, v)
+            k, v, o = xs
+            tbl, res = run_batch(tbl, k, v, o)
             return tbl, jnp.sum(res.hit)
 
-        table, hits = jax.lax.scan(step, table, (qk, qv))
+        table, hits = jax.lax.scan(step, table, (qk, qv, qo))
         return table, jnp.sum(hits)
+
+    def run(table, qkeys, qvals, ops=None):
+        if ops is not None:
+            ops = jnp.asarray(ops, jnp.int32)
+        return run_stream(table, qkeys, qvals, ops)
 
     return run

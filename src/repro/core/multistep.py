@@ -34,17 +34,31 @@ from repro.core.invector import EMPTY_KEY, get_update_lo
 __all__ = [
     "MSLRUConfig",
     "AccessResult",
+    "OP_ACCESS",
+    "OP_GET",
+    "OP_DELETE",
+    "OP_LOOKUP",
     "init_table",
     "row_lookup",
     "row_get",
     "row_put",
     "row_access",
     "row_delete",
+    "row_apply",
     "set_index_for",
 ]
 
 POLICY_MULTISTEP = "multistep"
 POLICY_SET_LRU = "set_lru"  # exact LRU *within* each set (baseline)
+
+# Per-query opcodes (the paper's §III.B operation set).  The numeric values
+# are part of the on-device ABI: they travel through sort prologues, Pallas
+# kernel operands, and all_to_all payload planes.  policies.py mirrors them
+# for the pure-Python oracle (asserted equal in tests).
+OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
+OP_GET = 1     # get only (a miss leaves the cache untouched)
+OP_DELETE = 2  # invalidate in place
+OP_LOOKUP = 3  # read-only probe (no recency update, no mutation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,3 +247,45 @@ def row_delete(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
     key0 = jnp.where(kill, EMPTY_KEY, rows[..., 0])
     new_rows = rows.at[..., 0].set(key0)
     return new_rows, hit
+
+
+def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
+              qvals: jnp.ndarray, ops: jnp.ndarray):
+    """Branch-free mixed-op transition: per-row opcode selects the op.
+
+    rows (B, A, C); qkeys (B, KP); qvals (B, V); ops (B,) int32 OP_* codes.
+    All four transitions are computed once over the whole batch and the
+    opcode picks per row — the batch stays SPMD regardless of the op mix.
+    Returns (new_rows, AccessResult) with one normalized result contract for
+    every engine (see the opcode table in engine.py):
+
+      * hit/pos/value come from the probe for LOOKUP/GET/ACCESS; DELETE
+        reports hit (found) but pos = -1 and value = 0,
+      * evicted_* fire only for an evicting ACCESS insert; everywhere else
+        evicted_key carries the EMPTY_KEY sentinel (never query garbage).
+    """
+    is_acc = ops == OP_ACCESS
+    is_del = ops == OP_DELETE
+    is_look = ops == OP_LOOKUP
+
+    got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
+    put_rows, ev_k, ev_v, ev_ok = row_put(cfg, rows, qkeys, qvals)
+    del_rows, _ = row_delete(cfg, rows, qkeys)
+
+    # GET falls back to got_rows, which is a provable identity on a miss.
+    acc_or_get = jnp.where((is_acc & ~hit)[..., None, None], put_rows, got_rows)
+    new_rows = jnp.where(
+        is_del[..., None, None], del_rows,
+        jnp.where(is_look[..., None, None], rows, acc_or_get))
+
+    evicting = is_acc & ~hit
+    res = AccessResult(
+        hit=hit,
+        value=jnp.where(is_del[..., None], 0, value),
+        pos=jnp.where(is_del, -1, pos),
+        evicted_key=jnp.where(evicting[..., None], ev_k,
+                              jnp.full_like(ev_k, EMPTY_KEY)),
+        evicted_val=jnp.where(evicting[..., None], ev_v, 0),
+        evicted_valid=evicting & ev_ok,
+    )
+    return new_rows, res

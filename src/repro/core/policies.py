@@ -22,6 +22,11 @@ import numpy as np
 
 __all__ = [
     "fmix32_py",
+    "fmix64_py",
+    "OP_ACCESS",
+    "OP_GET",
+    "OP_DELETE",
+    "OP_LOOKUP",
     "MultiStepLRUOracle",
     "ExactLRU",
     "GClock",
@@ -31,6 +36,14 @@ __all__ = [
 ]
 
 _MASK32 = 0xFFFFFFFF
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+
+# Mirrors of the engine opcodes (core/multistep.py) — kept as literals so
+# this module stays importable without jax; equality is asserted in tests.
+OP_ACCESS = 0
+OP_GET = 1
+OP_DELETE = 2
+OP_LOOKUP = 3
 
 
 def fmix32_py(x: int) -> int:
@@ -44,6 +57,17 @@ def fmix32_py(x: int) -> int:
     return x
 
 
+def fmix64_py(x: int) -> int:
+    """Python mirror of hashing.fmix64_planes (uint64 semantics)."""
+    x &= _MASK64
+    x ^= x >> 33
+    x = (x * 0xFF51AFD7ED558CCD) & _MASK64
+    x ^= x >> 33
+    x = (x * 0xC4CEB9FE1A85EC53) & _MASK64
+    x ^= x >> 33
+    return x
+
+
 EMPTY = None  # oracle-side empty slot marker
 
 
@@ -52,17 +76,26 @@ class MultiStepLRUOracle:
 
     Each set is a flat list of A = M*P slots ordered hot->cold; slot value is
     (key, val) or None.  ``policy='set_lru'`` gives exact-LRU-within-set.
+    ``key_planes=2`` models the paper's 64-bit keys: a key is then an
+    ``(hi, lo)`` pair of int32 plane values, hashed with fmix64 exactly like
+    ``multistep.set_index_for``.
     """
 
-    def __init__(self, num_sets: int, m: int = 2, p: int = 4, policy: str = "multistep"):
+    def __init__(self, num_sets: int, m: int = 2, p: int = 4,
+                 policy: str = "multistep", key_planes: int = 1):
         assert num_sets & (num_sets - 1) == 0
         self.s, self.m, self.p = num_sets, m, p
         self.a = m * p
         self.policy = policy
+        self.key_planes = key_planes
         self.sets = [[None] * self.a for _ in range(num_sets)]
 
     # -- internals ----------------------------------------------------------
-    def set_index(self, key: int) -> int:
+    def set_index(self, key) -> int:
+        if self.key_planes == 2:
+            hi, lo = key
+            h = fmix64_py(((hi & _MASK32) << 32) | (lo & _MASK32))
+            return h & _MASK32 & (self.s - 1)
         return fmix32_py(key) & (self.s - 1)
 
     def _find(self, row, key) -> int:
@@ -126,6 +159,28 @@ class MultiStepLRUOracle:
             return False
         row[pos] = None
         return True
+
+    def apply(self, op: int, key, val=0) -> dict:
+        """Opcode dispatch with the engines' normalized result contract
+        (see the table in core/engine.py): returns a dict with ``hit``,
+        ``pos`` (-1 for DELETE and misses), ``value`` (None unless a
+        non-DELETE hit), and ``evicted`` ((key, val) for an evicting ACCESS
+        insert, else None)."""
+        if op == OP_LOOKUP:
+            hit, value, pos = self.lookup(key)
+            return {"hit": hit, "pos": pos, "value": value, "evicted": None}
+        if op == OP_GET:
+            hit, value, pos = self.get(key)
+            return {"hit": hit, "pos": pos, "value": value, "evicted": None}
+        if op == OP_DELETE:
+            hit = self.delete(key)
+            return {"hit": hit, "pos": -1, "value": None, "evicted": None}
+        assert op == OP_ACCESS, op
+        hit, value, pos = self.get(key)
+        if hit:
+            return {"hit": True, "pos": pos, "value": value, "evicted": None}
+        return {"hit": False, "pos": -1, "value": None,
+                "evicted": self.put(key, val)}
 
     def dump_keys(self) -> np.ndarray:
         """(S, A) int64 key matrix with EMPTY as a large negative sentinel."""

@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.engine import make_conflict_update
 from repro.core.invector import EMPTY_KEY
-from repro.core.multistep import MSLRUConfig, set_index_for
+from repro.core.multistep import MSLRUConfig, OP_ACCESS, set_index_for
 from repro.launch.mesh import shard_map_compat as _shard_map
 
 __all__ = ["make_sharded_engine", "shard_table"]
@@ -50,10 +50,14 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
                         max_rounds: int | None = None, engine: str = "rounds",
                         use_kernel: bool = False, block_b: int = 2048,
                         interpret: bool | None = None):
-    """Build jit(shard_map) run(table, qkeys, qvals) -> (table, hit, served).
+    """Build run(table, qkeys, qvals, ops=None) -> (table, hit, val, served).
 
     table: (S, A, C) sharded over sets on ``axis``.
     qkeys: (Q, KP), qvals: (Q, V) sharded over queries on ``axis``.
+    ops:   (Q,) optional per-query opcodes; the opcode rides the all_to_all
+           payload as one extra int32 plane.  ``None`` routes the ACCESS-only
+           specialization (no ops plane, no opcode selects — the legacy
+           hot path, compiled separately).
     hit:   (Q,) bool — False for misses AND overflow-dropped queries.
     served:(Q,) bool — False only for overflow-dropped queries.
     engine: per-shard conflict scheme — "rounds" (gather/scatter per round)
@@ -67,7 +71,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
     s_local = cfg.num_sets // ndev
     kp, v = cfg.key_planes, cfg.value_planes
 
-    def local_fn(table, qkeys, qvals):
+    def local_fn(table, qkeys, qvals, ops=None):
         # table (s_local, A, C); qkeys (q_local, KP); qvals (q_local, V)
         q_local = qkeys.shape[0]
         k = cap if cap is not None else max(1, (2 * q_local) // ndev)
@@ -81,7 +85,8 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         served = slot < k                                   # overflow -> dropped
 
         # pack send buffers (ndev, k, planes); padded entries get EMPTY keys
-        payload = jnp.concatenate([qkeys, qvals], axis=-1) if v else qkeys
+        planes = [qkeys, qvals] + ([] if ops is None else [ops[:, None]])
+        payload = jnp.concatenate(planes, axis=-1)
         pc = payload.shape[-1]
         send = jnp.full((ndev, k, pc), EMPTY_KEY, jnp.int32)
         didx = jnp.where(served, owner, ndev - 1)           # clamp for scatter
@@ -94,12 +99,14 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
 
         recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=True)
         rq = recv.reshape(ndev * k, pc)
-        r_keys, r_vals = rq[:, :kp], rq[:, kp:]
+        r_keys, r_vals = rq[:, :kp], rq[:, kp: kp + v]
         valid = r_keys[:, 0] != EMPTY_KEY
+        r_ops = (None if ops is None
+                 else jnp.where(valid, rq[:, kp + v], OP_ACCESS))
 
         # exact local update (same conflict schemes as the batched engine)
         lsid = set_index_for(cfg, r_keys) % s_local
-        table, res, _served = update(table, lsid, valid, r_keys, r_vals)
+        table, res, _served = update(table, lsid, valid, r_keys, r_vals, r_ops)
 
         hit_back = (res.hit & valid).astype(jnp.int32).reshape(ndev, k, 1)
         val_back = (res.value if v else
@@ -113,13 +120,26 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         my_val = back[didx, sidx, 1:]
         return table, my_hit, my_val, served
 
-    fn = _shard_map(
+    out_specs = (P(axis, None, None), P(axis), P(axis, None), P(axis))
+    fn_noops = jax.jit(_shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None), P(axis, None)),
-        out_specs=(P(axis, None, None), P(axis), P(axis, None), P(axis)),
-    )
-    return jax.jit(fn)
+        out_specs=out_specs,
+    ))
+    fn_ops = jax.jit(_shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None), P(axis, None), P(axis)),
+        out_specs=out_specs,
+    ))
+
+    def run(table, qkeys, qvals, ops=None):
+        if ops is None:
+            return fn_noops(table, qkeys, qvals)
+        return fn_ops(table, qkeys, qvals, jnp.asarray(ops, jnp.int32))
+
+    return run
 
 
 def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",

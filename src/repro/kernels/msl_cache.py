@@ -8,7 +8,9 @@ entire fused get-or-put transition with lane-select arithmetic on the VPU —
 no gathers, no scalar loops, no pattern table (see invector.py for the
 mapping from the paper's ``vpermd`` idiom).
 
-Two kernels share the transition math (``_transition``):
+Two kernels share the transition math (``_transition``), which applies a
+per-row opcode (LOOKUP/GET/ACCESS/DELETE — see the table in core/engine.py)
+with pure lane selects, so a batch may mix operations freely:
 
 * ``msl_access_kernel_call`` — stateless: one transition per row, conflicts
   (duplicate set ids in the batch) are the *caller's* problem (the rounds
@@ -34,7 +36,7 @@ input tile, the loop's double-buffered row state, and the outputs:
     rows_in  BB*A*C          (gathered set rows, one per sorted query)
     loop     2 * BB*A*C      (``cur`` chain state + ``after`` committed state)
     queries  BB*(KP + V)
-    meta     3*BB            (set id, local rank, served)
+    meta     4*BB            (opcode, set id, local rank, served)
     outputs  BB*(A*C + 2 + V + C)
     carry    A*C + 1         (cross-block chain scratch)
 
@@ -59,16 +61,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.invector import EMPTY_KEY
-from repro.core.multistep import MSLRUConfig
+from repro.core.multistep import MSLRUConfig, OP_ACCESS, OP_DELETE, OP_LOOKUP
 
 __all__ = ["msl_access_kernel_call", "msl_onepass_kernel_call"]
 
 
-def _transition(cfg: MSLRUConfig, rows, qk, qv):
-    """Fused get-or-put on (BB, A, C) rows; pure lane select/reduce arithmetic.
+def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None):
+    """Mixed-op transition on (BB, A, C) rows; pure lane select/reduce math.
 
-    Returns (new_rows, hit (BB,) bool, pos (BB,) int32, at_pos (BB, C),
-    ev (BB, C) with key plane 0 == EMPTY_KEY when nothing was evicted).
+    ``ops`` (BB,) int32 opcode per row (OP_ACCESS/OP_GET/OP_DELETE/
+    OP_LOOKUP); ``None`` keeps the legacy all-ACCESS specialization (no
+    opcode selects compiled in).  Returns (new_rows, hit (BB,) bool, pos
+    (BB,) int32, val (BB, C), ev (BB, C) with key plane 0 == EMPTY_KEY when
+    nothing was evicted); pos/val/ev follow the normalized per-op contract
+    of ``core.multistep.row_apply`` (DELETE: pos = -1, val = 0; only an
+    evicting ACCESS reports a real ev).
     """
     a = cfg.assoc
     kp, v = cfg.key_planes, cfg.value_planes
@@ -104,10 +111,13 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv):
     hi_put = pos_ins
 
     # --- fuse: one rotate_insert with per-row (lo, hi, item) --------------
-    lo = jnp.where(hit, lo_get, lo_put)
-    hi = jnp.where(hit, hi_get, hi_put)
+    # The put range applies only to an ACCESS miss; a GET miss degenerates
+    # to the identity rotation (lo = hi = 0, item = rows[0]).
+    use_put = ~hit if ops is None else (ops == OP_ACCESS) & ~hit
+    lo = jnp.where(use_put, lo_put, lo_get)
+    hi = jnp.where(use_put, hi_put, hi_get)
     new_item = jnp.concatenate([qk, qv], axis=-1) if v else qk      # (BB, C)
-    item = jnp.where(hit[:, None], at_pos, new_item)
+    item = jnp.where(use_put[:, None], new_item, at_pos)
 
     shifted = jnp.roll(rows, 1, axis=1)
     lane3 = lane[..., None]
@@ -123,25 +133,41 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv):
         [jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32),
          jnp.zeros((rows.shape[0], v), jnp.int32)], axis=-1
     ) if v else jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32)
-    ev = jnp.where(hit[:, None], empty_ev, displaced)
-    return out, hit, pos, at_pos, ev
+
+    if ops is None:
+        return out, hit, pos, at_pos, jnp.where(hit[:, None], empty_ev, displaced)
+
+    is_del = ops == OP_DELETE
+    is_look = ops == OP_LOOKUP
+    # DELETE: kill key plane 0 at the hit lane; LOOKUP: pass rows through.
+    kill = (lane == pos_c[:, None]) & (hit & is_del)[:, None]       # (BB, A)
+    cidx = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 2)       # (BB, A, C)
+    del_rows = jnp.where((cidx == 0) & kill[..., None],
+                         jnp.int32(EMPTY_KEY), rows)
+    out = jnp.where(is_del[:, None, None], del_rows,
+                    jnp.where(is_look[:, None, None], rows, out))
+
+    ev = jnp.where((hit | ~(ops == OP_ACCESS))[:, None], empty_ev, displaced)
+    pos_out = jnp.where(is_del, -1, pos)
+    val_out = jnp.where(is_del[:, None], 0, at_pos)
+    return out, hit, pos_out, val_out, ev
 
 
-def _chain_body(cfg: MSLRUConfig, qk, qv, lrank, served):
+def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served):
     """fori_loop body resolving one duplicate-chain step (shared verbatim by
     the Pallas one-pass kernel and its jnp mirror in ops.py).
 
     State: (cur chain rows, after committed rows, hit, pos, val, ev).  At
-    step r the queries with chain rank r apply their transition (identity
-    when not ``served``), commit into ``after``, and hand the updated row to
-    rank r+1 via a batch-axis shift (sorted order makes chain neighbours
-    adjacent).
+    step r the queries with chain rank r apply their transition — selected
+    per row by ``ops`` (identity when not ``served``) — commit into
+    ``after``, and hand the updated row to rank r+1 via a batch-axis shift
+    (sorted order makes chain neighbours adjacent).
     """
     kp, v = cfg.key_planes, cfg.value_planes
 
     def body(r, state):
         cur, after, h, po, va, ev = state
-        new_rows, hitv, posv, at_pos, evv = _transition(cfg, cur, qk, qv)
+        new_rows, hitv, posv, valv, evv = _transition(cfg, cur, qk, qv, ops)
         active = lrank == r
         act = active & served                 # dropped queries: identity
         eff = jnp.where(act[:, None, None], new_rows, cur)
@@ -149,7 +175,7 @@ def _chain_body(cfg: MSLRUConfig, qk, qv, lrank, served):
         h = jnp.where(act, hitv.astype(jnp.int32), h)
         po = jnp.where(act, posv, po)
         if v:
-            va = jnp.where(act[:, None], at_pos[:, kp:], va)
+            va = jnp.where(act[:, None], valv[:, kp:], va)
         ev = jnp.where(act[:, None], evv, ev)
         nxt = jnp.roll(after, 1, axis=0)
         cur = jnp.where((lrank == r + 1)[:, None, None], nxt, cur)
@@ -169,37 +195,47 @@ def _chain_state0(cfg: MSLRUConfig, rows):
             jnp.zeros((b, rows.shape[-1]), jnp.int32))
 
 
-def _kernel(cfg: MSLRUConfig, krows_ref, qkey_ref, qval_ref,
-            out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref):
+def _kernel(cfg: MSLRUConfig, has_ops: bool, *refs):
+    if has_ops:
+        (krows_ref, qkey_ref, qval_ref, ops_ref,
+         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
+        ops = ops_ref[...]                    # (BB,) opcodes
+    else:  # ACCESS-only specialization: no opcode operand, no op selects
+        (krows_ref, qkey_ref, qval_ref,
+         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
+        ops = None
     kp, v = cfg.key_planes, cfg.value_planes
     rows = krows_ref[...]                     # (BB, A, C) int32
     qk = qkey_ref[...]                        # (BB, KP)
     qv = qval_ref[...]                        # (BB, V)
 
-    out, hit, pos, at_pos, ev = _transition(cfg, rows, qk, qv)
+    out, hit, pos, val, ev = _transition(cfg, rows, qk, qv, ops)
 
     out_rows_ref[...] = out
     hit_ref[...] = hit.astype(jnp.int32)
     pos_ref[...] = pos
     if v:
-        val_ref[...] = at_pos[:, kp:]
+        val_ref[...] = val[:, kp:]
     else:  # dummy 1-plane output (sliced off by the wrapper)
         val_ref[...] = jnp.zeros(val_ref.shape, jnp.int32)
     ev_ref[...] = ev
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
-def msl_access_kernel_call(rows, qkeys, qvals, *, cfg: MSLRUConfig,
+def msl_access_kernel_call(rows, qkeys, qvals, ops=None, *, cfg: MSLRUConfig,
                            block_b: int = 2048, interpret: bool = True):
-    """Fused multi-step LRU access over pre-gathered rows.
+    """Fused multi-step LRU op over pre-gathered rows.
 
-    rows (B, A, C) int32; qkeys (B, KP); qvals (B, V).  B is padded to a
-    multiple of block_b with EMPTY queries (their outputs are sliced away).
-    Returns the same tuple as ref.msl_access_ref.
+    rows (B, A, C) int32; qkeys (B, KP); qvals (B, V); ops (B,) optional
+    opcode vector — ``None`` compiles the ACCESS-only kernel with no opcode
+    operand (the legacy hot path, zero overhead).  B is padded to a multiple
+    of block_b with EMPTY queries (their outputs are sliced away).  Returns
+    the same tuple as ref.msl_access_ref.
     """
     b, a, c = rows.shape
     kp, v = cfg.key_planes, cfg.value_planes
     ve = max(v, 1)  # BlockSpec needs >= 1 plane; dummy sliced off below
+    has_ops = ops is not None
     bb = min(block_b, b)
     pad = (-b) % bb
     if pad:
@@ -207,6 +243,9 @@ def msl_access_kernel_call(rows, qkeys, qvals, *, cfg: MSLRUConfig,
             [rows, jnp.broadcast_to(_empty_row(cfg), (pad, a, c))])
         qkeys = jnp.concatenate([qkeys, jnp.zeros((pad, kp), jnp.int32)])
         qvals = jnp.concatenate([qvals, jnp.zeros((pad, v), jnp.int32)])
+        if has_ops:
+            ops = jnp.concatenate(
+                [ops, jnp.full((pad,), OP_ACCESS, jnp.int32)])
     bp = b + pad
     qvals_e = qvals if v else jnp.zeros((bp, 1), jnp.int32)
 
@@ -219,32 +258,41 @@ def msl_access_kernel_call(rows, qkeys, qvals, *, cfg: MSLRUConfig,
         jax.ShapeDtypeStruct((bp, c), jnp.int32),
     )
     row_spec = pl.BlockSpec((bb, a, c), lambda i: (i, 0, 0))
+    flat_spec = pl.BlockSpec((bb,), lambda i: (i,))
     out = pl.pallas_call(
-        functools.partial(_kernel, cfg),
+        functools.partial(_kernel, cfg, has_ops),
         grid=grid,
         in_specs=[
             row_spec,
             pl.BlockSpec((bb, kp), lambda i: (i, 0)),
             pl.BlockSpec((bb, ve), lambda i: (i, 0)),
-        ],
+        ] + ([flat_spec] if has_ops else []),
         out_specs=[
             row_spec,
-            pl.BlockSpec((bb,), lambda i: (i,)),
-            pl.BlockSpec((bb,), lambda i: (i,)),
+            flat_spec,
+            flat_spec,
             pl.BlockSpec((bb, ve), lambda i: (i, 0)),
             pl.BlockSpec((bb, c), lambda i: (i, 0)),
         ],
         out_shape=out_shapes,
         interpret=interpret,
-    )(rows, qkeys, qvals_e)
+    )(rows, qkeys, qvals_e, *((ops,) if has_ops else ()))
     rows_o, hit_o, pos_o, val_o, ev_o = (o[:b] for o in out)
     return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
 
 
-def _onepass_kernel(cfg: MSLRUConfig, nrounds_ref, krows_ref, qkey_ref,
-                    qval_ref, sid_ref, lrank_ref, served_ref,
-                    out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
-                    carry_row_ref, carry_sid_ref):
+def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, nrounds_ref, krows_ref,
+                    qkey_ref, qval_ref, *refs):
+    if has_ops:
+        (ops_ref, sid_ref, lrank_ref, served_ref,
+         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+         carry_row_ref, carry_sid_ref) = refs
+        ops = ops_ref[...]                    # (BB,) sorted opcodes
+    else:  # ACCESS-only specialization: no opcode operand, no op selects
+        (sid_ref, lrank_ref, served_ref,
+         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+         carry_row_ref, carry_sid_ref) = refs
+        ops = None
     pid = pl.program_id(0)
 
     @pl.when(pid == 0)
@@ -270,7 +318,7 @@ def _onepass_kernel(cfg: MSLRUConfig, nrounds_ref, krows_ref, qkey_ref,
     bb = rows.shape[0]
     n_rounds = nrounds_ref[pid]               # scalar-prefetched trip count
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, lrank, served),
+        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served),
         _chain_state0(cfg, rows))
 
     out_rows_ref[...] = after
@@ -283,14 +331,17 @@ def _onepass_kernel(cfg: MSLRUConfig, nrounds_ref, krows_ref, qkey_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
-def msl_onepass_kernel_call(rows, qkeys, qvals, sids, lrank, served, nrounds,
-                            *, cfg: MSLRUConfig, block_b: int = 2048,
+def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
+                            nrounds, *, cfg: MSLRUConfig, block_b: int = 2048,
                             interpret: bool = True):
-    """Conflict-aware single-pass access over *sorted-by-set-id* queries.
+    """Conflict-aware single-pass mixed-op batch over *sorted-by-set-id* queries.
 
     rows (B, A, C) int32 — set rows gathered once (only the entry at each
     duplicate chain's head needs to be live; the rest are resolved on-chip);
-    qkeys (B, KP); qvals (B, V); sids (B,) sorted set ids; lrank (B,) rank of
+    qkeys (B, KP); qvals (B, V); ops (B,) sorted opcodes (each chain step
+    applies its own query's op) or ``None`` for the ACCESS-only kernel with
+    no opcode operand (the legacy hot path); sids (B,) sorted set ids;
+    lrank (B,) rank of
     each query within its block-local duplicate chain; served (B,) int32
     mask (0 ⇒ the transition is skipped, identity on the chain); nrounds
     (ceil(B/block_b),) int32 per-block chain depth (scalar-prefetched).
@@ -303,6 +354,7 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, sids, lrank, served, nrounds,
     b, a, c = rows.shape
     kp, v = cfg.key_planes, cfg.value_planes
     ve = max(v, 1)
+    has_ops = ops is not None
     bb = min(block_b, b)
     assert b % bb == 0, "one-pass kernel expects pre-padded batch"
     qvals_e = qvals if v else jnp.zeros((b, 1), jnp.int32)
@@ -316,10 +368,7 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, sids, lrank, served, nrounds,
             row_spec,
             pl.BlockSpec((bb, kp), lambda i, nr: (i, 0)),
             pl.BlockSpec((bb, ve), lambda i, nr: (i, 0)),
-            flat_spec,
-            flat_spec,
-            flat_spec,
-        ],
+        ] + [flat_spec] * (4 if has_ops else 3),
         out_specs=[
             row_spec,
             flat_spec,
@@ -340,11 +389,12 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, sids, lrank, served, nrounds,
         jax.ShapeDtypeStruct((b, c), jnp.int32),
     )
     out = pl.pallas_call(
-        functools.partial(_onepass_kernel, cfg),
+        functools.partial(_onepass_kernel, cfg, has_ops),
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(nrounds, rows, qkeys, qvals_e, sids, lrank, served)
+    )(nrounds, rows, qkeys, qvals_e,
+      *((ops,) if has_ops else ()), sids, lrank, served)
     rows_o, hit_o, pos_o, val_o, ev_o = out
     return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
 

@@ -9,9 +9,11 @@ the duplicate-chain metadata, the table is gathered **once** (one live row
 per distinct set; duplicate-chain members read the dummy row), the chain is
 resolved on-chip (Pallas kernel, or an identical jnp loop when
 ``use_kernel=False``), and one scatter epilogue commits each chain's tail
-row.  Contract: bit-exact with ``engine.batched_rounds_update`` — same
-(table, AccessResult, served) for any (valid, max_rounds) — while touching
-HBM exactly twice per batch instead of twice per conflict round.
+row.  The optional ``ops`` vector rides the same sort, so one pass may mix
+LOOKUP/GET/ACCESS/DELETE freely (opcode table in core/engine.py).
+Contract: bit-exact with ``engine.batched_rounds_update`` — same
+(table, AccessResult, served) for any (valid, max_rounds, ops) — while
+touching HBM exactly twice per batch instead of twice per conflict round.
 
 ``kernel_rounds_update`` is the legacy rounds path with the kernel as the
 row transition, kept as the bit-exactness oracle for the one-pass engine;
@@ -52,42 +54,47 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, use_kernel: bool = True,
-               block_b: int = 2048, interpret: bool | None = None):
-    """Fused get-or-put on pre-gathered rows; kernel or oracle backend."""
+def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, ops=None,
+               use_kernel: bool = True, block_b: int = 2048,
+               interpret: bool | None = None):
+    """Mixed-op transition on pre-gathered rows; kernel or oracle backend."""
     if not use_kernel:
-        return msl_access_ref(rows, qkeys, qvals, cfg)
+        return msl_access_ref(rows, qkeys, qvals, cfg, ops)
     if interpret is None:
         interpret = _on_cpu()
     return msl_access_kernel_call(
-        rows, qkeys, qvals, cfg=cfg, block_b=block_b, interpret=interpret)
+        rows, qkeys, qvals, ops, cfg=cfg, block_b=block_b, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
 # One-pass conflict-aware update
 # ---------------------------------------------------------------------------
 
-def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, lrank, served, n_rounds):
+def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, ops, lrank, served,
+                       n_rounds):
     """jnp mirror of the one-pass kernel: the same ``_chain_body`` loop, run
     in XLA over the whole sorted batch (no blocks, so no carry needed).
 
-    rows (B, A, C) sorted-by-set gathered rows; lrank (B,) chain rank;
-    served (B,) bool; n_rounds: dynamic trip count (max chain length).
-    Returns (rows_after, hit_i32, pos, value, ev) like the kernel.
+    rows (B, A, C) sorted-by-set gathered rows; ops (B,) sorted opcodes;
+    lrank (B,) chain rank; served (B,) bool; n_rounds: dynamic trip count
+    (max chain length).  Returns (rows_after, hit_i32, pos, value, ev) like
+    the kernel.
     """
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, lrank, served),
+        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served),
         _chain_state0(cfg, rows))
     return after, h, po, va[:, : cfg.value_planes], ev
 
 
 def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                    max_rounds: int | None = None, use_kernel: bool = True,
-                   block_b: int = 2048, interpret: bool | None = None):
+                   block_b: int = 2048, interpret: bool | None = None,
+                   ops=None):
     """Single-pass exact multi-query update (one HBM gather + one scatter).
 
     Same contract as ``engine.batched_rounds_update``: table (S, A, C);
     gsid (B,) set id per query (``valid`` False entries are ignored);
+    ``ops`` (B,) optional per-query opcodes (None = all OP_ACCESS);
     returns (table, AccessResult, served).  Bit-exact w.r.t. processing the
     valid queries sequentially in batch order; ``max_rounds`` drops queries
     whose within-set rank exceeds the cap (res.hit=False, served=False),
@@ -98,6 +105,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     s = table.shape[0]
     b = gsid.shape[0]
     kp, v = cfg.key_planes, cfg.value_planes
+    if ops is not None:  # None stays None: ACCESS-only specialization
+        ops = jnp.asarray(ops, jnp.int32)
 
     # --- prologue: pad, sort by set id, derive duplicate-chain metadata ---
     bb = min(block_b, b) if use_kernel else b
@@ -108,6 +117,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
         qkeys = jnp.concatenate([qkeys, jnp.zeros((pad, kp), jnp.int32)])
         qvals = jnp.concatenate([qvals, jnp.zeros((pad, v), jnp.int32)])
+        if ops is not None:
+            ops = jnp.concatenate([ops, jnp.zeros((pad,), jnp.int32)])
 
     i = jnp.arange(bp, dtype=jnp.int32)
     sid_key = jnp.where(valid, gsid, s).astype(jnp.int32)  # invalid -> dummy
@@ -116,6 +127,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     svalid = valid[order]
     sqk = qkeys[order]
     sqv = qvals[order]
+    sops = None if ops is None else ops[order]
 
     firsts, offset = sorted_group_ranks(ssid)   # chain heads + chain ranks
     n_valid_rounds = jnp.max(jnp.where(svalid, offset, -1)) + 1
@@ -137,12 +149,12 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
             interpret = _on_cpu()
         nrounds_blocks = lrank.reshape(bp // bb, bb).max(axis=1).astype(jnp.int32) + 1
         rows_after, hit, pos, val, ev = msl_onepass_kernel_call(
-            rows_in, sqk, sqv, ssid, lrank.astype(jnp.int32),
+            rows_in, sqk, sqv, sops, ssid, lrank.astype(jnp.int32),
             served_s.astype(jnp.int32), nrounds_blocks,
             cfg=cfg, block_b=bb, interpret=interpret)
     else:
         rows_after, hit, pos, val, ev = _chain_resolve_xla(
-            cfg, rows_in, sqk, sqv, lrank, served_s, n_valid_rounds)
+            cfg, rows_in, sqk, sqv, sops, lrank, served_s, n_valid_rounds)
 
     # --- one scatter: each chain's tail commits its set's final row -------
     lasts = jnp.concatenate([ssid[:-1] != ssid[1:], jnp.ones((1,), bool)])
@@ -175,7 +187,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
 
 def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                          max_rounds: int | None = None, use_kernel: bool = True,
-                         block_b: int = 2048, interpret: bool | None = None):
+                         block_b: int = 2048, interpret: bool | None = None,
+                         ops=None):
     """``engine.batched_rounds_update`` with ``msl_access`` as the row op.
 
     Re-gathers/scatters all B rows from HBM once per conflict round — the
@@ -184,9 +197,9 @@ def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     row scatter) is the one in core/engine.py — only the row transition
     differs, so the two rounds engines cannot drift.
     """
-    def row_op(rows, qk, qv):
+    def row_op(rows, qk, qv, row_ops):
         new_rows, hit, pos, val, ev = msl_access(
-            rows, qk, qv, cfg=cfg, use_kernel=use_kernel,
+            rows, qk, qv, cfg=cfg, ops=row_ops, use_kernel=use_kernel,
             block_b=block_b, interpret=interpret)
         res = AccessResult(
             hit=hit.astype(bool), value=val, pos=pos,
@@ -197,7 +210,7 @@ def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         return new_rows, res
 
     return batched_rounds_update(cfg, table, gsid, valid, qkeys, qvals,
-                                 max_rounds, row_op=row_op)
+                                 max_rounds, row_op=row_op, ops=ops)
 
 
 def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
@@ -210,7 +223,7 @@ def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
     core/engine.py (single-pass conflict-aware pipeline, kernel-backed);
     ``engine="rounds"`` runs the shared serialization loop with
     ``msl_access`` as the row op.  Both are bit-exact w.r.t.
-    ``make_sequential_engine`` for any ``max_rounds``.
+    ``make_sequential_engine`` for any ``max_rounds`` and any opcode mix.
     """
     assert engine in ("onepass", "rounds"), engine
     if engine == "onepass":
@@ -219,12 +232,17 @@ def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
                                    interpret=interpret)
 
     @jax.jit
-    def run(table, qkeys, qvals):
+    def run_ops(table, qkeys, qvals, ops):
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
         table, res, _served = kernel_rounds_update(
             cfg, table, sids, valid, qkeys, qvals, max_rounds,
-            use_kernel, block_b, interpret)
+            use_kernel, block_b, interpret, ops=ops)
         return table, res
+
+    def run(table, qkeys, qvals, ops=None):
+        if ops is not None:
+            ops = jnp.asarray(ops, jnp.int32)
+        return run_ops(table, qkeys, qvals, ops)
 
     return run

@@ -10,21 +10,25 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.multistep import MSLRUConfig, row_access
+from repro.core.multistep import MSLRUConfig, row_access, row_apply
 
 __all__ = ["msl_access_ref"]
 
 
 def msl_access_ref(rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
-                   cfg: MSLRUConfig):
-    """rows (B, A, C) int32, qkeys (B, KP) int32, qvals (B, V) int32.
+                   cfg: MSLRUConfig, ops: jnp.ndarray | None = None):
+    """rows (B, A, C) int32, qkeys (B, KP) int32, qvals (B, V) int32,
+    ops (B,) optional int32 opcodes (None = all OP_ACCESS).
 
     Returns (new_rows (B,A,C), hit (B,) int32, pos (B,) int32,
              value (B,V) int32, evicted (B,C) int32) — evicted packs
     [key planes | value planes] with key plane 0 == EMPTY_KEY when nothing
     was evicted.
     """
-    new_rows, res = row_access(cfg, rows, qkeys, qvals)
+    if ops is None:
+        new_rows, res = row_access(cfg, rows, qkeys, qvals)
+    else:
+        new_rows, res = row_apply(cfg, rows, qkeys, qvals, ops)
     evicted = jnp.concatenate([res.evicted_key, res.evicted_val], axis=-1)
     return (new_rows, res.hit.astype(jnp.int32), res.pos,
             res.value, evicted)

@@ -16,6 +16,12 @@ Flow per request (attention-family archs):
 
 SSM/hybrid archs skip prefix reuse (their state is not prefix-separable);
 the engine still serves them via model.prefill + decode_step.
+
+Admission is *batched per tick*: all requests claiming free slots are
+admitted through one op-coded prefix-cache pipeline — one LOOKUP batch over
+every request's chunk chain, one GET batch promoting the used chunks, one
+ACCESS batch inserting the new ones — so a tick issues at most 3
+cache-engine device calls no matter how deep the queue is.
 """
 
 from __future__ import annotations
@@ -112,7 +118,8 @@ class ServeEngine:
 
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, prefix_cache: PrefixCache | None = None,
-                 pool: PagedKVPool | None = None, eos_token: int = -1):
+                 pool: PagedKVPool | None = None, eos_token: int = -1,
+                 admit_batching: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -136,21 +143,40 @@ class ServeEngine:
         self._prefill0 = jax.jit(
             lambda p, t: continuation_prefill(self.cfg, p, t, None, 0)
         ) if self.use_prefix else None
+        self._prefill_plain = jax.jit(model.prefill)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.admit_batching = admit_batching
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self, req: Request):
-        slot = self._free_slots.pop()
-        req.slot = slot
+    def _admit_batch(self, reqs: list[Request]):
+        """Admit ``reqs`` with at most 3 cache-engine device calls total:
+        one LOOKUP batch + one GET batch (``lookup_chains``) over every
+        request's chunk chain, per-request prefill, then one ACCESS batch
+        (``insert_chains``) publishing all new chunks.  Note: evicted pages
+        recycle to the pool only after *all* admissions of the tick, so a
+        near-full pool may defer a page reuse to the next tick (one-at-a-
+        time admission could reuse it immediately)."""
         ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
+        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct]
+        pref_ids = {id(r) for r in pref}
+        plain = [r for r in reqs if id(r) not in pref_ids]
 
-        if self.use_prefix and len(req.prompt) >= ct:
-            chain = chunk_chain_hashes(req.prompt, ct)
-            pages = self.prefix_cache.lookup_chain(chain)
+        chains = [chunk_chain_hashes(r.prompt, ct) for r in pref]
+        pages_per = self.prefix_cache.lookup_chains(chains) if pref else []
+        ins_chains: list[list[int]] = []
+        ins_pages: list[list[int]] = []
+        for req, chain, pages in zip(pref, chains, pages_per):
+            slot = req.slot
+            if len(pages) * ct >= len(req.prompt):
+                # fully-cached chunk-aligned prompt: always compute at least
+                # the last chunk (continuation_prefill needs >= 1 token; its
+                # re-publish below is absorbed as a duplicate-hit insert and
+                # the staged page recycles)
+                pages = pages[:-1]
             plen = len(pages) * ct
             req.prefill_skipped = plen
             if pages:
@@ -173,7 +199,7 @@ class ServeEngine:
             total = k_all.shape[2]
             self.cache["k"] = self.cache["k"].at[:, slot, :total].set(k_all[:, 0])
             self.cache["v"] = self.cache["v"].at[:, slot, :total].set(v_all[:, 0])
-            # publish the new chunks' pages
+            # stage the new chunks' pages; published in one batch below
             new_full_chunks = (plen + req.prefill_computed) // ct - len(pages)
             if new_full_chunks > 0:
                 new_pages = []
@@ -184,7 +210,6 @@ class ServeEngine:
                     new_pages.append(pg)
                 if new_pages:
                     npg = len(new_pages)
-                    koff = plen
                     kc = nk[:, 0, : npg * ct].reshape(
                         self.cfg.n_layers, npg, ct, self.cfg.n_kv_heads,
                         self.cfg.head_dim)
@@ -192,21 +217,23 @@ class ServeEngine:
                         self.cfg.n_layers, npg, ct, self.cfg.n_kv_heads,
                         self.cfg.head_dim)
                     self.pool.write_pages(np.array(new_pages), kc, vc)
-                    evicted = self.prefix_cache.insert_chain(
-                        chain[len(pages): len(pages) + npg], new_pages)
-                    for pg in evicted:
-                        self.pool.release(pg)
+                    ins_chains.append(chain[len(pages): len(pages) + npg])
+                    ins_pages.append(new_pages)
             self.cur_len[slot] = len(req.prompt)
-            first_tok = int(jnp.argmax(logits))
-        else:
+            req.out_tokens.append(int(jnp.argmax(logits)))
+            self.active[req.rid] = req
+        if ins_chains:
+            for pg in self.prefix_cache.insert_chains(ins_chains, ins_pages):
+                self.pool.release(pg)
+
+        for req in plain:
             batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-            logits, pc = jax.jit(self.model.prefill)(self.params, batch)
-            self._install_prefill(slot, pc)
+            logits, pc = self._prefill_plain(self.params, batch)
+            self._install_prefill(req.slot, pc)
             req.prefill_computed = len(req.prompt)
-            self.cur_len[slot] = len(req.prompt)
-            first_tok = int(jnp.argmax(logits[0]))
-        req.out_tokens.append(first_tok)
-        self.active[req.rid] = req
+            self.cur_len[req.slot] = len(req.prompt)
+            req.out_tokens.append(int(jnp.argmax(logits[0])))
+            self.active[req.rid] = req
 
     def _install_prefill(self, slot, pc):
         """Copy a model.prefill cache (batch=1 semantics) into `slot`."""
@@ -225,9 +252,23 @@ class ServeEngine:
 
     # -- main loop -------------------------------------------------------------
     def step(self):
-        """One engine tick: admit, decode one token for all active slots."""
+        """One engine tick: admit all free slots, decode one token each.
+
+        Admission is batched: every request admitted this tick goes through
+        one ``_admit_batch`` call (≤ 3 prefix-cache device calls per tick,
+        independent of queue depth).  ``admit_batching=False`` degrades to
+        one-at-a-time admission — the equivalence baseline."""
+        admits = []
         while self.queue and self._free_slots:
-            self._admit(self.queue.pop(0))
+            req = self.queue.pop(0)
+            req.slot = self._free_slots.pop()
+            admits.append(req)
+        if admits:
+            if self.admit_batching:
+                self._admit_batch(admits)
+            else:
+                for req in admits:
+                    self._admit_batch([req])
         if not self.active:
             return
         # decode uses a single cur_len: engine ticks groups of equal length;

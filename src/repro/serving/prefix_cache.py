@@ -16,13 +16,29 @@ the PagedKVPool.  Properties inherited from the paper's algorithm:
 
 A cache hit for a chain of chunks lets prefill skip those tokens — the hit
 ratio converts directly into saved prefill FLOPs (measured in benchmarks).
+
+Batched serving path
+--------------------
+The cache ops are *batched and op-coded*: ``lookup_chains`` probes every
+chunk of every queued request in ONE read-only LOOKUP batch, computes each
+request's longest-hit prefix host-side, and promotes exactly the used
+chunks in ONE GET batch; ``insert_chains`` publishes all new chunks in ONE
+ACCESS batch.  A serve-engine tick therefore costs at most 3 cache-engine
+device calls regardless of queue depth or chain length — versus the
+O(chunks × requests) B=1 round-trips of per-chunk probing.  Within one
+batch the LOOKUPs all observe the pre-tick table (LOOKUP/GET never change
+membership, so a request's hit prefix is unaffected by its batch
+neighbours' promotions); inserts land after all lookups, bit-exactly in
+request order.  ``device_calls`` counts engine invocations for benchmarks
+and the ≤3-calls-per-tick acceptance test.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import MSLRUConfig, MultiStepLRUCache
+from repro.core import (MSLRUConfig, MultiStepLRUCache, OP_ACCESS, OP_DELETE,
+                        OP_GET, OP_LOOKUP)
 from repro.core.policies import fmix32_py
 
 __all__ = ["PrefixCache", "chunk_chain_hashes"]
@@ -49,46 +65,120 @@ def chunk_chain_hashes(tokens: np.ndarray, chunk_tokens: int) -> list[int]:
 
 
 class PrefixCache:
-    """Multi-step-LRU map: chain-hash -> KV page index."""
+    """Multi-step-LRU map: chain-hash -> KV page index (batched mixed ops)."""
 
     def __init__(self, num_sets: int = 1024, m: int = 2, p: int = 4,
-                 chunk_tokens: int = 64, policy: str = "multistep"):
+                 chunk_tokens: int = 64, policy: str = "multistep",
+                 engine: str = "onepass", use_kernel: bool = False):
         self.cfg = MSLRUConfig(num_sets=num_sets, m=m, p=p, value_planes=1,
                                policy=policy)
-        self.cache = MultiStepLRUCache(self.cfg)
+        self.cache = MultiStepLRUCache(self.cfg, engine=engine,
+                                       use_kernel=use_kernel)
         self.chunk_tokens = chunk_tokens
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.device_calls = 0
 
+    # -- batched engine access ----------------------------------------------
+    def _call(self, keys: list[int], op: int, vals: list[int] | None = None):
+        """One batched device call over ``keys`` with a uniform opcode.
+
+        The batch is padded to the next power of two with OP_LOOKUP rows on
+        key 0 (chunk hashes are odd, so key 0 is never resident, and LOOKUP
+        never mutates — provable no-ops) and the outputs sliced back.  The
+        jit'd engine therefore compiles O(log B) shapes total instead of one
+        per distinct chunk count — on a serving path the compile stalls,
+        not the per-row opcode selects, are what dominates; that is also
+        why this passes an explicit ops vector rather than the ACCESS-only
+        ``ops=None`` specialization (padding requires mixed ops).
+        """
+        self.device_calls += 1
+        n = len(keys)
+        bp = 1 << (n - 1).bit_length()
+        k = np.zeros(bp, np.int32)
+        k[:n] = keys
+        v = np.zeros((bp, 1), np.int32)
+        if vals is not None:
+            v[:n, 0] = vals
+        ops = np.full(bp, OP_LOOKUP, np.int32)
+        ops[:n] = op
+        res = self.cache.access(k, v, ops=ops)
+        if bp == n:
+            return res
+        return res._replace(**{f: getattr(res, f)[:n] for f in res._fields})
+
+    # -- chain ops (each ≤ the stated number of device calls) ----------------
+    def lookup_chains(self, chains: list[list[int]]) -> list[list[int]]:
+        """Pages for each chain's longest cached prefix; ≤ 2 device calls.
+
+        One LOOKUP batch over every chunk of every chain (read-only, so
+        chains cannot perturb each other's probe), host-side longest-prefix
+        scan, then one GET batch promoting exactly the hit-prefix chunks in
+        chain order (identical mutations and stats to probing the chains
+        one chunk at a time with get-until-miss).
+        """
+        flat = [h for c in chains for h in c]
+        if not flat:
+            return [[] for _ in chains]
+        out = self._call(flat, OP_LOOKUP)
+        hit = np.asarray(out.hit)
+        val = np.asarray(out.value)[:, 0]
+
+        pages: list[list[int]] = []
+        promote: list[int] = []
+        i = 0
+        for chain in chains:
+            got: list[int] = []
+            for j, h in enumerate(chain):
+                if not bool(hit[i + j]):
+                    break
+                got.append(int(val[i + j]))
+            i += len(chain)
+            self.hits += len(got)
+            if len(got) < len(chain):
+                self.misses += 1
+            promote.extend(chain[: len(got)])
+            pages.append(got)
+        if promote:
+            self._call(promote, OP_GET)
+        return pages
+
+    def insert_chains(self, chains: list[list[int]],
+                      pages: list[list[int]]) -> list[int]:
+        """Insert chunk->page entries for all chains in ONE ACCESS batch;
+        returns every page index the pool should recycle: the set-LRU
+        victims the inserts evicted, plus staged pages whose insert was
+        absorbed as a duplicate *hit* (two same-batch chains sharing a
+        chunk, or a chunk that turned out to be resident past the lookup's
+        first miss) — those pages were never published in the cache, so
+        dropping them would leak pool storage.  Only true evictions count
+        in ``stats()["evictions"]``."""
+        flat_k = [h for c in chains for h in c]
+        flat_p = [pg for ps in pages for pg in ps]
+        assert len(flat_k) == len(flat_p)
+        if not flat_k:
+            return []
+        out = self._call(flat_k, OP_ACCESS, vals=flat_p)
+        hit = np.asarray(out.hit)
+        ev_ok = np.asarray(out.evicted_valid)
+        ev_val = np.asarray(out.evicted_val)[:, 0]
+        evicted = [int(v) for v, ok in zip(ev_val, ev_ok) if bool(ok)]
+        self.evictions += len(evicted)
+        redundant = [int(p) for p, h in zip(flat_p, hit) if bool(h)]
+        return evicted + redundant
+
+    # -- single-chain conveniences (delegate to the batched path) ------------
     def lookup_chain(self, chain: list[int]) -> list[int]:
         """Pages for the longest cached prefix (get semantics: promotes)."""
-        pages = []
-        for h in chain:
-            out = self.cache.access_seq(
-                np.array([h], np.int32), ops=np.array([1], np.int32))  # OP_GET
-            if bool(out.hit[0]):
-                pages.append(int(out.value[0, 0]))
-                self.hits += 1
-            else:
-                self.misses += 1
-                break
-        return pages
+        return self.lookup_chains([chain])[0]
 
     def insert_chain(self, chain: list[int], pages: list[int]) -> list[int]:
         """Insert chunk->page entries; returns evicted page indices."""
-        evicted = []
-        for h, pg in zip(chain, pages):
-            out = self.cache.access_seq(
-                np.array([h], np.int32), vals=np.array([[pg]], np.int32))
-            if bool(out.evicted_valid[0]):
-                evicted.append(int(out.evicted_val[0, 0]))
-                self.evictions += 1
-        return evicted
+        return self.insert_chains([chain], [pages])
 
     def delete(self, chain_hash: int) -> bool:
-        out = self.cache.access_seq(
-            np.array([chain_hash], np.int32), ops=np.array([2], np.int32))
+        out = self._call([chain_hash], OP_DELETE)
         return bool(out.hit[0])
 
     def stats(self) -> dict:

@@ -6,3 +6,20 @@ from pathlib import Path
 # benches must see the real single device; only dryrun.py gets 512.
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Hypothesis profiles: "ci" (default, also the tier-1 workflow) is
+# derandomized — a fixed seed so CI failures reproduce locally verbatim;
+# "schedule" runs many more examples (the cron workflow).  Select with
+# HYPOTHESIS_PROFILE=<name>.  Per-test @settings still override fields
+# they set explicitly (e.g. max_examples).
+try:
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("ci", max_examples=20, derandomize=True,
+                                deadline=None, print_blob=True)
+    _hsettings.register_profile("schedule", max_examples=150,
+                                derandomize=True, deadline=None,
+                                print_blob=True)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:  # hypothesis-marked tests importorskip themselves
+    pass

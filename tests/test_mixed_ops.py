@@ -1,0 +1,298 @@
+"""Differential tests for mixed LOOKUP/GET/ACCESS/DELETE op streams.
+
+One random op-coded stream is replayed through every implementation —
+pure-Python oracle, sequential scan engine, batched rounds, one-pass jnp
+mirror, and one-pass Pallas kernel (interpret mode) — and every output
+field plus the final table must agree bit for bit.  Covers duplicate keys
+(same-batch conflict chains), ±values, 0/1/2 value planes, 64-bit (KP=2)
+keys, and both policies.  The adversarial cases pin the same-batch chain
+semantics the Hypothesis sweep is statistically likely, but not guaranteed,
+to hit.
+"""
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the fixed-seed sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (EMPTY_KEY, MSLRUConfig, MultiStepLRUCache, init_table,
+                        OP_ACCESS, OP_DELETE, OP_GET, OP_LOOKUP)
+from repro.core import policies
+from repro.core.engine import make_batched_engine, make_sequential_engine
+from repro.core.policies import MultiStepLRUOracle
+
+BATCH = 48
+
+CFGS = [
+    MSLRUConfig(num_sets=8, m=2, p=4, value_planes=2),
+    MSLRUConfig(num_sets=4, m=1, p=4, value_planes=0),
+    MSLRUConfig(num_sets=8, m=2, p=2, key_planes=2, value_planes=1),
+    MSLRUConfig(num_sets=16, m=4, p=2, value_planes=1, policy="set_lru"),
+]
+
+OPS = [OP_ACCESS, OP_GET, OP_DELETE, OP_LOOKUP]
+
+
+def test_opcode_mirror_in_sync():
+    """policies.py keeps jax-free literal mirrors of the engine opcodes."""
+    assert (policies.OP_ACCESS, policies.OP_GET,
+            policies.OP_DELETE, policies.OP_LOOKUP) == tuple(OPS)
+
+
+@functools.lru_cache(maxsize=None)
+def _engines(cfg: MSLRUConfig):
+    return {
+        "seq": make_sequential_engine(cfg, with_ops=True),
+        "rounds": make_batched_engine(cfg, engine="rounds"),
+        "onepass_jnp": make_batched_engine(cfg, engine="onepass",
+                                           use_kernel=False, block_b=32),
+        "onepass_kernel": make_batched_engine(cfg, engine="onepass",
+                                              use_kernel=True, block_b=32),
+    }
+
+
+def _run_batched(run, cfg, keys, vals, ops, batch=BATCH):
+    tbl = init_table(cfg)
+    outs = []
+    for i in range(0, len(keys), batch):
+        tbl, res = run(tbl, jnp.asarray(keys[i:i + batch]),
+                       jnp.asarray(vals[i:i + batch]),
+                       jnp.asarray(ops[i:i + batch]))
+        outs.append(res)
+    cat = {f: np.concatenate([np.asarray(getattr(r, f)) for r in outs])
+           for f in outs[0]._fields}
+    return np.asarray(tbl), cat
+
+
+def _run_all_and_compare(cfg, keys, vals, ops):
+    """Replay (keys, vals, ops) through all four engines; assert bitwise
+    equality of every result field and the final table; return the
+    sequential outputs + table for semantic assertions."""
+    eng = _engines(cfg)
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals, ops=ops)
+    ref = {"hit": np.asarray(out.hit), "pos": np.asarray(out.pos),
+           "value": np.asarray(out.value),
+           "evicted_key": np.asarray(out.evicted_key),
+           "evicted_val": np.asarray(out.evicted_val),
+           "evicted_valid": np.asarray(out.evicted_valid)}
+    ref_tbl = np.asarray(seq.table)
+    for name in ("rounds", "onepass_jnp", "onepass_kernel"):
+        tbl, cat = _run_batched(eng[name], cfg, keys, vals, ops)
+        for f, expect in ref.items():
+            np.testing.assert_array_equal(
+                cat[f], expect, err_msg=f"{name}: {f} mismatch")
+        np.testing.assert_array_equal(tbl, ref_tbl,
+                                      err_msg=f"{name}: table mismatch")
+    return ref, ref_tbl
+
+
+def _oracle_key(cfg, krow):
+    return tuple(int(x) for x in krow) if cfg.key_planes == 2 else int(krow[0])
+
+
+def _check_oracle(cfg, keys, vals, ops, ref, ref_tbl):
+    """The pure-Python oracle must agree with the (already cross-checked)
+    engine outputs op by op, and slot-exactly on the final table."""
+    oracle = MultiStepLRUOracle(cfg.num_sets, cfg.m, cfg.p,
+                                policy=cfg.policy, key_planes=cfg.key_planes)
+    for i in range(len(keys)):
+        o = oracle.apply(int(ops[i]), _oracle_key(cfg, keys[i]),
+                         tuple(int(x) for x in vals[i]))
+        assert o["hit"] == bool(ref["hit"][i]), f"oracle hit mismatch at {i}"
+        assert o["pos"] == int(ref["pos"][i]), f"oracle pos mismatch at {i}"
+        if o["hit"] and int(ops[i]) != OP_DELETE and cfg.value_planes:
+            assert o["value"] == tuple(int(x) for x in ref["value"][i])
+        ev = o["evicted"]
+        assert (ev is not None) == bool(ref["evicted_valid"][i])
+        if ev is not None:
+            ek, evv = ev
+            ek = ek if cfg.key_planes == 2 else (ek,)
+            assert tuple(int(x) for x in ref["evicted_key"][i]) == tuple(ek)
+            if cfg.value_planes:
+                assert tuple(int(x) for x in ref["evicted_val"][i]) == tuple(evv)
+    kp = cfg.key_planes
+    for si in range(cfg.num_sets):
+        for ai in range(cfg.assoc):
+            slot = oracle.sets[si][ai]
+            if slot is None:
+                assert ref_tbl[si, ai, 0] == EMPTY_KEY
+            else:
+                key = slot[0] if kp == 2 else (slot[0],)
+                assert tuple(int(x) for x in ref_tbl[si, ai, :kp]) == tuple(key)
+                if cfg.value_planes:
+                    assert (tuple(int(x) for x in ref_tbl[si, ai, kp:])
+                            == tuple(slot[1]))
+
+
+def _stream(cfg, rng, n, key_range):
+    if cfg.key_planes == 2:
+        # small hi plane so (hi, lo) pairs alias on lo but not on the pair
+        keys = np.stack([rng.integers(0, 3, n), rng.integers(1, key_range, n)],
+                        axis=-1).astype(np.int32)
+    else:
+        keys = rng.integers(1, key_range, (n, 1)).astype(np.int32)
+    vals = rng.integers(-999, 999, (n, cfg.value_planes)).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=n)
+    return keys, vals, ops
+
+
+def _differential_case(ci, seed, nb, key_range):
+    cfg = CFGS[ci]
+    rng = np.random.default_rng(seed)
+    keys, vals, ops = _stream(cfg, rng, nb * BATCH, key_range)
+    ref, ref_tbl = _run_all_and_compare(cfg, keys, vals, ops)
+    _check_oracle(cfg, keys, vals, ops, ref, ref_tbl)
+
+
+@pytest.mark.parametrize("ci", range(len(CFGS)))
+def test_mixed_stream_differential_fixed(ci):
+    """Deterministic slice of the differential sweep (runs without
+    hypothesis; duplicate-heavy key range so chains exercise)."""
+    _differential_case(ci, seed=1234 + ci, nb=2, key_range=12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None)
+    @given(ci=st.integers(0, len(CFGS) - 1),
+           seed=st.integers(0, 2**31 - 1),
+           nb=st.integers(1, 3),
+           key_range=st.integers(4, 120))
+    def test_mixed_stream_differential(ci, seed, nb, key_range):
+        _differential_case(ci, seed, nb, key_range)
+
+
+# ---------------------------------------------------------------------------
+# Adversarial same-batch conflict chains (num_sets=1 forces one chain)
+# ---------------------------------------------------------------------------
+
+def _one_set_case(cfg, triples):
+    keys = np.asarray([[t[0]] for t in triples], np.int32)
+    vals = np.asarray([[t[1]] * cfg.value_planes for t in triples], np.int32)
+    ops = np.asarray([t[2] for t in triples], np.int32)
+    return keys, vals, ops
+
+
+def test_delete_then_access_same_key_one_batch():
+    """DELETE k then ACCESS k in one batch: the access must observe the
+    deletion (miss + re-insert), exactly as the sequential chain does."""
+    cfg = MSLRUConfig(num_sets=1, m=2, p=4, value_planes=1)
+    pre = _one_set_case(cfg, [(5, 7, OP_ACCESS)])
+    batch = _one_set_case(cfg, [(5, 0, OP_DELETE), (5, 9, OP_ACCESS),
+                                (5, 0, OP_GET)])
+    keys = np.concatenate([pre[0], batch[0]])
+    vals = np.concatenate([pre[1], batch[1]])
+    ops = np.concatenate([pre[2], batch[2]])
+    ref, _ = _run_all_and_compare(cfg, keys, vals, ops)
+    assert bool(ref["hit"][1])          # DELETE found the preloaded item
+    assert not bool(ref["hit"][2])      # ACCESS after DELETE is a miss
+    assert bool(ref["hit"][3])          # ... and re-inserted the key
+    assert int(ref["value"][3, 0]) == 9  # with the new value, not the old
+
+
+def test_get_after_delete_in_duplicate_chain():
+    """ACCESS k / DELETE k / GET k inside one set's duplicate chain: the
+    GET must miss (chain order == sequential order)."""
+    cfg = MSLRUConfig(num_sets=1, m=2, p=4, value_planes=1)
+    keys, vals, ops = _one_set_case(cfg, [
+        (5, 7, OP_ACCESS), (5, 0, OP_DELETE), (5, 0, OP_GET),
+        (6, 8, OP_ACCESS), (5, 0, OP_GET)])
+    ref, tbl = _run_all_and_compare(cfg, keys, vals, ops)
+    assert list(ref["hit"]) == [False, True, False, False, False]
+    assert int(ref["pos"][1]) == -1     # DELETE reports pos = -1
+    assert not bool(ref["hit"][4])      # key 5 stays gone for the later GET
+    keys_left = set(tbl[0, :, 0].tolist()) - {int(EMPTY_KEY)}
+    assert keys_left == {6}
+
+
+def test_lookup_interleaved_with_evicting_accesses():
+    """Read-only LOOKUPs riding the same chain as evicting ACCESSes must
+    observe the chain prefix state (hit before the eviction, miss after),
+    and must not perturb recency."""
+    cfg = MSLRUConfig(num_sets=1, m=2, p=2, value_planes=1)  # capacity 4
+    keys, vals, ops = _one_set_case(cfg, [
+        (1, 1, OP_ACCESS), (2, 2, OP_ACCESS),
+        (3, 3, OP_ACCESS), (4, 4, OP_ACCESS),   # fill: state [4,3,2,1]
+        (1, 0, OP_LOOKUP),                       # hit (pre-eviction)
+        (10, 10, OP_ACCESS),                     # evicts key 1 (set LRU)
+        (1, 0, OP_LOOKUP),                       # now a miss
+        (11, 11, OP_ACCESS),                     # evicts key 2
+        (2, 0, OP_LOOKUP),                       # miss
+        (10, 0, OP_LOOKUP),                      # hit (just inserted)
+        (3, 0, OP_GET)])                         # still resident
+    ref, _ = _run_all_and_compare(cfg, keys, vals, ops)
+    assert list(ref["hit"][4:]) == [True, False, False, False,
+                                    False, True, True]
+    # the evicting ACCESSes report the set-LRU victims, in chain order
+    assert bool(ref["evicted_valid"][5]) and int(ref["evicted_key"][5, 0]) == 1
+    assert bool(ref["evicted_valid"][7]) and int(ref["evicted_key"][7, 0]) == 2
+    # LOOKUP rows never report evictions
+    assert not ref["evicted_valid"][[4, 6, 8, 9]].any()
+
+
+@pytest.mark.slow
+def test_mixed_ops_100k_zipfian_acceptance():
+    """Acceptance: one batched call with mixed ops is bit-exact vs the
+    sequential engine on a 100k-query random-op Zipfian stream, through
+    the rounds, onepass-jnp, and onepass-kernel engines."""
+    from repro.data.ycsb import zipfian
+
+    cfg = MSLRUConfig(num_sets=256, m=2, p=4, value_planes=1)
+    rng = np.random.default_rng(11)
+    keys = zipfian(20_000, 100_000, alpha=0.99, seed=11).astype(np.int32)[:, None]
+    vals = (keys * 3 + 1).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=len(keys))
+
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals, ops=ops)
+    ref_hit, ref_tbl = np.asarray(out.hit), np.asarray(seq.table)
+
+    batch = 2000  # divides 100k: one compiled shape per engine
+    for kw in (dict(engine="rounds"),
+               dict(engine="onepass", use_kernel=False),
+               dict(engine="onepass", use_kernel=True, block_b=512)):
+        run = make_batched_engine(cfg, **kw)
+        tbl = init_table(cfg)
+        hits = []
+        for i in range(0, len(keys), batch):
+            tbl, res = run(tbl, jnp.asarray(keys[i:i + batch]),
+                           jnp.asarray(vals[i:i + batch]),
+                           jnp.asarray(ops[i:i + batch]))
+            hits.append(np.asarray(res.hit))
+        np.testing.assert_array_equal(np.concatenate(hits), ref_hit,
+                                      err_msg=f"{kw}: hit mismatch")
+        np.testing.assert_array_equal(np.asarray(tbl), ref_tbl,
+                                      err_msg=f"{kw}: table mismatch")
+
+
+def test_mixed_ops_through_sharded_engine():
+    """Opcodes survive the all_to_all payload: the sharded engine on one
+    device must match the sequential engine on a mixed stream."""
+    from repro.core.sharded import make_sharded_engine, shard_table
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = MSLRUConfig(num_sets=16, m=2, p=4, value_planes=1)
+    mesh = make_mesh_compat((1,), ("cache",))
+    rng = np.random.default_rng(3)
+    n = 128
+    keys = rng.integers(1, 60, (n, 1)).astype(np.int32)
+    vals = rng.integers(-99, 99, (n, 1)).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=n)
+
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals, ops=ops)
+
+    eng = make_sharded_engine(cfg, mesh, cap=n, engine="onepass")
+    tbl = shard_table(init_table(cfg), mesh)
+    tbl, hit, val, served = eng(tbl, jnp.asarray(keys), jnp.asarray(vals),
+                                jnp.asarray(ops))
+    assert np.asarray(served).all()
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(out.hit))
+    np.testing.assert_array_equal(np.asarray(tbl), np.asarray(seq.table))

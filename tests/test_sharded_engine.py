@@ -25,24 +25,32 @@ eng = make_sharded_engine(cfg, mesh, cap=512, engine="%(engine)s")
 t = shard_table(init_table(cfg), mesh)
 rng = np.random.default_rng(1)
 keys = rng.integers(1, 5000, size=(4096, 1)).astype(np.int32)
+# mixed opcodes (ACCESS/GET/DELETE/LOOKUP): the ops plane must survive the
+# real cross-device all_to_all, not just the 1-device degenerate route
+ops = rng.integers(0, 4, size=4096).astype(np.int32) if %(mixed_ops)d \
+    else None
 hits = 0
 for i in range(0, 4096, 1024):
+    qo = None if ops is None else jnp.asarray(ops[i:i+1024])
     t, hit, val, served = eng(t, jnp.asarray(keys[i:i+1024]),
-                              jnp.asarray(keys[i:i+1024]))
+                              jnp.asarray(keys[i:i+1024]), qo)
     hits += int(hit.sum())
     h = np.asarray(hit); vv = np.asarray(val)
-    assert (vv[h, 0] == keys[i:i+1024][h, 0]).all(), "wrong values on hits"
+    if ops is None:
+        assert (vv[h, 0] == keys[i:i+1024][h, 0]).all(), "wrong values on hits"
 
 c = MultiStepLRUCache(cfg)
-out = c.access_seq(keys[:, 0], vals=keys)
+out = c.access_seq(keys[:, 0], vals=keys,
+                   ops=None if ops is None else ops)
 seq_hits = int(np.asarray(out.hit).sum())
 table_match = bool((np.asarray(jax.device_get(t)) == np.asarray(c.table)).all())
 print(json.dumps({"hits": hits, "seq_hits": seq_hits, "table_match": table_match}))
 """
 
 
-def _run_child(ndev: int, engine: str) -> dict:
-    src = _CHILD % {"ndev": ndev, "engine": engine}
+def _run_child(ndev: int, engine: str, mixed_ops: bool = False) -> dict:
+    src = _CHILD % {"ndev": ndev, "engine": engine,
+                    "mixed_ops": int(mixed_ops)}
     res = subprocess.run([sys.executable, "-c", src],
                          capture_output=True, text=True, cwd=ROOT, timeout=600)
     assert res.returncode == 0, res.stderr[-2000:]
@@ -60,5 +68,14 @@ def test_sharded_engine_exact_on_8_devices():
 def test_sharded_engine_onepass_exact_on_2_devices():
     """The one-pass per-shard update is exact through the all_to_all route."""
     rec = _run_child(2, "onepass")
+    assert rec["hits"] == rec["seq_hits"]
+    assert rec["table_match"]
+
+
+@pytest.mark.slow
+def test_sharded_engine_mixed_ops_exact_on_2_devices():
+    """Opcodes survive a REAL cross-device all_to_all (the ops payload
+    plane), matching the sequential engine on a mixed-op stream."""
+    rec = _run_child(2, "onepass", mixed_ops=True)
     assert rec["hits"] == rec["seq_hits"]
     assert rec["table_match"]
