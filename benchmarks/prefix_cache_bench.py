@@ -7,22 +7,26 @@ cache itself* — multi-step LRU vs exact-LRU-per-set (set_lru) vs in-vector
 fraction of prefill work skipped.  Scan-resistance matters: a burst of
 one-off prompts must not evict the hot templates.
 
-The cache is driven through the op-coded batched chain API
-(``lookup_chains``/``insert_chains``: one LOOKUP + one GET + one ACCESS
-batch per request), so the bench also reports ``device_calls`` — compare
-with ``per_chunk_calls``, what the per-chunk B=1 probing this replaced
-would have issued.  ``--engine`` selects the batched conflict scheme
-(onepass = the single-gather hot path, rounds = the oracle).
+The cache is driven through the FUSED one-call tick (``serve_chains``: the
+device computes each chain's longest-hit prefix and conditionally inserts
+the rest in ONE op-coded call) — ``calls_per_request`` ≈ 1.0, versus ~2.1
+for the split LOOKUP+GET+ACCESS pipeline (``--tick split``) and ~4.5 for
+per-chunk B=1 probing (``per_chunk_calls``).  Hit/miss/eviction counts are
+bit-identical across tick modes — pinned by tests/test_serving.py.
 
 ``run()`` (standalone ``python -m benchmarks.prefix_cache_bench`` or via
 ``benchmarks.run``) merges the engine's numbers into BENCH_prefix.json at
-the repo root, one entry per engine (the fig08 pattern).
+the repo root, one entry per engine (the fig08 pattern); ``--requests N``
+shrinks the trace (entry key ``<engine>@<N>`` — the CI bench-smoke trace).
+``--check`` recomputes and fails (exit 1) if ``calls_per_request`` exceeds
+1.2 or any hit ratio drifts from the committed BENCH_prefix.json.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 import numpy as np
@@ -37,15 +41,17 @@ PREFIX_CHUNKS = 4
 N_REQUESTS = 4000
 CACHE_SETS = 64  # 64 sets * 8 = 512 chunk slots — undersized on purpose
 
+CALLS_PER_REQUEST_BUDGET = 1.2
 
-def _workload(seed=0):
+
+def _workload(seed=0, n_requests=N_REQUESTS):
     rng = np.random.default_rng(seed)
     templates = [rng.integers(1, 50000, CHUNK * PREFIX_CHUNKS).astype(np.int32)
                  for _ in range(N_TEMPLATES)]
-    picks = zipfian(N_TEMPLATES, N_REQUESTS, alpha=1.0, seed=seed + 1) - 1
+    picks = zipfian(N_TEMPLATES, n_requests, alpha=1.0, seed=seed + 1) - 1
     # 20% one-off scans (unique prompts) interleaved — the adversarial burst
     out = []
-    for i in range(N_REQUESTS):
+    for i in range(n_requests):
         if i % 5 == 4:
             out.append(rng.integers(1, 50000, CHUNK * PREFIX_CHUNKS).astype(np.int32))
         else:
@@ -53,48 +59,64 @@ def _workload(seed=0):
     return out
 
 
-def _run_policy(policy: str, m: int, engine: str = "onepass") -> dict:
+def _run_policy(policy: str, m: int, engine: str = "onepass",
+                tick: str = "fused", n_requests: int = N_REQUESTS) -> dict:
     pc = PrefixCache(num_sets=CACHE_SETS, m=m, p=4, chunk_tokens=CHUNK,
                      policy=policy, engine=engine)
     page = 0
     skipped = total = 0
     per_chunk_calls = 0  # what get-until-miss + per-chunk insert would cost
-    for prompt in _workload():
+    for prompt in _workload(n_requests=n_requests):
         chain = chunk_chain_hashes(prompt, CHUNK)
-        pages = pc.lookup_chains([chain])[0]
-        skipped += len(pages) * CHUNK
+        if tick == "fused":
+            staged = list(range(page, page + len(chain)))
+            res, _ev = pc.serve_chains([chain], [staged])
+            hits = res[0].hitlen
+        else:
+            pages = pc.lookup_chains([chain])[0]
+            hits = len(pages)
+            new = chain[hits:]
+            pc.insert_chains([new], [list(range(page, page + len(new)))])
+        skipped += hits * CHUNK
         total += len(prompt)
-        new = chain[len(pages):]
-        per_chunk_calls += min(len(pages) + 1, len(chain)) + len(new)
-        pc.insert_chains([new], [list(range(page, page + len(new)))])
-        page += len(new)
+        per_chunk_calls += min(hits + 1, len(chain)) + (len(chain) - hits)
+        page += len(chain) - hits
     st = pc.stats()
     st["prefill_saved_frac"] = skipped / total
     st["device_calls"] = pc.device_calls
     st["per_chunk_calls"] = per_chunk_calls
-    st["calls_per_request"] = pc.device_calls / N_REQUESTS
+    st["calls_per_request"] = pc.device_calls / n_requests
     return st
 
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_prefix.json"
 
 
-def run(force: bool = False, engine: str = "onepass"):
+def _entry_key(engine: str, tick: str, n_requests: int) -> str:
+    key = engine if tick == "fused" else f"{engine}+{tick}"
+    if n_requests != N_REQUESTS:
+        key += f"@{n_requests}"
+    return key
+
+
+def run(force: bool = False, engine: str = "onepass", tick: str = "fused",
+        n_requests: int = N_REQUESTS):
     def compute():
-        return {"engine": engine} | {
-            "multistep_m2": _run_policy("multistep", 2, engine),
-            "set_lru_m2": _run_policy("set_lru", 2, engine),
-            "invector_m1": _run_policy("multistep", 1, engine),
+        return {"engine": engine, "tick": tick, "n_requests": n_requests} | {
+            "multistep_m2": _run_policy("multistep", 2, engine, tick, n_requests),
+            "set_lru_m2": _run_policy("set_lru", 2, engine, tick, n_requests),
+            "invector_m1": _run_policy("multistep", 1, engine, tick, n_requests),
         }
 
     # engine-keyed like fig08, so --engine never serves the other engine's
     # cached blob
-    res = cached(f"prefix_cache_bench_{engine}", compute, force)
-    _emit_bench_json(res, engine)
+    key = _entry_key(engine, tick, n_requests)
+    res = cached(f"prefix_cache_bench_{key}", compute, force)
+    _emit_bench_json(res, key)
     return res
 
 
-def _emit_bench_json(res: dict, engine: str) -> None:
+def _emit_bench_json(res: dict, key: str) -> None:
     """Merge this engine's numbers into the cross-PR BENCH_prefix.json."""
     doc = {}
     if BENCH_JSON.exists():
@@ -103,14 +125,41 @@ def _emit_bench_json(res: dict, engine: str) -> None:
         except json.JSONDecodeError:
             doc = {}
     doc["benchmark"] = "prefix_cache"
-    doc.setdefault("engines", {})[engine] = {
+    doc.setdefault("engines", {})[key] = {
         k: v for k, v in res.items() if isinstance(v, dict)}
     BENCH_JSON.write_text(json.dumps(doc, indent=1))
 
 
+def check(res: dict, key: str, committed_doc: dict) -> list[str]:
+    """CI gate: calls/request within budget AND hit ratios matching the
+    committed BENCH_prefix.json entry for this key (empty list = pass).
+
+    ``committed_doc`` must be the BENCH_prefix.json content from *before*
+    this run (``run`` merges the fresh numbers into the file)."""
+    problems = []
+    committed = committed_doc.get("engines", {}).get(key, {})
+    for name, r in res.items():
+        if not isinstance(r, dict):
+            continue
+        cpr = r.get("calls_per_request", 99.0)
+        if cpr > CALLS_PER_REQUEST_BUDGET:
+            problems.append(
+                f"{name}: calls_per_request {cpr:.3f} > {CALLS_PER_REQUEST_BUDGET}")
+        ref = committed.get(name)
+        if ref is None:
+            problems.append(f"{name}: no committed entry '{key}' to compare")
+        elif ref.get("hit_ratio") != r.get("hit_ratio"):
+            problems.append(
+                f"{name}: hit_ratio {r.get('hit_ratio')} != committed "
+                f"{ref.get('hit_ratio')}")
+    return problems
+
+
 def report(res: dict) -> list[str]:
     lines = [f"prefix-cache policy comparison (prefill tokens saved; "
-             f"engine={res.get('engine', 'onepass')})"]
+             f"engine={res.get('engine', 'onepass')} "
+             f"tick={res.get('tick', 'fused')} "
+             f"requests={res.get('n_requests', N_REQUESTS)})"]
     for k, r in res.items():
         if not isinstance(r, dict):
             continue
@@ -118,7 +167,8 @@ def report(res: dict) -> list[str]:
                      f"chunk_hit_ratio={r['hit_ratio']:.3f} "
                      f"evictions={r['evictions']} "
                      f"device_calls={r.get('device_calls', 0)} "
-                     f"(vs {r.get('per_chunk_calls', 0)} per-chunk)")
+                     f"({r.get('calls_per_request', 0):.2f}/req; "
+                     f"vs {r.get('per_chunk_calls', 0)} per-chunk)")
     return lines
 
 
@@ -127,10 +177,28 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--engine", choices=["rounds", "onepass"],
                     default="onepass")
+    ap.add_argument("--tick", choices=["fused", "split"], default="fused",
+                    help="fused = one serve_chains call per request; "
+                         "split = the LOOKUP+GET+ACCESS baseline")
+    ap.add_argument("--requests", type=int, default=N_REQUESTS,
+                    help="trace length (CI bench-smoke uses a tiny trace)")
+    ap.add_argument("--check", action="store_true",
+                    help="recompute and fail on calls/request or hit-ratio "
+                         "regressions vs the committed BENCH_prefix.json")
     args = ap.parse_args()
-    res = run(force=args.force, engine=args.engine)
+    committed_doc = (json.loads(BENCH_JSON.read_text())
+                     if BENCH_JSON.exists() else {})
+    res = run(force=args.force or args.check, engine=args.engine,
+              tick=args.tick, n_requests=args.requests)
     print("\n".join(report(res)))
     print(f"merged into {BENCH_JSON}")
+    if args.check:
+        problems = check(res, _entry_key(args.engine, args.tick, args.requests),
+                         committed_doc)
+        if problems:
+            print("BENCH CHECK FAILED:\n  " + "\n  ".join(problems))
+            sys.exit(1)
+        print("bench check OK")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ from repro.core.multistep import (  # noqa: F401
 )
 from repro.core.engine import (  # noqa: F401
     OP_ACCESS,
+    OP_CHAIN_GET,
+    OP_CHAIN_PUT,
     OP_DELETE,
     OP_GET,
     OP_LOOKUP,
@@ -43,6 +45,8 @@ __all__ = [
     "OP_GET",
     "OP_DELETE",
     "OP_LOOKUP",
+    "OP_CHAIN_GET",
+    "OP_CHAIN_PUT",
     "init_table",
     "EMPTY_KEY",
 ]
@@ -68,20 +72,25 @@ class MultiStepLRUCache:
 
     # -- batched high-throughput path ----------------------------------------
     def access(self, keys: np.ndarray, vals: np.ndarray | None = None,
-               ops: np.ndarray | None = None):
+               ops: np.ndarray | None = None,
+               chain_ids: np.ndarray | None = None):
         """Batched mixed-op call. keys (B,) or (B, KP); vals (B, V); ops (B,)
-        per-query opcodes (OP_* in this module; None = all OP_ACCESS)."""
+        per-query opcodes (OP_* in this module; None = all OP_ACCESS);
+        chain_ids (B,) segment ids for CHAIN_GET/CHAIN_PUT rows (the fused
+        serving tick — see the chain contract in engine.py)."""
         keys = self._canon_keys(keys)
         if vals is None:
             vals = np.zeros((keys.shape[0], self.cfg.value_planes), np.int32)
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
         self.table, res = self._batched(self.table, keys,
-                                        jnp.asarray(vals, jnp.int32), ops)
+                                        jnp.asarray(vals, jnp.int32), ops,
+                                        chain_ids)
         return res
 
     # -- exact sequential path -------------------------------------------------
-    def access_seq(self, keys: np.ndarray, vals: np.ndarray | None = None, ops=None):
+    def access_seq(self, keys: np.ndarray, vals: np.ndarray | None = None,
+                   ops=None, chain_ids=None):
         keys = self._canon_keys(keys)
         n = keys.shape[0]
         if vals is None:
@@ -89,7 +98,8 @@ class MultiStepLRUCache:
         if ops is None:
             ops = np.full((n,), OP_ACCESS, np.int32)
         self.table, out = self._seq(
-            self.table, keys, jnp.asarray(vals, jnp.int32), jnp.asarray(ops, jnp.int32))
+            self.table, keys, jnp.asarray(vals, jnp.int32),
+            jnp.asarray(ops, jnp.int32), chain_ids)
         return out
 
     def _canon_keys(self, keys):

@@ -32,23 +32,53 @@ a batch may freely mix the paper's §III.B operation set.  One normalized
 result contract holds across the sequential, rounds, one-pass (jnp and
 Pallas), and sharded engines, bit-for-bit:
 
-    op          hit path mutation     miss path mutation   result fields
-    ----------  --------------------  -------------------  --------------------
-    OP_ACCESS   promote / upgrade     insert; may evict    hit, pos, value;
-                                      the set-LRU victim   evicted_{key,val,
-                                                           valid} on eviction
-    OP_GET      promote / upgrade     none (no-op)         hit, pos, value
-    OP_LOOKUP   none (read-only)      none                 hit, pos, value
-    OP_DELETE   invalidate in place   none                 hit; pos = -1,
-                (no compaction)                            value = 0
+    op            hit path mutation     miss path mutation   result fields
+    ------------  --------------------  -------------------  ------------------
+    OP_ACCESS     promote / upgrade     insert; may evict    hit, pos, value;
+                                        the set-LRU victim   evicted_{key,val,
+                                                             valid} on eviction
+    OP_GET        promote / upgrade     none (no-op)         hit, pos, value
+    OP_LOOKUP     none (read-only)      none                 hit, pos, value
+    OP_DELETE     invalidate in place   none                 hit; pos = -1,
+                  (no compaction)                            value = 0
+    OP_CHAIN_GET  while the chain is all-hits: OP_GET.       hit = query is
+                  Past the chain's first miss the row is     inside the
+                  *downgraded*: no mutation, and it reports  longest-hit
+                  a plain miss (hit False, pos -1, value 0)  prefix; value =
+                  even if its key is resident.               its stored page
+    OP_CHAIN_PUT  the mirror image: a no-op while its chunk index is inside
+                  the chain's hit prefix, an OP_ACCESS (insert; may evict,
+                  may absorb as a duplicate hit) past it.  Downgraded rows
+                  report a plain miss.
+
+Chain segments
+--------------
+``OP_CHAIN_GET``/``OP_CHAIN_PUT`` queries carry a ``chain_ids`` operand: a
+(B,) int32 segment id in [0, B).  Chain rows with one id must form
+contiguous runs in batch order — first the chain's CHAIN_GET run (its chunk
+keys, prefix order), later (optionally) its CHAIN_PUT run (a *prefix* of
+the same chunk keys, same order, with the staged value planes).  The engine
+computes each chain's longest-hit prefix on device with a segmented
+cumulative AND over the CHAIN_GET membership probes (``chain_exec_from_hits``)
+and derives every row's execute mask from it; the i-th CHAIN_PUT row of a
+chain pairs with the i-th CHAIN_GET row.  The probes observe the table *as
+of the start of the batch*, so all membership-mutating rows (ACCESS,
+DELETE, CHAIN_PUT) must come after every CHAIN_GET row in batch order —
+GET/LOOKUP/downgraded rows never change membership, which is what makes the
+batch-start probe exact.  One batch then performs the whole serving tick:
+LOOKUP + longest-prefix scan + GET promotion + conditional inserts, with
+bit-identical mutations and stats to issuing the LOOKUP/GET/ACCESS batches
+separately.  (Lone divergence, by design: a chain whose every chunk hits
+issues no tail re-insert, where the split path's host re-publish was
+absorbed as one extra duplicate-hit promote.)
 
 ``value`` is the stored value planes of the hit item (on a miss it carries
 the same deterministic garbage in every engine — the probed row's lane-0
-value — so differential tests can compare outputs bitwise).  For served
-queries ``evicted_key`` is the EMPTY_KEY sentinel whenever nothing was
-evicted; queries dropped by a ``max_rounds`` cap (``served`` False) report
-all-zero evicted fields — test ``evicted_valid``, which is authoritative
-in both cases.
+value — so differential tests can compare outputs bitwise; downgraded chain
+rows zero it).  For served queries ``evicted_key`` is the EMPTY_KEY
+sentinel whenever nothing was evicted; queries dropped by a ``max_rounds``
+cap (``served`` False) report all-zero evicted fields — test
+``evicted_valid``, which is authoritative in both cases.
 """
 
 from __future__ import annotations
@@ -62,11 +92,14 @@ import jax.numpy as jnp
 from repro.core.multistep import (  # noqa: F401  (OP_* re-exported)
     MSLRUConfig,
     OP_ACCESS,
+    OP_CHAIN_GET,
+    OP_CHAIN_PUT,
     OP_DELETE,
     OP_GET,
     OP_LOOKUP,
     row_access,
     row_apply,
+    row_lookup,
     set_index_for,
 )
 
@@ -75,11 +108,15 @@ __all__ = [
     "OP_GET",
     "OP_DELETE",
     "OP_LOOKUP",
+    "OP_CHAIN_GET",
+    "OP_CHAIN_PUT",
     "SeqOutputs",
     "make_sequential_engine",
     "make_batched_engine",
     "make_chunked_stream_runner",
     "make_conflict_update",
+    "chain_exec_from_hits",
+    "chain_live_mask",
     "group_offsets",
     "sorted_group_ranks",
     "batched_rounds_update",
@@ -101,37 +138,54 @@ def make_sequential_engine(cfg: MSLRUConfig, with_ops: bool = False):
     Scans the query stream one element at a time; each step touches exactly
     one set row (dynamic_slice / dynamic_update_slice), the JAX rendering of
     the paper's single-threaded loop.  ``with_ops=True`` adds the per-query
-    opcode argument (OP_ACCESS/OP_GET/OP_DELETE/OP_LOOKUP).
+    opcode argument (OP_ACCESS/OP_GET/OP_DELETE/OP_LOOKUP, plus the chain
+    ops when the optional ``chain_ids`` argument is passed — the chain
+    execute mask is precomputed against the scan's start table, matching
+    the batch-start probe semantics of the batched engines).
     """
     a, c = cfg.assoc, cfg.planes
 
-    def one(table, qkey, qval, op):
+    def one(table, qkey, qval, op, live):
         sid = set_index_for(cfg, qkey[None])[0]
         rows = jax.lax.dynamic_slice(table, (sid, 0, 0), (1, a, c))
         # row_apply is the single op-dispatch used by every engine, so the
         # sequential oracle and the batched paths cannot drift per-op.
-        new_rows, res = row_apply(cfg, rows, qkey[None], qval[None], op[None])
+        new_rows, res = row_apply(cfg, rows, qkey[None], qval[None], op[None],
+                                  chain_live=live[None])
         table = jax.lax.dynamic_update_slice(table, new_rows, (sid, 0, 0))
         return table, (res.hit[0], res.pos[0], res.value[0],
                        res.evicted_key[0], res.evicted_val[0],
                        res.evicted_valid[0])
 
+    def scan(table, qkeys, qvals, opcodes, live):
+        def step(tbl, xs):
+            k, v, op, lv = xs
+            return one(tbl, k, v, op, lv)
+        table, outs = jax.lax.scan(step, table, (qkeys, qvals, opcodes, live))
+        return table, SeqOutputs(*outs)
+
     if with_ops:
         @jax.jit
-        def run(table, qkeys, qvals, opcodes):
-            def step(tbl, xs):
-                k, v, op = xs
-                return one(tbl, k, v, op)
-            table, outs = jax.lax.scan(step, table, (qkeys, qvals, opcodes))
-            return table, SeqOutputs(*outs)
+        def run_ops(table, qkeys, qvals, opcodes):
+            live = jnp.ones(opcodes.shape, bool)
+            return scan(table, qkeys, qvals, opcodes, live)
+
+        @jax.jit
+        def run_chain(table, qkeys, qvals, opcodes, chain_ids):
+            live = chain_live_mask(cfg, table, qkeys, opcodes, chain_ids)
+            return scan(table, qkeys, qvals, opcodes, live)
+
+        def run(table, qkeys, qvals, opcodes, chain_ids=None):
+            if chain_ids is not None:
+                return run_chain(table, qkeys, qvals, opcodes,
+                                 jnp.asarray(chain_ids, jnp.int32))
+            return run_ops(table, qkeys, qvals, opcodes)
     else:
         @jax.jit
         def run(table, qkeys, qvals):
-            def step(tbl, xs):
-                k, v = xs
-                return one(tbl, k, v, jnp.int32(OP_ACCESS))
-            table, outs = jax.lax.scan(step, table, (qkeys, qvals))
-            return table, SeqOutputs(*outs)
+            ones = jnp.ones(qkeys.shape[0], bool)
+            ops0 = jnp.full(qkeys.shape[0], OP_ACCESS, jnp.int32)
+            return scan(table, qkeys, qvals, ops0, ones)
 
     return run
 
@@ -159,31 +213,95 @@ def group_offsets(ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros((b,), jnp.int32).at[order].set(off_sorted)
 
 
+def chain_exec_from_hits(ops, chain_ids, raw_hit, valid=None):
+    """(B,) bool execute mask for CHAIN_GET/CHAIN_PUT rows (see module doc).
+
+    raw_hit (B,) bool: batch-start membership of each query's key (any
+    value for non-chain rows).  CHAIN_GET row i executes iff every
+    CHAIN_GET row at or before i in its (contiguous) chain run was a raw
+    hit — the segmented cumulative AND, i.e. the longest-hit prefix.  The
+    o-th CHAIN_PUT row of a chain executes iff o >= the chain's hit length
+    (the insert half of a fused serving tick).  ``chain_ids`` must lie in
+    [0, B).  An INVALID chain row (``valid`` False — e.g. overflow-dropped
+    in the sharded engine) counts as a miss: it breaks its chain's hit
+    prefix, so nothing past a dropped row can promote or report a hit
+    (conservative under-serving, never a hole in the prefix); invalid
+    CHAIN_PUT rows still occupy their pairing slot but never execute.
+    Pure jnp on (B,)-vectors — no table access — so the sharded engine can
+    run it on the query-owning device from routed-back probes.
+    """
+    b = ops.shape[0]
+    is_get = ops == OP_CHAIN_GET
+    is_put = ops == OP_CHAIN_PUT
+    if valid is None:
+        valid = jnp.ones(ops.shape, bool)
+    idx = jnp.arange(b, dtype=jnp.int32)
+    # non-chain rows break segment runs (unique negative ids); invalid
+    # chain rows keep their id so the run is NOT split around them
+    cid = jnp.where(is_get | is_put, chain_ids, -1 - idx)
+    firsts = jnp.concatenate([jnp.ones((1,), bool), cid[1:] != cid[:-1]])
+    bad = jnp.where(is_get & ~(raw_hit & valid), idx, b).astype(jnp.int32)
+
+    def seg_min(a, c):
+        fa, va = a
+        fc, vc = c
+        return fa | fc, jnp.where(fc, vc, jnp.minimum(va, vc))
+
+    _, run_min = jax.lax.associative_scan(seg_min, (firsts, bad))
+    get_exec = is_get & valid & (run_min > idx)   # no miss at or before me
+
+    cid_c = jnp.clip(chain_ids, 0, b - 1)
+    hitlen = jnp.zeros((b,), jnp.int32).at[cid_c].add(
+        jnp.where(get_exec, 1, 0))
+    occ = group_offsets(jnp.where(is_put, cid_c, b + idx))
+    put_exec = is_put & valid & (occ >= hitlen[cid_c])
+    return get_exec | put_exec
+
+
+def chain_live_mask(cfg: MSLRUConfig, table, qkeys, ops, chain_ids,
+                    valid=None):
+    """Device-side longest-prefix scan: probe + ``chain_exec_from_hits``.
+
+    Probes every query's key against ``table`` (one (B, A, C) row read —
+    membership only, no mutation) and reduces the chain-row hits to the
+    per-row execute mask.  Exact because CHAIN_GET rows precede every
+    membership-mutating row (module contract), so the batch-start
+    membership equals the at-execution membership for all of them.
+    """
+    sid = set_index_for(cfg, qkeys)
+    rows = jnp.take(table, sid, axis=0)
+    raw_hit, _, _ = row_lookup(cfg, rows, qkeys)
+    return chain_exec_from_hits(ops, chain_ids, raw_hit, valid)
+
+
 def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                           max_rounds: int | None = None, row_op=None,
-                          ops=None):
+                          ops=None, chain_live=None):
     """Exact multi-query update: serialize same-set queries across rounds.
 
     table: (S, A, C); gsid: (B,) set id per query (entries with ``valid`` False
     are ignored); ``ops`` (B,) optional per-query opcodes (default all
-    OP_ACCESS); returns (table, AccessResult, served).  Bit-exact w.r.t.
-    processing the valid queries sequentially in batch order, because queries
-    to distinct sets commute and round r applies exactly the r-th query of
-    each set.  ``max_rounds`` bounds latency; excess queries are dropped
-    (reported via res.hit=False and the served mask = offset < rounds).
+    OP_ACCESS); ``chain_live`` (B,) optional execute mask for
+    CHAIN_GET/CHAIN_PUT rows (precomputed by ``chain_live_mask``); returns
+    (table, AccessResult, served).  Bit-exact w.r.t. processing the valid
+    queries sequentially in batch order, because queries to distinct sets
+    commute and round r applies exactly the r-th query of each set.
+    ``max_rounds`` bounds latency; excess queries are dropped (reported via
+    res.hit=False and the served mask = offset < rounds).
 
-    ``row_op(rows, qkeys, qvals, ops) -> (new_rows, AccessResult)`` is the
-    batch row transition; defaults to ``row_apply`` (``row_access`` when
-    ``ops`` is None — the ACCESS-only fast path compiles no op selects).
-    kernels/ops.py passes the Pallas kernel here so both backends share
-    this serialization loop.
+    ``row_op(rows, qkeys, qvals, ops, chain_live) -> (new_rows,
+    AccessResult)`` is the batch row transition; defaults to ``row_apply``
+    (``row_access`` when ``ops`` is None — the ACCESS-only fast path
+    compiles no op selects).  kernels/ops.py passes the Pallas kernel here
+    so both backends share this serialization loop.
     """
     if row_op is None:
         if ops is None:
-            def row_op(rows, qk, qv, _ops):
+            def row_op(rows, qk, qv, _ops, _live):
                 return row_access(cfg, rows, qk, qv)
         else:
-            row_op = functools.partial(row_apply, cfg)
+            def row_op(rows, qk, qv, row_ops, live):
+                return row_apply(cfg, rows, qk, qv, row_ops, chain_live=live)
     s = cfg.num_sets if table.shape[0] == cfg.num_sets else table.shape[0]
     b = gsid.shape[0]
     gsid = jnp.where(valid, gsid, s)                  # sentinel group
@@ -203,7 +321,7 @@ def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     def body(carry):
         r, padded, acc = carry
         rows = jnp.take(padded, gsid, axis=0)
-        new_rows, res = row_op(rows, qkeys, qvals, ops)
+        new_rows, res = row_op(rows, qkeys, qvals, ops, chain_live)
         sel = (offset == r) & valid
         scatter_id = jnp.where(sel, gsid, s)          # losers pile onto dummy row
         padded = padded.at[scatter_id].set(new_rows)
@@ -234,7 +352,8 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
                          use_kernel: bool = False, block_b: int = 2048,
                          interpret: bool | None = None):
     """Bind the chosen conflict scheme to ``update(table, gsid, valid,
-    qkeys, qvals, ops=None) -> (table, AccessResult, served)``.
+    qkeys, qvals, ops=None, chain_live=None) -> (table, AccessResult,
+    served)``.
 
     The single dispatch point for the ``engine`` switch — the batched and
     sharded engines both resolve through here so the option set, the
@@ -244,25 +363,29 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
     if engine == "onepass":
         from repro.kernels.ops import onepass_update  # deferred: kernels -> core
 
-        def update(table, gsid, valid, qkeys, qvals, ops=None):
+        def update(table, gsid, valid, qkeys, qvals, ops=None,
+                   chain_live=None):
             return onepass_update(cfg, table, gsid, valid, qkeys, qvals,
                                   max_rounds, use_kernel, block_b, interpret,
-                                  ops=ops)
+                                  ops=ops, chain_live=chain_live)
     else:
         assert not use_kernel, (
             "engine='rounds' here is XLA-only; the kernel-backed rounds path "
             "lives in repro.kernels.ops.make_kernel_batched_engine")
 
-        def update(table, gsid, valid, qkeys, qvals, ops=None):
+        def update(table, gsid, valid, qkeys, qvals, ops=None,
+                   chain_live=None):
             return batched_rounds_update(cfg, table, gsid, valid, qkeys,
-                                         qvals, max_rounds, ops=ops)
+                                         qvals, max_rounds, ops=ops,
+                                         chain_live=chain_live)
     return update
 
 
 def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
                         engine: str = "rounds", use_kernel: bool = False,
                         block_b: int = 2048, interpret: bool | None = None):
-    """Returns run(table, qkeys (B,KP), qvals (B,V), ops=None) -> (table, result).
+    """Returns run(table, qkeys (B,KP), qvals (B,V), ops=None,
+    chain_ids=None) -> (table, result).
 
     Exact (sequential-equivalent) unless ``max_rounds`` caps the conflict
     serialization.  ``engine`` selects the conflict scheme: ``"rounds"``
@@ -270,7 +393,9 @@ def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
     gather/scatter with on-chip chain resolution; ``use_kernel`` routes the
     chain loop through the Pallas kernel instead of its jnp mirror).
     ``ops`` is an optional (B,) opcode vector (see the module docstring);
-    omitted means all OP_ACCESS.
+    omitted means all OP_ACCESS.  ``chain_ids`` (B,) enables the fused
+    chain ops (CHAIN_GET/CHAIN_PUT): the longest-prefix scan runs on device
+    inside the same jit'd call — one engine invocation per serving tick.
     """
     update = make_conflict_update(cfg, engine, max_rounds, use_kernel,
                                   block_b, interpret)
@@ -284,9 +409,22 @@ def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
         table, res, _served = update(table, sids, valid, qkeys, qvals, ops)
         return table, res
 
-    def run(table, qkeys, qvals, ops=None):
+    @jax.jit
+    def run_chain(table, qkeys, qvals, ops, chain_ids):
+        sids = set_index_for(cfg, qkeys)
+        valid = jnp.ones(sids.shape, bool)
+        live = chain_live_mask(cfg, table, qkeys, ops, chain_ids)
+        table, res, _served = update(table, sids, valid, qkeys, qvals, ops,
+                                     chain_live=live)
+        return table, res
+
+    def run(table, qkeys, qvals, ops=None, chain_ids=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
+        if chain_ids is not None:
+            assert ops is not None, "chain_ids requires an ops vector"
+            return run_chain(table, qkeys, qvals, ops,
+                             jnp.asarray(chain_ids, jnp.int32))
         return run_ops(table, qkeys, qvals, ops)
 
     return run

@@ -38,6 +38,8 @@ __all__ = [
     "OP_GET",
     "OP_DELETE",
     "OP_LOOKUP",
+    "OP_CHAIN_GET",
+    "OP_CHAIN_PUT",
     "init_table",
     "row_lookup",
     "row_get",
@@ -59,6 +61,16 @@ OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
 OP_GET = 1     # get only (a miss leaves the cache untouched)
 OP_DELETE = 2  # invalidate in place
 OP_LOOKUP = 3  # read-only probe (no recency update, no mutation)
+# Chain-segmented ops (the fused serving tick).  Queries carrying these ops
+# come with a chain id; the engine derives a per-query execute mask from the
+# chain's longest-hit prefix (the segmented cumulative AND — see
+# engine.chain_exec_from_hits) and hands it to the row transition as
+# ``chain_live``: a CHAIN_GET row behaves as GET while its chain is still
+# all-hits and degrades to a reported-miss no-op past the chain's first
+# miss; a CHAIN_PUT row is the mirror image — a no-op while its chunk index
+# is inside the chain's hit prefix, an ACCESS (insert) past it.
+OP_CHAIN_GET = 4
+OP_CHAIN_PUT = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,39 +262,53 @@ def row_delete(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
 
 
 def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
-              qvals: jnp.ndarray, ops: jnp.ndarray):
+              qvals: jnp.ndarray, ops: jnp.ndarray,
+              chain_live: jnp.ndarray | None = None):
     """Branch-free mixed-op transition: per-row opcode selects the op.
 
-    rows (B, A, C); qkeys (B, KP); qvals (B, V); ops (B,) int32 OP_* codes.
-    All four transitions are computed once over the whole batch and the
-    opcode picks per row — the batch stays SPMD regardless of the op mix.
-    Returns (new_rows, AccessResult) with one normalized result contract for
-    every engine (see the opcode table in engine.py):
+    rows (B, A, C); qkeys (B, KP); qvals (B, V); ops (B,) int32 OP_* codes;
+    chain_live (B,) bool execute mask for CHAIN_GET/CHAIN_PUT rows (derived
+    by engine.chain_exec_from_hits; ignored for the four plain ops; ``None``
+    treats every chain row as live — CHAIN_GET ≡ GET, CHAIN_PUT ≡ ACCESS).
+    All transitions are computed once over the whole batch and the opcode
+    picks per row — the batch stays SPMD regardless of the op mix.  Returns
+    (new_rows, AccessResult) with one normalized result contract for every
+    engine (see the opcode table in engine.py):
 
-      * hit/pos/value come from the probe for LOOKUP/GET/ACCESS; DELETE
-        reports hit (found) but pos = -1 and value = 0,
-      * evicted_* fire only for an evicting ACCESS insert; everywhere else
-        evicted_key carries the EMPTY_KEY sentinel (never query garbage).
+      * hit/pos/value come from the probe for LOOKUP/GET/ACCESS and live
+        chain rows; DELETE reports hit (found) but pos = -1 and value = 0;
+        a dead (downgraded) chain row reports a plain miss,
+      * evicted_* fire only for an evicting ACCESS / live-CHAIN_PUT insert;
+        everywhere else evicted_key carries the EMPTY_KEY sentinel (never
+        query garbage).
     """
     is_acc = ops == OP_ACCESS
     is_del = ops == OP_DELETE
     is_look = ops == OP_LOOKUP
+    is_chain = (ops == OP_CHAIN_GET) | (ops == OP_CHAIN_PUT)
+    if chain_live is None:
+        dead = jnp.zeros(ops.shape, bool)
+    else:
+        dead = is_chain & ~chain_live
+    is_putop = is_acc | ((ops == OP_CHAIN_PUT) & ~dead)
 
     got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
     put_rows, ev_k, ev_v, ev_ok = row_put(cfg, rows, qkeys, qvals)
     del_rows, _ = row_delete(cfg, rows, qkeys)
 
-    # GET falls back to got_rows, which is a provable identity on a miss.
-    acc_or_get = jnp.where((is_acc & ~hit)[..., None, None], put_rows, got_rows)
+    # GET (and a live CHAIN_GET) falls back to got_rows, which is a provable
+    # identity on a miss; dead chain rows pass the row through like LOOKUP.
+    acc_or_get = jnp.where((is_putop & ~hit)[..., None, None], put_rows, got_rows)
     new_rows = jnp.where(
         is_del[..., None, None], del_rows,
-        jnp.where(is_look[..., None, None], rows, acc_or_get))
+        jnp.where((is_look | dead)[..., None, None], rows, acc_or_get))
 
-    evicting = is_acc & ~hit
+    evicting = is_putop & ~hit
+    zero_out = is_del | dead
     res = AccessResult(
-        hit=hit,
-        value=jnp.where(is_del[..., None], 0, value),
-        pos=jnp.where(is_del, -1, pos),
+        hit=hit & ~dead,
+        value=jnp.where(zero_out[..., None], 0, value),
+        pos=jnp.where(zero_out, -1, pos),
         evicted_key=jnp.where(evicting[..., None], ev_k,
                               jnp.full_like(ev_k, EMPTY_KEY)),
         evicted_val=jnp.where(evicting[..., None], ev_v, 0),

@@ -27,6 +27,9 @@ __all__ = [
     "OP_GET",
     "OP_DELETE",
     "OP_LOOKUP",
+    "OP_CHAIN_GET",
+    "OP_CHAIN_PUT",
+    "chain_exec_py",
     "MultiStepLRUOracle",
     "ExactLRU",
     "GClock",
@@ -44,6 +47,43 @@ OP_ACCESS = 0
 OP_GET = 1
 OP_DELETE = 2
 OP_LOOKUP = 3
+OP_CHAIN_GET = 4
+OP_CHAIN_PUT = 5
+
+
+def chain_exec_py(ops, chain_ids, raw_hit):
+    """Pure-Python mirror of ``engine.chain_exec_from_hits``.
+
+    ops/chain_ids/raw_hit: length-n sequences.  CHAIN_GET row i executes iff
+    its contiguous chain run has no raw miss at or before i; the o-th
+    CHAIN_PUT row of a chain executes iff o >= the chain's hit length.
+    Non-chain rows break runs, exactly like the jnp segmented scan.
+    """
+    n = len(ops)
+    ex = [bool(op not in (OP_CHAIN_GET, OP_CHAIN_PUT)) for op in ops]
+    hitlen: dict = {}
+    cur_id = object()
+    seg_bad = False
+    for i in range(n):
+        if ops[i] in (OP_CHAIN_GET, OP_CHAIN_PUT):
+            c = chain_ids[i]
+            if c != cur_id:
+                cur_id, seg_bad = c, False
+            if ops[i] == OP_CHAIN_GET:
+                seg_bad = seg_bad or not raw_hit[i]
+                ex[i] = not seg_bad
+                if ex[i]:
+                    hitlen[c] = hitlen.get(c, 0) + 1
+        else:
+            cur_id = object()
+    occ: dict = {}
+    for i in range(n):
+        if ops[i] == OP_CHAIN_PUT:
+            c = chain_ids[i]
+            o = occ.get(c, 0)
+            occ[c] = o + 1
+            ex[i] = o >= hitlen.get(c, 0)
+    return ex
 
 
 def fmix32_py(x: int) -> int:
@@ -181,6 +221,35 @@ class MultiStepLRUOracle:
             return {"hit": True, "pos": pos, "value": value, "evicted": None}
         return {"hit": False, "pos": -1, "value": None,
                 "evicted": self.put(key, val)}
+
+    def apply_batch(self, ops, keys, vals=None, chain_ids=None):
+        """Apply one batch with the engines' chain semantics (list of
+        ``apply`` result dicts).  Chain rows probe membership against the
+        *batch-start* table, the segmented longest-prefix scan derives each
+        row's execute mask (``chain_exec_py``), and a live CHAIN_GET /
+        CHAIN_PUT then runs as GET / ACCESS while a downgraded row is a
+        reported-miss no-op — the normative contract in core/engine.py."""
+        n = len(ops)
+        if vals is None:
+            vals = [0] * n
+        if chain_ids is None:
+            ex = [True] * n
+        else:
+            raw = [self.lookup(k)[0] for k in keys]  # before any mutation
+            ex = chain_exec_py(ops, chain_ids, raw)
+        miss = {"hit": False, "pos": -1, "value": None, "evicted": None}
+        out = []
+        for i in range(n):
+            op = int(ops[i])
+            if op == OP_CHAIN_GET:
+                out.append(self.apply(OP_GET, keys[i], vals[i])
+                           if ex[i] else dict(miss))
+            elif op == OP_CHAIN_PUT:
+                out.append(self.apply(OP_ACCESS, keys[i], vals[i])
+                           if ex[i] else dict(miss))
+            else:
+                out.append(self.apply(op, keys[i], vals[i]))
+        return out
 
     def dump_keys(self) -> np.ndarray:
         """(S, A) int64 key matrix with EMPTY as a large negative sentinel."""

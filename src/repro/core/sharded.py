@@ -22,22 +22,39 @@ The routing/update pipeline per device:
      duplicate chains on-chip (kernels/ops.onepass_update), one
      gather/scatter per step
   4. all_to_all results back; unpack by (owner, slot)
+
+Chain ops (the fused serving tick) add a membership pre-phase: the keys are
+routed once, each owner shard answers a read-only probe, the hits route
+back, and the *query-owning* device runs the segmented longest-prefix scan
+over its local chains (``engine.chain_exec_from_hits``) — chains never
+straddle devices, so the scan is local.  The derived execute mask then
+rides the normal phase-2 payload as one extra int32 plane next to the
+opcode, and the evicted key/value planes ride the result payload back (the
+serving tier recycles evicted KV pages).  Everything happens inside ONE
+jit'd call: four all_to_alls, zero host round-trips.
+``ShardedCacheClient`` packages this as a host-side drop-in backend for
+``serving.prefix_cache.PrefixCache``: it repacks a tick's chains into
+per-device slabs (whole chains per slab, slab-local chain ids) and unpacks
+the results back to request order.
 """
 
 from __future__ import annotations
 
 import functools
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.engine import make_conflict_update
+from repro.core.engine import chain_exec_from_hits, make_conflict_update
 from repro.core.invector import EMPTY_KEY
-from repro.core.multistep import MSLRUConfig, OP_ACCESS, set_index_for
+from repro.core.multistep import (AccessResult, MSLRUConfig, OP_ACCESS,
+                                  OP_CHAIN_GET, OP_CHAIN_PUT, OP_LOOKUP,
+                                  init_table, row_lookup, set_index_for)
 from repro.launch.mesh import shard_map_compat as _shard_map
 
-__all__ = ["make_sharded_engine", "shard_table"]
+__all__ = ["make_sharded_engine", "shard_table", "ShardedCacheClient"]
 
 
 def shard_table(table, mesh, axis: str = "cache"):
@@ -50,7 +67,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
                         max_rounds: int | None = None, engine: str = "rounds",
                         use_kernel: bool = False, block_b: int = 2048,
                         interpret: bool | None = None):
-    """Build run(table, qkeys, qvals, ops=None) -> (table, hit, val, served).
+    """Build run(table, qkeys, qvals, ops=None, chain_ids=None).
 
     table: (S, A, C) sharded over sets on ``axis``.
     qkeys: (Q, KP), qvals: (Q, V) sharded over queries on ``axis``.
@@ -58,6 +75,16 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
            payload as one extra int32 plane.  ``None`` routes the ACCESS-only
            specialization (no ops plane, no opcode selects — the legacy
            hot path, compiled separately).
+    chain_ids: (Q,) optional chain segment ids for CHAIN_GET/CHAIN_PUT rows
+           (requires ``ops``).  Ids must be *device-local*: in [0, Q/ndev),
+           with every chain's rows confined to one device's query slab (see
+           ``ShardedCacheClient``).  Chain mode adds the membership
+           pre-phase + the execute-mask plane, and extends the result with
+           the evicted value planes.
+    cap:   per-peer send-buffer depth; the string ``"full"`` sizes it to the
+           whole local slab (no overflow possible — the serving setting).
+    Returns (table, hit, val, served) — chain mode appends
+    (evicted_val (Q, max(V,1)), evicted_valid (Q,)).
     hit:   (Q,) bool — False for misses AND overflow-dropped queries.
     served:(Q,) bool — False only for overflow-dropped queries.
     engine: per-shard conflict scheme — "rounds" (gather/scatter per round)
@@ -70,12 +97,19 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
     assert cfg.num_sets % ndev == 0
     s_local = cfg.num_sets // ndev
     kp, v = cfg.key_planes, cfg.value_planes
+    ve = max(v, 1)
 
-    def local_fn(table, qkeys, qvals, ops=None):
-        # table (s_local, A, C); qkeys (q_local, KP); qvals (q_local, V)
-        q_local = qkeys.shape[0]
-        k = cap if cap is not None else max(1, (2 * q_local) // ndev)
+    def _k_for(q_local):
+        if cap == "full":
+            return q_local
+        return cap if cap is not None else max(1, (2 * q_local) // ndev)
 
+    def _route(qkeys, extra_planes, k):
+        """Pack queries into (ndev, k, pc) send buffers and all_to_all them.
+
+        Returns (routed rows (ndev*k, pc), didx, sidx, served) — didx/sidx
+        address the slot each local query landed in, for the result unpack.
+        """
         sid = set_index_for(cfg, qkeys)                     # (q,) global set id
         owner = sid // s_local                              # destination shard
         # slot within the per-destination send buffer = rank among same-owner
@@ -84,9 +118,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         slot = jnp.sum(jnp.where(onehot, rank - 1, 0), axis=1)
         served = slot < k                                   # overflow -> dropped
 
-        # pack send buffers (ndev, k, planes); padded entries get EMPTY keys
-        planes = [qkeys, qvals] + ([] if ops is None else [ops[:, None]])
-        payload = jnp.concatenate(planes, axis=-1)
+        payload = jnp.concatenate([qkeys] + extra_planes, axis=-1)
         pc = payload.shape[-1]
         send = jnp.full((ndev, k, pc), EMPTY_KEY, jnp.int32)
         didx = jnp.where(served, owner, ndev - 1)           # clamp for scatter
@@ -96,31 +128,79 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
             jnp.where(served[:, None], payload, EMPTY_KEY))
         # NOTE: multiple overflow queries may target (ndev-1, k-1); they all
         # write EMPTY_KEY so the duplicate-scatter is value-deterministic.
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        return recv.reshape(ndev * k, pc), didx, sidx, served
 
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=True)
-        rq = recv.reshape(ndev * k, pc)
+    def _route_back(planes, didx, sidx, k):
+        """all_to_all per-routed-row result planes back to the sources."""
+        back = jax.lax.all_to_all(
+            jnp.concatenate(planes, axis=-1).reshape(ndev, k, -1),
+            axis, split_axis=0, concat_axis=0, tiled=True)
+        # back[d, j] = result of the query I sent to shard d in slot j
+        return back[didx, sidx]
+
+    def local_fn(table, qkeys, qvals, ops=None, chain_ids=None):
+        # table (s_local, A, C); qkeys (q_local, KP); qvals (q_local, V)
+        q_local = qkeys.shape[0]
+        k = _k_for(q_local)
+        chain_mode = chain_ids is not None
+
+        live_planes = []
+        if chain_mode:
+            # membership pre-phase: owners answer a read-only probe, the
+            # query-owning device runs the segmented longest-prefix scan
+            # over its (local) chains.  No mutation happens before phase 2,
+            # so the probe is the batch-start membership the chain
+            # contract requires, globally.
+            rq, didx, sidx, served = _route(qkeys, [], k)
+            p_keys = rq[:, :kp]
+            p_valid = p_keys[:, 0] != EMPTY_KEY
+            p_rows = jnp.take(table, set_index_for(cfg, p_keys) % s_local,
+                              axis=0)
+            p_hit, _, _ = row_lookup(cfg, p_rows, p_keys)
+            hit_home = _route_back(
+                [(p_hit & p_valid).astype(jnp.int32)[:, None]],
+                didx, sidx, k)
+            raw_hit = (hit_home[:, 0] != 0) & served
+            live = chain_exec_from_hits(ops, chain_ids, raw_hit,
+                                        valid=served)
+            live_planes = [live.astype(jnp.int32)[:, None]]
+
+        planes = ([qvals] + ([] if ops is None else [ops[:, None]])
+                  + live_planes)
+        rq, didx, sidx, served = _route(qkeys, planes, k)
         r_keys, r_vals = rq[:, :kp], rq[:, kp: kp + v]
         valid = r_keys[:, 0] != EMPTY_KEY
         r_ops = (None if ops is None
                  else jnp.where(valid, rq[:, kp + v], OP_ACCESS))
+        r_live = (jnp.where(valid, rq[:, kp + v + 1], 0)
+                  if chain_mode else None)
 
         # exact local update (same conflict schemes as the batched engine)
         lsid = set_index_for(cfg, r_keys) % s_local
-        table, res, _served = update(table, lsid, valid, r_keys, r_vals, r_ops)
+        table, res, _served = update(table, lsid, valid, r_keys, r_vals,
+                                     r_ops, chain_live=r_live)
 
-        hit_back = (res.hit & valid).astype(jnp.int32).reshape(ndev, k, 1)
+        hit_back = (res.hit & valid).astype(jnp.int32)[:, None]
         val_back = (res.value if v else
-                    jnp.zeros((res.value.shape[0], 1), jnp.int32)
-                    ).reshape(ndev, k, max(v, 1))
-        back = jax.lax.all_to_all(
-            jnp.concatenate([hit_back, val_back], axis=-1),
-            axis, split_axis=0, concat_axis=0, tiled=True)
-        # back[d, j] = result of the query I sent to shard d in slot j
-        my_hit = back[didx, sidx, 0].astype(bool) & served
-        my_val = back[didx, sidx, 1:]
-        return table, my_hit, my_val, served
+                    jnp.zeros((res.value.shape[0], 1), jnp.int32))
+        if chain_mode:
+            evv_back = (res.evicted_val if v else
+                        jnp.zeros((res.value.shape[0], 1), jnp.int32))
+            evok_back = (res.evicted_valid & valid).astype(jnp.int32)[:, None]
+            home = _route_back([hit_back, val_back, evv_back, evok_back],
+                               didx, sidx, k)
+            my_hit = home[:, 0].astype(bool) & served
+            return (table, my_hit, home[:, 1: 1 + ve], served,
+                    home[:, 1 + ve: 1 + 2 * ve],
+                    (home[:, 1 + 2 * ve] != 0) & served)
+        home = _route_back([hit_back, val_back], didx, sidx, k)
+        my_hit = home[:, 0].astype(bool) & served
+        return table, my_hit, home[:, 1:], served
 
     out_specs = (P(axis, None, None), P(axis), P(axis, None), P(axis))
+    out_specs_chain = out_specs + (P(axis, None), P(axis))
     fn_noops = jax.jit(_shard_map(
         local_fn,
         mesh=mesh,
@@ -133,13 +213,147 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         in_specs=(P(axis, None, None), P(axis, None), P(axis, None), P(axis)),
         out_specs=out_specs,
     ))
+    fn_chain = jax.jit(_shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None), P(axis, None), P(axis),
+                  P(axis)),
+        out_specs=out_specs_chain,
+    ))
 
-    def run(table, qkeys, qvals, ops=None):
+    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+        if chain_ids is not None:
+            assert ops is not None, "chain_ids requires an ops vector"
+            return fn_chain(table, qkeys, qvals, jnp.asarray(ops, jnp.int32),
+                            jnp.asarray(chain_ids, jnp.int32))
         if ops is None:
             return fn_noops(table, qkeys, qvals)
         return fn_ops(table, qkeys, qvals, jnp.asarray(ops, jnp.int32))
 
     return run
+
+
+class ShardedCacheClient:
+    """Host-side driver exposing the sharded engine with the local
+    ``MultiStepLRUCache`` access contract, so ``PrefixCache`` can serve a
+    multi-host-shaped cache unchanged (one fused chain call per tick).
+
+    Repacking: the sharded run splits the query batch into ``ndev``
+    contiguous slabs, and the chain scan is device-local — so ``access``
+    deals whole chains round-robin onto slabs, renumbers chain ids
+    slab-locally, pads every slab to the common pow2 length with provable
+    no-op LOOKUP rows on key 0, and unpacks the outputs back to caller
+    order.  ``cap="full"`` sizes the per-peer buffers to the slab, so no
+    query can overflow (``pos`` is not routed back — it is reported as -1).
+    """
+
+    batch_multiple = 1  # access() repacks internally; any B works
+
+    def __init__(self, cfg: MSLRUConfig, mesh, axis: str = "cache",
+                 engine: str = "onepass", use_kernel: bool = False,
+                 block_b: int = 2048, interpret: bool | None = None):
+        # the slab repacking below is written for 32-bit chunk hashes; the
+        # sharded ENGINE itself handles key_planes=2, the client does not
+        assert cfg.key_planes == 1, (
+            "ShardedCacheClient packs 1-plane keys (chunk hashes); "
+            "key_planes=2 is not supported here")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.ndev = mesh.shape[axis]
+        self._run = make_sharded_engine(
+            cfg, mesh, axis=axis, cap="full", engine=engine,
+            use_kernel=use_kernel, block_b=block_b, interpret=interpret)
+        self.table = shard_table(init_table(cfg), mesh, axis)
+
+    def access(self, keys, vals=None, ops=None, chain_ids=None):
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        n = keys.shape[0]
+        v = self.cfg.value_planes
+        if vals is None:
+            vals = np.zeros((n, v), np.int32)
+        vals = np.asarray(vals, np.int32).reshape(n, v)
+        if ops is None:
+            ops = np.full(n, OP_ACCESS, np.int32)
+        ops = np.asarray(ops, np.int32)
+        chain_ids = (np.zeros(n, np.int32) if chain_ids is None
+                     else np.asarray(chain_ids, np.int32))
+
+        # deal whole chains (contiguous runs of one chain id among chain
+        # rows; plain rows are singleton groups) round-robin onto slabs
+        groups: list[list[int]] = []
+        is_chain = (ops == OP_CHAIN_GET) | (ops == OP_CHAIN_PUT)
+        prev = None
+        for i in range(n):
+            key = ("c", int(chain_ids[i])) if is_chain[i] else ("p", i)
+            if key != prev:
+                groups.append([])
+                prev = key
+            groups[-1].append(i)
+        # chains appear as two runs (GET island, PUT island) of one id —
+        # merge them so both land on the same slab
+        merged: dict = {}
+        order: list = []
+        for g in groups:
+            gk = ("c", int(chain_ids[g[0]])) if is_chain[g[0]] else ("p", g[0])
+            if gk in merged:
+                merged[gk].extend(g)
+            else:
+                merged[gk] = list(g)
+                order.append(gk)
+        slabs: list[list[int]] = [[] for _ in range(self.ndev)]
+        for j, gk in enumerate(order):
+            slabs[j % self.ndev].extend(merged[gk])
+
+        q = max(1, max(len(s) for s in slabs))
+        q = 1 << (q - 1).bit_length()
+        bp = q * self.ndev
+        k = np.zeros(bp, np.int32)
+        vv = np.zeros((bp, v), np.int32)
+        oo = np.full(bp, OP_LOOKUP, np.int32)          # padding: no-op probe
+        cc = np.zeros(bp, np.int32)
+        src = np.full(bp, -1, np.int64)                # row -> caller index
+        for d, slab in enumerate(slabs):
+            # renumber chain ids slab-locally: first-row index of the chain
+            local_first: dict = {}
+            for r, i in enumerate(slab):
+                row = d * q + r
+                k[row] = keys[i]
+                vv[row] = vals[i]
+                oo[row] = ops[i]
+                src[row] = i
+                if is_chain[i]:
+                    cid = int(chain_ids[i])
+                    local_first.setdefault(cid, r)
+                    cc[row] = local_first[cid]
+
+        self.table, hit, val, served, ev_val, ev_ok = self._run(
+            self.table, jnp.asarray(k[:, None]), jnp.asarray(vv),
+            jnp.asarray(oo), jnp.asarray(cc))
+        assert bool(np.asarray(served)[src >= 0].all()), "client overflow"
+
+        inv = np.zeros(n, np.int64)
+        inv[src[src >= 0]] = np.nonzero(src >= 0)[0]
+        hit = np.asarray(hit)[inv]
+        val = np.asarray(val)[inv][:, :v] if v else np.zeros((n, 0), np.int32)
+        ev_ok_u = np.asarray(ev_ok)[inv]
+        ev_val_u = (np.asarray(ev_val)[inv][:, :v] if v
+                    else np.zeros((n, 0), np.int32))
+        ev_key = np.where(ev_ok_u[:, None], 0,
+                          EMPTY_KEY).astype(np.int32)
+        ev_key = np.broadcast_to(ev_key, (n, self.cfg.key_planes))
+        return AccessResult(
+            hit=hit,
+            value=val,
+            pos=np.full(n, -1, np.int32),
+            evicted_key=ev_key,
+            evicted_val=ev_val_u,
+            evicted_valid=ev_ok_u,
+        )
+
+    @property
+    def occupancy(self) -> float:
+        valid = np.asarray(jax.device_get(self.table))[:, :, 0] != EMPTY_KEY
+        return float(valid.mean())
 
 
 def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",

@@ -61,21 +61,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.invector import EMPTY_KEY
-from repro.core.multistep import MSLRUConfig, OP_ACCESS, OP_DELETE, OP_LOOKUP
+from repro.core.multistep import (MSLRUConfig, OP_ACCESS, OP_CHAIN_GET,
+                                  OP_CHAIN_PUT, OP_DELETE, OP_LOOKUP)
 
 __all__ = ["msl_access_kernel_call", "msl_onepass_kernel_call"]
 
 
-def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None):
+def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
     """Mixed-op transition on (BB, A, C) rows; pure lane select/reduce math.
 
     ``ops`` (BB,) int32 opcode per row (OP_ACCESS/OP_GET/OP_DELETE/
-    OP_LOOKUP); ``None`` keeps the legacy all-ACCESS specialization (no
-    opcode selects compiled in).  Returns (new_rows, hit (BB,) bool, pos
-    (BB,) int32, val (BB, C), ev (BB, C) with key plane 0 == EMPTY_KEY when
+    OP_LOOKUP/OP_CHAIN_GET/OP_CHAIN_PUT); ``None`` keeps the legacy
+    all-ACCESS specialization (no opcode selects compiled in).
+    ``chain_live`` (BB,) int32 execute mask for the chain ops (precomputed
+    by the engine's segmented longest-prefix scan; ``None`` treats chain
+    rows as live): a live CHAIN_GET runs the GET path, a live CHAIN_PUT
+    the ACCESS path, and a dead chain row passes its row through and
+    reports a plain miss.  Returns (new_rows, hit (BB,) bool, pos (BB,)
+    int32, val (BB, C), ev (BB, C) with key plane 0 == EMPTY_KEY when
     nothing was evicted); pos/val/ev follow the normalized per-op contract
     of ``core.multistep.row_apply`` (DELETE: pos = -1, val = 0; only an
-    evicting ACCESS reports a real ev).
+    evicting ACCESS / live-CHAIN_PUT insert reports a real ev).
     """
     a = cfg.assoc
     kp, v = cfg.key_planes, cfg.value_planes
@@ -111,9 +117,21 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None):
     hi_put = pos_ins
 
     # --- fuse: one rotate_insert with per-row (lo, hi, item) --------------
-    # The put range applies only to an ACCESS miss; a GET miss degenerates
-    # to the identity rotation (lo = hi = 0, item = rows[0]).
-    use_put = ~hit if ops is None else (ops == OP_ACCESS) & ~hit
+    # The put range applies only to an ACCESS (or live CHAIN_PUT) miss; a
+    # GET miss degenerates to the identity rotation (lo = hi = 0,
+    # item = rows[0]).
+    if ops is None:
+        use_put = ~hit
+        dead = None
+    else:
+        is_cget = ops == OP_CHAIN_GET
+        is_cput = ops == OP_CHAIN_PUT
+        if chain_live is None:
+            dead = jnp.zeros(ops.shape, bool)
+        else:
+            dead = (is_cget | is_cput) & (chain_live == 0)
+        is_putop = (ops == OP_ACCESS) | (is_cput & ~dead)
+        use_put = is_putop & ~hit
     lo = jnp.where(use_put, lo_put, lo_get)
     hi = jnp.where(use_put, hi_put, hi_get)
     new_item = jnp.concatenate([qk, qv], axis=-1) if v else qk      # (BB, C)
@@ -139,27 +157,31 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None):
 
     is_del = ops == OP_DELETE
     is_look = ops == OP_LOOKUP
-    # DELETE: kill key plane 0 at the hit lane; LOOKUP: pass rows through.
+    # DELETE: kill key plane 0 at the hit lane; LOOKUP (and a dead chain
+    # row): pass rows through.
     kill = (lane == pos_c[:, None]) & (hit & is_del)[:, None]       # (BB, A)
     cidx = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 2)       # (BB, A, C)
     del_rows = jnp.where((cidx == 0) & kill[..., None],
                          jnp.int32(EMPTY_KEY), rows)
     out = jnp.where(is_del[:, None, None], del_rows,
-                    jnp.where(is_look[:, None, None], rows, out))
+                    jnp.where((is_look | dead)[:, None, None], rows, out))
 
-    ev = jnp.where((hit | ~(ops == OP_ACCESS))[:, None], empty_ev, displaced)
-    pos_out = jnp.where(is_del, -1, pos)
-    val_out = jnp.where(is_del[:, None], 0, at_pos)
-    return out, hit, pos_out, val_out, ev
+    zero_out = is_del | dead
+    ev = jnp.where((hit | ~is_putop)[:, None], empty_ev, displaced)
+    pos_out = jnp.where(zero_out, -1, pos)
+    val_out = jnp.where(zero_out[:, None], 0, at_pos)
+    return out, hit & ~dead, pos_out, val_out, ev
 
 
-def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served):
+def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served,
+                chain_live=None):
     """fori_loop body resolving one duplicate-chain step (shared verbatim by
     the Pallas one-pass kernel and its jnp mirror in ops.py).
 
     State: (cur chain rows, after committed rows, hit, pos, val, ev).  At
     step r the queries with chain rank r apply their transition — selected
-    per row by ``ops`` (identity when not ``served``) — commit into
+    per row by ``ops`` plus the ``chain_live`` execute mask for
+    CHAIN_GET/CHAIN_PUT rows (identity when not ``served``) — commit into
     ``after``, and hand the updated row to rank r+1 via a batch-axis shift
     (sorted order makes chain neighbours adjacent).
     """
@@ -167,7 +189,8 @@ def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served):
 
     def body(r, state):
         cur, after, h, po, va, ev = state
-        new_rows, hitv, posv, valv, evv = _transition(cfg, cur, qk, qv, ops)
+        new_rows, hitv, posv, valv, evv = _transition(cfg, cur, qk, qv, ops,
+                                                      chain_live)
         active = lrank == r
         act = active & served                 # dropped queries: identity
         eff = jnp.where(act[:, None, None], new_rows, cur)
@@ -195,10 +218,16 @@ def _chain_state0(cfg: MSLRUConfig, rows):
             jnp.zeros((b, rows.shape[-1]), jnp.int32))
 
 
-def _kernel(cfg: MSLRUConfig, has_ops: bool, *refs):
+def _kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool, *refs):
+    chain_live = None
     if has_ops:
-        (krows_ref, qkey_ref, qval_ref, ops_ref,
-         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
+        if has_chain:
+            (krows_ref, qkey_ref, qval_ref, ops_ref, live_ref,
+             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
+            chain_live = live_ref[...]        # (BB,) chain execute mask
+        else:
+            (krows_ref, qkey_ref, qval_ref, ops_ref,
+             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
         ops = ops_ref[...]                    # (BB,) opcodes
     else:  # ACCESS-only specialization: no opcode operand, no op selects
         (krows_ref, qkey_ref, qval_ref,
@@ -209,7 +238,7 @@ def _kernel(cfg: MSLRUConfig, has_ops: bool, *refs):
     qk = qkey_ref[...]                        # (BB, KP)
     qv = qval_ref[...]                        # (BB, V)
 
-    out, hit, pos, val, ev = _transition(cfg, rows, qk, qv, ops)
+    out, hit, pos, val, ev = _transition(cfg, rows, qk, qv, ops, chain_live)
 
     out_rows_ref[...] = out
     hit_ref[...] = hit.astype(jnp.int32)
@@ -222,20 +251,24 @@ def _kernel(cfg: MSLRUConfig, has_ops: bool, *refs):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
-def msl_access_kernel_call(rows, qkeys, qvals, ops=None, *, cfg: MSLRUConfig,
-                           block_b: int = 2048, interpret: bool = True):
+def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
+                           cfg: MSLRUConfig, block_b: int = 2048,
+                           interpret: bool = True):
     """Fused multi-step LRU op over pre-gathered rows.
 
     rows (B, A, C) int32; qkeys (B, KP); qvals (B, V); ops (B,) optional
     opcode vector — ``None`` compiles the ACCESS-only kernel with no opcode
-    operand (the legacy hot path, zero overhead).  B is padded to a multiple
-    of block_b with EMPTY queries (their outputs are sliced away).  Returns
-    the same tuple as ref.msl_access_ref.
+    operand (the legacy hot path, zero overhead); chain_live (B,) optional
+    int32 execute mask for CHAIN_GET/CHAIN_PUT rows (requires ``ops``).
+    B is padded to a multiple of block_b with EMPTY queries (their outputs
+    are sliced away).  Returns the same tuple as ref.msl_access_ref.
     """
     b, a, c = rows.shape
     kp, v = cfg.key_planes, cfg.value_planes
     ve = max(v, 1)  # BlockSpec needs >= 1 plane; dummy sliced off below
     has_ops = ops is not None
+    has_chain = chain_live is not None
+    assert not (has_chain and not has_ops), "chain_live requires ops"
     bb = min(block_b, b)
     pad = (-b) % bb
     if pad:
@@ -246,6 +279,9 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, *, cfg: MSLRUConfig,
         if has_ops:
             ops = jnp.concatenate(
                 [ops, jnp.full((pad,), OP_ACCESS, jnp.int32)])
+        if has_chain:
+            chain_live = jnp.concatenate(
+                [chain_live, jnp.zeros((pad,), jnp.int32)])
     bp = b + pad
     qvals_e = qvals if v else jnp.zeros((bp, 1), jnp.int32)
 
@@ -259,14 +295,15 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, *, cfg: MSLRUConfig,
     )
     row_spec = pl.BlockSpec((bb, a, c), lambda i: (i, 0, 0))
     flat_spec = pl.BlockSpec((bb,), lambda i: (i,))
+    extra = ([ops] if has_ops else []) + ([chain_live] if has_chain else [])
     out = pl.pallas_call(
-        functools.partial(_kernel, cfg, has_ops),
+        functools.partial(_kernel, cfg, has_ops, has_chain),
         grid=grid,
         in_specs=[
             row_spec,
             pl.BlockSpec((bb, kp), lambda i: (i, 0)),
             pl.BlockSpec((bb, ve), lambda i: (i, 0)),
-        ] + ([flat_spec] if has_ops else []),
+        ] + [flat_spec] * len(extra),
         out_specs=[
             row_spec,
             flat_spec,
@@ -276,17 +313,24 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, *, cfg: MSLRUConfig,
         ],
         out_shape=out_shapes,
         interpret=interpret,
-    )(rows, qkeys, qvals_e, *((ops,) if has_ops else ()))
+    )(rows, qkeys, qvals_e, *extra)
     rows_o, hit_o, pos_o, val_o, ev_o = (o[:b] for o in out)
     return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
 
 
-def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, nrounds_ref, krows_ref,
-                    qkey_ref, qval_ref, *refs):
+def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool,
+                    nrounds_ref, krows_ref, qkey_ref, qval_ref, *refs):
+    chain_live = None
     if has_ops:
-        (ops_ref, sid_ref, lrank_ref, served_ref,
-         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
-         carry_row_ref, carry_sid_ref) = refs
+        if has_chain:
+            (ops_ref, live_ref, sid_ref, lrank_ref, served_ref,
+             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+             carry_row_ref, carry_sid_ref) = refs
+            chain_live = live_ref[...]        # (BB,) sorted chain exec mask
+        else:
+            (ops_ref, sid_ref, lrank_ref, served_ref,
+             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+             carry_row_ref, carry_sid_ref) = refs
         ops = ops_ref[...]                    # (BB,) sorted opcodes
     else:  # ACCESS-only specialization: no opcode operand, no op selects
         (sid_ref, lrank_ref, served_ref,
@@ -318,7 +362,7 @@ def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, nrounds_ref, krows_ref,
     bb = rows.shape[0]
     n_rounds = nrounds_ref[pid]               # scalar-prefetched trip count
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served),
+        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served, chain_live),
         _chain_state0(cfg, rows))
 
     out_rows_ref[...] = after
@@ -332,8 +376,8 @@ def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, nrounds_ref, krows_ref,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
 def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
-                            nrounds, *, cfg: MSLRUConfig, block_b: int = 2048,
-                            interpret: bool = True):
+                            nrounds, chain_live=None, *, cfg: MSLRUConfig,
+                            block_b: int = 2048, interpret: bool = True):
     """Conflict-aware single-pass mixed-op batch over *sorted-by-set-id* queries.
 
     rows (B, A, C) int32 — set rows gathered once (only the entry at each
@@ -344,7 +388,10 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
     lrank (B,) rank of
     each query within its block-local duplicate chain; served (B,) int32
     mask (0 ⇒ the transition is skipped, identity on the chain); nrounds
-    (ceil(B/block_b),) int32 per-block chain depth (scalar-prefetched).
+    (ceil(B/block_b),) int32 per-block chain depth (scalar-prefetched);
+    chain_live (B,) optional int32 execute mask for CHAIN_GET/CHAIN_PUT
+    rows, sorted alongside the queries (the fused serving tick — computed
+    by the prologue's segmented longest-prefix scan; requires ``ops``).
 
     B must already be a multiple of block_b (the one-pass prologue pads with
     unserved sentinel queries).  Returns (rows_after, hit, pos, value, ev)
@@ -355,12 +402,16 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
     kp, v = cfg.key_planes, cfg.value_planes
     ve = max(v, 1)
     has_ops = ops is not None
+    has_chain = chain_live is not None
+    assert not (has_chain and not has_ops), "chain_live requires ops"
     bb = min(block_b, b)
     assert b % bb == 0, "one-pass kernel expects pre-padded batch"
     qvals_e = qvals if v else jnp.zeros((b, 1), jnp.int32)
 
     row_spec = pl.BlockSpec((bb, a, c), lambda i, nr: (i, 0, 0))
     flat_spec = pl.BlockSpec((bb,), lambda i, nr: (i,))
+    extra = (((ops,) if has_ops else ())
+             + ((chain_live,) if has_chain else ()))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b // bb,),
@@ -368,7 +419,7 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
             row_spec,
             pl.BlockSpec((bb, kp), lambda i, nr: (i, 0)),
             pl.BlockSpec((bb, ve), lambda i, nr: (i, 0)),
-        ] + [flat_spec] * (4 if has_ops else 3),
+        ] + [flat_spec] * (3 + len(extra)),
         out_specs=[
             row_spec,
             flat_spec,
@@ -389,12 +440,11 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
         jax.ShapeDtypeStruct((b, c), jnp.int32),
     )
     out = pl.pallas_call(
-        functools.partial(_onepass_kernel, cfg, has_ops),
+        functools.partial(_onepass_kernel, cfg, has_ops, has_chain),
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(nrounds, rows, qkeys, qvals_e,
-      *((ops,) if has_ops else ()), sids, lrank, served)
+    )(nrounds, rows, qkeys, qvals_e, *extra, sids, lrank, served)
     rows_o, hit_o, pos_o, val_o, ev_o = out
     return rows_o, hit_o, pos_o, val_o[:, :v], ev_o
 

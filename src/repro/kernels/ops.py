@@ -10,7 +10,11 @@ per distinct set; duplicate-chain members read the dummy row), the chain is
 resolved on-chip (Pallas kernel, or an identical jnp loop when
 ``use_kernel=False``), and one scatter epilogue commits each chain's tail
 row.  The optional ``ops`` vector rides the same sort, so one pass may mix
-LOOKUP/GET/ACCESS/DELETE freely (opcode table in core/engine.py).
+LOOKUP/GET/ACCESS/DELETE freely, plus the chain-segmented
+CHAIN_GET/CHAIN_PUT ops of the fused serving tick — their per-row execute
+mask (``chain_live``, the device-side segmented longest-prefix scan
+computed by ``engine.chain_live_mask``) is one more sorted kernel operand
+(opcode table in core/engine.py).
 Contract: bit-exact with ``engine.batched_rounds_update`` — same
 (table, AccessResult, served) for any (valid, max_rounds, ops) — while
 touching HBM exactly twice per batch instead of twice per conflict round.
@@ -55,15 +59,16 @@ def _on_cpu() -> bool:
 
 
 def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, ops=None,
-               use_kernel: bool = True, block_b: int = 2048,
+               chain_live=None, use_kernel: bool = True, block_b: int = 2048,
                interpret: bool | None = None):
     """Mixed-op transition on pre-gathered rows; kernel or oracle backend."""
     if not use_kernel:
-        return msl_access_ref(rows, qkeys, qvals, cfg, ops)
+        return msl_access_ref(rows, qkeys, qvals, cfg, ops, chain_live)
     if interpret is None:
         interpret = _on_cpu()
     return msl_access_kernel_call(
-        rows, qkeys, qvals, ops, cfg=cfg, block_b=block_b, interpret=interpret)
+        rows, qkeys, qvals, ops, chain_live, cfg=cfg, block_b=block_b,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -71,17 +76,18 @@ def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, ops=None,
 # ---------------------------------------------------------------------------
 
 def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, ops, lrank, served,
-                       n_rounds):
+                       n_rounds, chain_live=None):
     """jnp mirror of the one-pass kernel: the same ``_chain_body`` loop, run
     in XLA over the whole sorted batch (no blocks, so no carry needed).
 
     rows (B, A, C) sorted-by-set gathered rows; ops (B,) sorted opcodes;
     lrank (B,) chain rank; served (B,) bool; n_rounds: dynamic trip count
-    (max chain length).  Returns (rows_after, hit_i32, pos, value, ev) like
-    the kernel.
+    (max chain length); chain_live (B,) optional sorted execute mask for
+    the CHAIN_GET/CHAIN_PUT rows.  Returns (rows_after, hit_i32, pos,
+    value, ev) like the kernel.
     """
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served),
+        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served, chain_live),
         _chain_state0(cfg, rows))
     return after, h, po, va[:, : cfg.value_planes], ev
 
@@ -89,12 +95,15 @@ def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, ops, lrank, served,
 def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                    max_rounds: int | None = None, use_kernel: bool = True,
                    block_b: int = 2048, interpret: bool | None = None,
-                   ops=None):
+                   ops=None, chain_live=None):
     """Single-pass exact multi-query update (one HBM gather + one scatter).
 
     Same contract as ``engine.batched_rounds_update``: table (S, A, C);
     gsid (B,) set id per query (``valid`` False entries are ignored);
     ``ops`` (B,) optional per-query opcodes (None = all OP_ACCESS);
+    ``chain_live`` (B,) optional execute mask for CHAIN_GET/CHAIN_PUT rows
+    (the fused serving tick — computed in batch order by
+    ``engine.chain_live_mask`` and sorted here alongside the queries);
     returns (table, AccessResult, served).  Bit-exact w.r.t. processing the
     valid queries sequentially in batch order; ``max_rounds`` drops queries
     whose within-set rank exceeds the cap (res.hit=False, served=False),
@@ -107,6 +116,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     kp, v = cfg.key_planes, cfg.value_planes
     if ops is not None:  # None stays None: ACCESS-only specialization
         ops = jnp.asarray(ops, jnp.int32)
+    if chain_live is not None:
+        chain_live = jnp.asarray(chain_live, jnp.int32)
 
     # --- prologue: pad, sort by set id, derive duplicate-chain metadata ---
     bb = min(block_b, b) if use_kernel else b
@@ -119,6 +130,9 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         qvals = jnp.concatenate([qvals, jnp.zeros((pad, v), jnp.int32)])
         if ops is not None:
             ops = jnp.concatenate([ops, jnp.zeros((pad,), jnp.int32)])
+        if chain_live is not None:
+            chain_live = jnp.concatenate(
+                [chain_live, jnp.zeros((pad,), jnp.int32)])
 
     i = jnp.arange(bp, dtype=jnp.int32)
     sid_key = jnp.where(valid, gsid, s).astype(jnp.int32)  # invalid -> dummy
@@ -128,6 +142,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     sqk = qkeys[order]
     sqv = qvals[order]
     sops = None if ops is None else ops[order]
+    slive = None if chain_live is None else chain_live[order]
 
     firsts, offset = sorted_group_ranks(ssid)   # chain heads + chain ranks
     n_valid_rounds = jnp.max(jnp.where(svalid, offset, -1)) + 1
@@ -150,11 +165,12 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         nrounds_blocks = lrank.reshape(bp // bb, bb).max(axis=1).astype(jnp.int32) + 1
         rows_after, hit, pos, val, ev = msl_onepass_kernel_call(
             rows_in, sqk, sqv, sops, ssid, lrank.astype(jnp.int32),
-            served_s.astype(jnp.int32), nrounds_blocks,
+            served_s.astype(jnp.int32), nrounds_blocks, slive,
             cfg=cfg, block_b=bb, interpret=interpret)
     else:
         rows_after, hit, pos, val, ev = _chain_resolve_xla(
-            cfg, rows_in, sqk, sqv, sops, lrank, served_s, n_valid_rounds)
+            cfg, rows_in, sqk, sqv, sops, lrank, served_s, n_valid_rounds,
+            slive)
 
     # --- one scatter: each chain's tail commits its set's final row -------
     lasts = jnp.concatenate([ssid[:-1] != ssid[1:], jnp.ones((1,), bool)])
@@ -188,7 +204,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
 def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                          max_rounds: int | None = None, use_kernel: bool = True,
                          block_b: int = 2048, interpret: bool | None = None,
-                         ops=None):
+                         ops=None, chain_live=None):
     """``engine.batched_rounds_update`` with ``msl_access`` as the row op.
 
     Re-gathers/scatters all B rows from HBM once per conflict round — the
@@ -197,10 +213,11 @@ def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     row scatter) is the one in core/engine.py — only the row transition
     differs, so the two rounds engines cannot drift.
     """
-    def row_op(rows, qk, qv, row_ops):
+    def row_op(rows, qk, qv, row_ops, live):
+        live = None if live is None else jnp.asarray(live, jnp.int32)
         new_rows, hit, pos, val, ev = msl_access(
-            rows, qk, qv, cfg=cfg, ops=row_ops, use_kernel=use_kernel,
-            block_b=block_b, interpret=interpret)
+            rows, qk, qv, cfg=cfg, ops=row_ops, chain_live=live,
+            use_kernel=use_kernel, block_b=block_b, interpret=interpret)
         res = AccessResult(
             hit=hit.astype(bool), value=val, pos=pos,
             evicted_key=ev[:, : cfg.key_planes],
@@ -210,7 +227,8 @@ def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         return new_rows, res
 
     return batched_rounds_update(cfg, table, gsid, valid, qkeys, qvals,
-                                 max_rounds, row_op=row_op, ops=ops)
+                                 max_rounds, row_op=row_op, ops=ops,
+                                 chain_live=chain_live)
 
 
 def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
@@ -240,9 +258,26 @@ def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
             use_kernel, block_b, interpret, ops=ops)
         return table, res
 
-    def run(table, qkeys, qvals, ops=None):
+    @jax.jit
+    def run_chain(table, qkeys, qvals, ops, chain_ids):
+        from repro.core.engine import chain_live_mask
+
+        sids = set_index_for(cfg, qkeys)
+        valid = jnp.ones(sids.shape, bool)
+        live = chain_live_mask(cfg, table, qkeys, ops, chain_ids)
+        table, res, _served = kernel_rounds_update(
+            cfg, table, sids, valid, qkeys, qvals, max_rounds,
+            use_kernel, block_b, interpret, ops=ops,
+            chain_live=live.astype(jnp.int32))
+        return table, res
+
+    def run(table, qkeys, qvals, ops=None, chain_ids=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
+        if chain_ids is not None:
+            assert ops is not None, "chain_ids requires an ops vector"
+            return run_chain(table, qkeys, qvals, ops,
+                             jnp.asarray(chain_ids, jnp.int32))
         return run_ops(table, qkeys, qvals, ops)
 
     return run

@@ -16,9 +16,11 @@ __all__ = ["msl_access_ref"]
 
 
 def msl_access_ref(rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
-                   cfg: MSLRUConfig, ops: jnp.ndarray | None = None):
+                   cfg: MSLRUConfig, ops: jnp.ndarray | None = None,
+                   chain_live: jnp.ndarray | None = None):
     """rows (B, A, C) int32, qkeys (B, KP) int32, qvals (B, V) int32,
-    ops (B,) optional int32 opcodes (None = all OP_ACCESS).
+    ops (B,) optional int32 opcodes (None = all OP_ACCESS), chain_live (B,)
+    optional execute mask for CHAIN_GET/CHAIN_PUT rows.
 
     Returns (new_rows (B,A,C), hit (B,) int32, pos (B,) int32,
              value (B,V) int32, evicted (B,C) int32) — evicted packs
@@ -28,7 +30,8 @@ def msl_access_ref(rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
     if ops is None:
         new_rows, res = row_access(cfg, rows, qkeys, qvals)
     else:
-        new_rows, res = row_apply(cfg, rows, qkeys, qvals, ops)
+        new_rows, res = row_apply(cfg, rows, qkeys, qvals, ops,
+                                  chain_live=chain_live)
     evicted = jnp.concatenate([res.evicted_key, res.evicted_val], axis=-1)
     return (new_rows, res.hit.astype(jnp.int32), res.pos,
             res.value, evicted)

@@ -119,6 +119,58 @@ def chunked_attention(q, k, v, *, causal: bool = True, window=None,
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, Dh)
 
 
+def masked_batch_attention(q, k, v, *, q_pos, k_pos, k_valid, window=None,
+                           softcap: float = 0.0, chunk: int = 512):
+    """``chunked_attention`` with per-ROW positions and key validity.
+
+    The bucket-padded batched continuation prefill puts requests with
+    *different* prefix lengths in one launch: row i's KV prefix occupies
+    slots [0, plen_i) of a right-padded prefix block, so neither a scalar
+    ``q_offset`` nor a shared (chunk, Skv) mask can express the causal
+    structure.  q (B,Sq,H,Dh); k,v (B,Skv,KVH,Dh); q_pos (B,Sq) and
+    k_pos (B,Skv) absolute token positions; k_valid (B,Skv) masks padding
+    slots.  Query-chunked scan with the same score/softmax math as
+    ``chunked_attention`` (invalid keys get NEG_INF before the f32
+    softmax), so a padded batched launch reproduces the per-request
+    launches' numerics up to reduction-shape rounding.
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = dh ** -0.5
+    nchunks = (sq + chunk - 1) // chunk
+    pad = nchunks * chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+
+    qf = q * jnp.asarray(scale, q.dtype)
+    qc = jnp.moveaxis(qf.reshape(b, nchunks, chunk, h, dh), 1, 0)
+    qpc = jnp.moveaxis(q_pos.reshape(b, nchunks, chunk), 1, 0)
+
+    def body(_, xs):
+        qj, qp = xs                                 # qj (B, chunk, H, Dh)
+        qg = qj.reshape(b, chunk, kvh, rep, dh)
+        s_ = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+        s_ = s_.reshape(b, h, chunk, skv)
+        if softcap > 0.0:
+            s_ = jnp.tanh(s_ / softcap) * softcap
+        mask = k_valid[:, None, :] & (qp[:, :, None] >= k_pos[:, None, :])
+        if window is not None:
+            w = jnp.asarray(window)
+            mask &= jnp.where(w > 0, qp[:, :, None] - k_pos[:, None, :] < w,
+                              True)
+        s_ = jnp.where(mask[:, None], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        pg = p.astype(v.dtype).reshape(b, kvh, rep, chunk, skv)
+        o = jnp.einsum("bgrqk,bkgd->bgrqd", pg, v)
+        return None, o.reshape(b, h, chunk, dh)
+
+    _, os_ = jax.lax.scan(jax.checkpoint(body), None, (qc, qpc))
+    out = jnp.moveaxis(os_, 0, 2).reshape(b, h, nchunks * chunk, dh)[:, :, :sq]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, Dh)
+
+
 def attn_apply(params, x, positions, *, n_heads, n_kv_heads, d_head,
                rope_kind="rope", theta=1e4, causal=True, window=None,
                softcap=0.0, chunk=512):

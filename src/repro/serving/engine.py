@@ -7,7 +7,7 @@ Flow per request (attention-family archs):
      slot's contiguous KV cache (a device-side copy — skips that many
      tokens of prefill compute);
   3. run *continuation prefill* on the remaining tokens (chunked attention
-     with q_offset, RoPE at absolute positions — cached pages are position-
+     with absolute positions, RoPE applied — cached pages are position-
      consistent by the prefix property);
   4. write the new chunks' KV into freshly allocated pages and insert them
      into the prefix cache (evicted pages recycle to the pool);
@@ -17,11 +17,36 @@ Flow per request (attention-family archs):
 SSM/hybrid archs skip prefix reuse (their state is not prefix-separable);
 the engine still serves them via model.prefill + decode_step.
 
-Admission is *batched per tick*: all requests claiming free slots are
-admitted through one op-coded prefix-cache pipeline — one LOOKUP batch over
-every request's chunk chain, one GET batch promoting the used chunks, one
-ACCESS batch inserting the new ones — so a tick issues at most 3
-cache-engine device calls no matter how deep the queue is.
+Fused one-call admission (default)
+----------------------------------
+``_admit_fused`` runs a whole tick's admissions through ONE op-coded
+cache-engine call (``PrefixCache.serve_chains``): the device computes every
+chain's longest-hit prefix (segmented cumulative AND), promotes exactly the
+hit chunks, and conditionally inserts the rest with pre-staged page values
+— no host round-trip between lookup and insert.  On top of the single
+call:
+
+* **Intra-tick prefix dedupe** — requests admitted in the same tick that
+  share chunk hashes stage only ONE page per distinct chunk: the first
+  chain (the owner) prefills and publishes it; the others gather the
+  owner's published pages instead of recomputing (their duplicate inserts
+  absorb on device exactly like the split path's).
+* **Bucket-padded batched prefill** — the tick's continuation segments run
+  in one jit'd launch per dependency wave (typically one): per-request
+  prefix lengths are dynamic operands, token/prefix lengths pad to pow2
+  buckets, so compiles stay O(log) like the cache-call padding.  A request
+  that gathers pages another request publishes this tick runs in a later
+  wave (its input depends on the owner's prefill output).
+* **Reserve-then-commit paging** — pages are reserved for every chunk that
+  might insert before the call, and reconciled after: aborts for chunks
+  that turned out cached or absorbed, commits for real inserts.  Evicted
+  pages release *first*, so a near-full pool can re-fund this same tick's
+  remaining inserts from its own evictions (one extra ACCESS call, only
+  under pressure).
+
+``admit_batching=False`` degrades to one-at-a-time split admission (the
+equivalence baseline); ``admit_mode="split"`` keeps PR-2's batched
+3-call path (one LOOKUP + one GET + one ACCESS per tick).
 """
 
 from __future__ import annotations
@@ -113,13 +138,104 @@ def continuation_prefill(cfg: ArchConfig, params, tokens, kv_prefix, prefix_len)
     return logits[0], kv[0], kv[1]
 
 
+def batched_continuation_prefill(cfg: ArchConfig, params, tokens, tok_lens,
+                                 kv_prefix, prefix_lens):
+    """One launch prefilling B continuation segments with per-row prefixes.
+
+    tokens (B, Sb) int32 right-padded; tok_lens (B,) real segment lengths;
+    kv_prefix: (k, v) each (L, B, Pb, KVH, Dh) right-padded per row, or
+    None when no request has a prefix (Pb == 0); prefix_lens (B,) int32.
+    Returns (logits (B, V) at each row's LAST REAL token, new_k, new_v
+    (L, B, Sb, KVH, Dh) — padded tail positions carry garbage; callers
+    slice to ``tok_lens``).
+
+    Unlike ``continuation_prefill`` the prefix length is a *dynamic*
+    operand (positions and masks are per-row arrays), so one compiled
+    (B, Pb, Sb) bucket serves every mix of prefix lengths — the tick-level
+    analogue of the prefix cache's pow2 batch padding.
+    """
+    from repro.models.model import _aux0, _embed, _final, _logits_fn
+
+    b, s = tokens.shape
+    h = _embed(cfg, params, tokens)
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.thetas(), jnp.float32)
+    prefix_lens = jnp.asarray(prefix_lens, jnp.int32)
+    positions = prefix_lens[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    kp_all = vp_all = None
+    if kv_prefix is not None:
+        kp_all, vp_all = kv_prefix
+    pb = 0 if kp_all is None else kp_all.shape[2]
+    pidx = jnp.arange(pb, dtype=jnp.int32)
+
+    def body(carry, xs):
+        hh, aux = carry
+        if pb:
+            p_l, w_l, t_l, kp_l, vp_l = xs
+        else:
+            p_l, w_l, t_l = xs
+            kp_l = vp_l = None
+        x = tfm._norm(cfg, p_l["ln1"], hh)
+        q, k, v = attn_mod._project_qkv(
+            p_l["attn"], x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            positions, cfg.rope_kind, t_l)
+        if kp_l is not None:
+            k_full = jnp.concatenate([kp_l, k], axis=1)
+            v_full = jnp.concatenate([vp_l, v], axis=1)
+            k_pos = jnp.concatenate(
+                [jnp.broadcast_to(pidx[None], (b, pb)), positions], axis=1)
+            k_valid = jnp.concatenate(
+                [pidx[None] < prefix_lens[:, None], jnp.ones((b, s), bool)],
+                axis=1)
+        else:
+            k_full, v_full = k, v
+            k_pos = positions
+            k_valid = jnp.ones((b, s), bool)
+        ctx = attn_mod.masked_batch_attention(
+            q, k_full, v_full, q_pos=positions, k_pos=k_pos, k_valid=k_valid,
+            window=w_l, softcap=cfg.softcap, chunk=cfg.attn_chunk)
+        a_out = jnp.einsum("bsh,hd->bsd",
+                           ctx.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                           p_l["attn"]["wo"])
+        if cfg.parallel_block:
+            f_out, aux = tfm._ffn_apply(cfg, p_l, x, aux)
+            hh = hh + a_out + f_out
+        else:
+            hh = hh + a_out
+            if cfg.ffn != "none":
+                f_out, aux = tfm._ffn_apply(
+                    cfg, p_l, tfm._norm(cfg, p_l["ln2"], hh), aux)
+                hh = hh + f_out
+        return (hh, aux), (k, v)
+
+    if pb:
+        xs = (params["blocks"], windows, thetas, kp_all, vp_all)
+        (h, _), kv = jax.lax.scan(body, (h, _aux0()), xs)
+    else:
+        def body0(carry, xs0):
+            return body(carry, xs0)
+        (h, _), kv = jax.lax.scan(body0, (h, _aux0()),
+                                  (params["blocks"], windows, thetas))
+    h = _final(cfg, params, h)
+    last = jnp.clip(tok_lens - 1, 0, s - 1).astype(jnp.int32)
+    h_last = jnp.take_along_axis(
+        h, jnp.broadcast_to(last[:, None, None], (b, 1, h.shape[-1])),
+        axis=1)[:, 0]
+    logits = _logits_fn(cfg, params)(h_last)
+    return logits, kv[0], kv[1]
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 0 else 0
+
+
 class ServeEngine:
     """Host-side continuous batching driver around the jit'd decode step."""
 
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, prefix_cache: PrefixCache | None = None,
                  pool: PagedKVPool | None = None, eos_token: int = -1,
-                 admit_batching: bool = True):
+                 admit_batching: bool = True, admit_mode: str | None = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -143,23 +259,37 @@ class ServeEngine:
         self._prefill0 = jax.jit(
             lambda p, t: continuation_prefill(self.cfg, p, t, None, 0)
         ) if self.use_prefix else None
+        self._prefill_bp = jax.jit(
+            lambda p, toks, lens, pk, pv, plens: batched_continuation_prefill(
+                self.cfg, p, toks, lens, (pk, pv), plens)
+        ) if self.use_prefix else None
+        self._prefill_b0 = jax.jit(
+            lambda p, toks, lens, plens: batched_continuation_prefill(
+                self.cfg, p, toks, lens, None, plens)
+        ) if self.use_prefix else None
         self._prefill_plain = jax.jit(model.prefill)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.admit_batching = admit_batching
+        # "fused" (default): one cache call + batched prefill per tick;
+        # "split": PR-2's LOOKUP+GET+ACCESS path (equivalence baseline).
+        self.admit_mode = admit_mode or ("fused" if admit_batching
+                                         else "split")
+        assert self.admit_mode in ("fused", "split"), self.admit_mode
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit_batch(self, reqs: list[Request]):
-        """Admit ``reqs`` with at most 3 cache-engine device calls total:
+    def _admit_split(self, reqs: list[Request]):
+        """PR-2 batched admission (≤ 3 cache-engine device calls total):
         one LOOKUP batch + one GET batch (``lookup_chains``) over every
         request's chunk chain, per-request prefill, then one ACCESS batch
         (``insert_chains``) publishing all new chunks.  Note: evicted pages
         recycle to the pool only after *all* admissions of the tick, so a
         near-full pool may defer a page reuse to the next tick (one-at-a-
-        time admission could reuse it immediately)."""
+        time admission could reuse it immediately; the fused path's
+        reserve-then-commit protocol recycles same-tick)."""
         ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
         pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct]
         pref_ids = {id(r) for r in pref}
@@ -226,13 +356,231 @@ class ServeEngine:
             for pg in self.prefix_cache.insert_chains(ins_chains, ins_pages):
                 self.pool.release(pg)
 
-        for req in plain:
+        self._admit_plain(plain)
+
+    def _admit_plain(self, reqs: list[Request]):
+        for req in reqs:
             batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
             logits, pc = self._prefill_plain(self.params, batch)
             self._install_prefill(req.slot, pc)
             req.prefill_computed = len(req.prompt)
             self.cur_len[req.slot] = len(req.prompt)
             req.out_tokens.append(int(jnp.argmax(logits[0])))
+            self.active[req.rid] = req
+
+    # -- fused one-call admission -------------------------------------------
+    def _admit_fused(self, reqs: list[Request]):
+        """Admit a whole tick through ONE ``serve_chains`` call plus one
+        batched prefill launch per dependency wave (see module docstring).
+
+        Page protocol per staged chunk, after the call:
+          * inside the hit prefix      -> ``abort`` (chunk was cached)
+          * insert executed, miss      -> ``commit`` + write content
+          * insert absorbed, stored
+            value != our page          -> ``abort`` (duplicate; recycle)
+          * insert absorbed, stored
+            value == our page          -> ``commit`` (a same-tick borrower
+            carrying our page id won a cross-shard race; the table holds
+            OUR page, so it must live and we write its content)
+        Evicted pages release before the reconciliation, so the
+        pressure-retry pass can re-fund unfunded inserts from this tick's
+        own evictions (one extra ACCESS call, only when it fires).
+        """
+        ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
+        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct]
+        pref_ids = {id(r) for r in pref}
+        plain = [r for r in reqs if id(r) not in pref_ids]
+
+        chains = [chunk_chain_hashes(r.prompt, ct) for r in pref]
+        # --- stage pages: intra-tick dedupe + reserve --------------------
+        owner: dict[int, tuple[int, int, bool]] = {}  # hash -> (c, page, ok)
+        staged: list[list[int]] = []
+        own: list[list[bool]] = []
+        for c, chain in enumerate(chains):
+            vals: list[int] = []
+            owns: list[bool] = []
+            for h in chain:
+                if h in owner:
+                    oc, pg, funded = owner[h]
+                    if not funded:
+                        break              # keep the funded run a prefix
+                    vals.append(pg)
+                    owns.append(False)     # borrowed: the owner's page
+                else:
+                    pg = self.pool.reserve()
+                    if pg is None:
+                        owner[h] = (c, -1, False)
+                        break
+                    owner[h] = (c, pg, True)
+                    vals.append(pg)
+                    owns.append(True)
+            staged.append(vals)
+            own.append(owns)
+
+        evicted_set: set[int] = set()
+        if pref:
+            results, evicted = self.prefix_cache.serve_chains(chains, staged)
+            evicted_set = set(evicted)
+            for pg in evicted:
+                self.pool.release(pg)
+        else:
+            results = []
+
+        # --- reconcile reservations --------------------------------------
+        published: dict[int, tuple[int, int]] = {}   # hash -> (owner c, page)
+        to_write: list[list[tuple[int, int]]] = [[] for _ in pref]
+        for c, chain in enumerate(chains):
+            r = results[c]
+            for t, (pg, is_own) in enumerate(zip(staged[c], own[c])):
+                if not is_own:
+                    continue               # the owner reconciles this page
+                if t < r.hitlen:
+                    self.pool.abort(pg)    # chunk was already cached
+                    continue
+                absorbed, stored = r.puts[t]
+                if absorbed and stored != pg:
+                    self.pool.abort(pg)    # resident past the miss; recycle
+                elif pg in evicted_set:
+                    # inserted, then evicted by a LATER insert of this same
+                    # call: the release above already freed the page — only
+                    # clear the reservation, and neither write nor publish
+                    # it (committing would alias it with its next owner)
+                    self.pool.commit(pg)
+                else:
+                    self.pool.commit(pg)
+                    to_write[c].append((t, pg))
+                    published[chain[t]] = (c, pg)
+
+        # --- pressure retry: fund leftover inserts from recycled pages ----
+        retry: list[tuple[int, int, list[int], list[int]]] = []
+        for c, chain in enumerate(chains):
+            start = max(results[c].hitlen, len(staged[c]))
+            sub_h: list[int] = []
+            sub_p: list[int] = []
+            for t in range(start, len(chain)):
+                if owner.get(chain[t], (c, -1, False))[0] != c:
+                    break                  # another chain owns this chunk
+                pg = self.pool.alloc()
+                if pg is None:
+                    break
+                sub_h.append(chain[t])
+                sub_p.append(pg)
+            if sub_h:
+                retry.append((c, start, sub_h, sub_p))
+        if retry:
+            recycled = set(self.prefix_cache.insert_chains(
+                [x[2] for x in retry], [x[3] for x in retry]))
+            for pg in recycled:
+                self.pool.release(pg)
+            # a retry insert may have evicted a chunk the MAIN call just
+            # published: its page is free again — drop it from the write
+            # and dedupe plans so nothing aliases its next owner
+            published = {h: cp for h, cp in published.items()
+                         if cp[1] not in recycled}
+            to_write = [[(t, pg) for (t, pg) in lst if pg not in recycled]
+                        for lst in to_write]
+            for c, start, sub_h, sub_p in retry:
+                for j, (h, pg) in enumerate(zip(sub_h, sub_p)):
+                    if pg not in recycled:  # absorbed retries were recycled
+                        to_write[c].append((start + j, pg))
+                        published[h] = (c, pg)
+
+        # --- prefill jobs: effective prefix + dependency waves ------------
+        jobs = []
+        wave_of: dict[int, int] = {}
+        for c, (req, chain) in enumerate(zip(pref, chains)):
+            r = results[c]
+            pages = list(r.pages)
+            if r.hitlen * ct >= len(req.prompt):
+                # fully-cached chunk-aligned prompt: always compute at
+                # least the last chunk
+                pages = pages[:-1]
+            wave = 0
+            if len(pages) == r.hitlen:     # untrimmed: try dedupe extension
+                t = r.hitlen
+                while t < len(chain) and (t + 1) * ct < len(req.prompt):
+                    pub = published.get(chain[t])
+                    if pub is None or pub[0] == c:
+                        break
+                    pages.append(pub[1])   # gather the owner's page
+                    wave = max(wave, wave_of.get(pub[0], 0) + 1)
+                    t += 1
+            wave_of[c] = wave
+            jobs.append({"req": req, "c": c, "pages": pages, "wave": wave})
+
+        for w in range(max((j["wave"] for j in jobs), default=-1) + 1):
+            self._prefill_wave([j for j in jobs if j["wave"] == w],
+                               to_write, chains, ct)
+
+        self._admit_plain(plain)
+
+    def _prefill_wave(self, jobs, to_write, chains, ct):
+        """One bucket-padded batched prefill launch for ``jobs``."""
+        if not jobs:
+            return
+        L = self.cfg.n_layers
+        kvh, dh = self.cfg.n_kv_heads, self.cfg.head_dim
+        plens, rests, gathered = [], [], []
+        for j in jobs:
+            req, pages = j["req"], j["pages"]
+            plen = len(pages) * ct
+            plens.append(plen)
+            rests.append(len(req.prompt) - plen)
+            for pg in pages:
+                self.pool.pin(pg)
+                req.pinned_pages.append(pg)
+            gathered.append(self.pool.gather_pages(np.asarray(pages))
+                            if pages else None)
+        bp = _pow2(len(jobs))
+        sb = _pow2(max(rests))
+        pb = _pow2(max(plens)) if any(plens) else 0
+        toks = np.zeros((bp, sb), np.int32)
+        lens = np.ones(bp, np.int32)
+        pl = np.zeros(bp, np.int32)
+        for i, j in enumerate(jobs):
+            toks[i, : rests[i]] = j["req"].prompt[plens[i]:]
+            lens[i] = rests[i]
+            pl[i] = plens[i]
+        if pb:
+            pk = jnp.zeros((L, bp, pb, kvh, dh), self.pool.k.dtype)
+            pv = jnp.zeros((L, bp, pb, kvh, dh), self.pool.v.dtype)
+            for i, g in enumerate(gathered):
+                if g is not None:
+                    pk = pk.at[:, i, : plens[i]].set(g[0])
+                    pv = pv.at[:, i, : plens[i]].set(g[1])
+            logits, nk, nv = self._prefill_bp(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                pk, pv, jnp.asarray(pl))
+        else:
+            logits, nk, nv = self._prefill_b0(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(pl))
+
+        for i, j in enumerate(jobs):
+            req, c = j["req"], j["c"]
+            slot = req.slot
+            plen, rest = plens[i], rests[i]
+            req.prefill_skipped = plen
+            req.prefill_computed = rest
+            if gathered[i] is not None:
+                self.cache["k"] = self.cache["k"].at[:, slot, :plen].set(
+                    gathered[i][0])
+                self.cache["v"] = self.cache["v"].at[:, slot, :plen].set(
+                    gathered[i][1])
+            self.cache["k"] = self.cache["k"].at[
+                :, slot, plen: plen + rest].set(nk[:, i, :rest])
+            self.cache["v"] = self.cache["v"].at[
+                :, slot, plen: plen + rest].set(nv[:, i, :rest])
+            writes = [(t, pg) for t, pg in to_write[c]]
+            if writes:
+                kc = jnp.stack([nk[:, i, t * ct - plen: (t + 1) * ct - plen]
+                                for t, _ in writes], axis=1)
+                vc = jnp.stack([nv[:, i, t * ct - plen: (t + 1) * ct - plen]
+                                for t, _ in writes], axis=1)
+                self.pool.write_pages(np.asarray([pg for _, pg in writes]),
+                                      kc, vc)
+            self.cur_len[slot] = len(req.prompt)
+            req.out_tokens.append(int(jnp.argmax(logits[i])))
             self.active[req.rid] = req
 
     def _install_prefill(self, slot, pc):
@@ -255,20 +603,23 @@ class ServeEngine:
         """One engine tick: admit all free slots, decode one token each.
 
         Admission is batched: every request admitted this tick goes through
-        one ``_admit_batch`` call (≤ 3 prefix-cache device calls per tick,
-        independent of queue depth).  ``admit_batching=False`` degrades to
-        one-at-a-time admission — the equivalence baseline."""
+        one fused call (``admit_mode="fused"``, default — ~1 cache-engine
+        call per tick) or the PR-2 3-call path (``admit_mode="split"``).
+        ``admit_batching=False`` degrades to one-at-a-time split admission
+        — the equivalence baseline."""
         admits = []
         while self.queue and self._free_slots:
             req = self.queue.pop(0)
             req.slot = self._free_slots.pop()
             admits.append(req)
         if admits:
-            if self.admit_batching:
-                self._admit_batch(admits)
-            else:
+            if not self.admit_batching:
                 for req in admits:
-                    self._admit_batch([req])
+                    self._admit_split([req])
+            elif self.admit_mode == "fused":
+                self._admit_fused(admits)
+            else:
+                self._admit_split(admits)
         if not self.active:
             return
         # decode uses a single cur_len: engine ticks groups of equal length;

@@ -32,6 +32,7 @@ class PagedKVPool:
         self._free = list(range(n_pages - 1, -1, -1))
         self.refcount = np.zeros(n_pages, np.int32)
         self._deferred_free: set = set()
+        self._reserved: set = set()
 
     # -- host bookkeeping ----------------------------------------------------
     def alloc(self) -> int | None:
@@ -40,6 +41,30 @@ class PagedKVPool:
         p = self._free.pop()
         self.refcount[p] = 1
         return p
+
+    # -- reserve-then-commit (batched admission under pool pressure) ---------
+    # A fused serving tick must stage page values for every chunk that
+    # *might* insert before the cache call reveals which chunks actually do.
+    # ``reserve`` takes a page tentatively; after the tick, exactly one of
+    # ``commit`` (the insert published it) or ``abort`` (the chunk hit /
+    # was absorbed — hand the page straight back) runs per reservation.
+    # Because evicted pages ``release`` *before* the abort/alloc fix-up, a
+    # near-full pool can recycle a tick's evictions for that same tick's
+    # later allocations.
+    def reserve(self) -> int | None:
+        p = self.alloc()
+        if p is not None:
+            self._reserved.add(p)
+        return p
+
+    def commit(self, page: int) -> None:
+        self._reserved.discard(page)
+
+    def abort(self, page: int) -> None:
+        assert page in self._reserved, f"abort of unreserved page {page}"
+        self._reserved.discard(page)
+        self.refcount[page] = 0
+        self._free.append(page)
 
     def pin(self, page: int) -> None:
         self.refcount[page] += 1

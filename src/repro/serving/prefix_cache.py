@@ -17,31 +17,42 @@ the PagedKVPool.  Properties inherited from the paper's algorithm:
 A cache hit for a chain of chunks lets prefill skip those tokens — the hit
 ratio converts directly into saved prefill FLOPs (measured in benchmarks).
 
-Batched serving path
---------------------
-The cache ops are *batched and op-coded*: ``lookup_chains`` probes every
-chunk of every queued request in ONE read-only LOOKUP batch, computes each
-request's longest-hit prefix host-side, and promotes exactly the used
-chunks in ONE GET batch; ``insert_chains`` publishes all new chunks in ONE
-ACCESS batch.  A serve-engine tick therefore costs at most 3 cache-engine
-device calls regardless of queue depth or chain length — versus the
-O(chunks × requests) B=1 round-trips of per-chunk probing.  Within one
-batch the LOOKUPs all observe the pre-tick table (LOOKUP/GET never change
-membership, so a request's hit prefix is unaffected by its batch
-neighbours' promotions); inserts land after all lookups, bit-exactly in
-request order.  ``device_calls`` counts engine invocations for benchmarks
-and the ≤3-calls-per-tick acceptance test.
+The one-call serving tick
+-------------------------
+``serve_chains`` performs a whole tick — every queued request's longest-hit
+prefix lookup, the hit-prefix promotions, AND the conditional inserts of
+the not-yet-cached chunks — in ONE op-coded engine call.  Each chain's
+chunks go in twice: once as OP_CHAIN_GET rows (the engine computes the
+longest-hit prefix on device with a segmented cumulative AND and
+downgrades everything past the first miss to a no-op) and once as
+OP_CHAIN_PUT rows carrying pre-staged page values (the engine executes
+exactly the rows past the hit prefix as inserts; a chunk that turns out
+resident absorbs as a duplicate hit so its staged page can be recycled).
+Mutations and stats are bit-identical to the split LOOKUP -> host scan ->
+GET -> ACCESS pipeline of ``lookup_chains``/``insert_chains`` (kept as the
+fallback/equivalence baseline), but a tick costs ~1 device call per batch
+of requests instead of 3 — no host round-trip sits between the probe and
+the promote/insert halves.  See the opcode table in core/engine.py for the
+chain-op contract.
+
+``backend`` swaps the local ``MultiStepLRUCache`` for any object with the
+same ``access``/``occupancy`` interface — e.g.
+``core.sharded.ShardedCacheClient``, which routes the same one-call tick
+through a set-sharded mesh engine (chain ids ride the all_to_all payload).
+``device_calls`` counts engine invocations — exactly one per ``_call``,
+on every path — for benchmarks and the calls-per-tick acceptance tests.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (MSLRUConfig, MultiStepLRUCache, OP_ACCESS, OP_DELETE,
-                        OP_GET, OP_LOOKUP)
+from repro.core import (MSLRUConfig, MultiStepLRUCache, OP_ACCESS,
+                        OP_CHAIN_GET, OP_CHAIN_PUT, OP_DELETE, OP_GET,
+                        OP_LOOKUP)
 from repro.core.policies import fmix32_py
 
-__all__ = ["PrefixCache", "chunk_chain_hashes"]
+__all__ = ["PrefixCache", "ChainServe", "chunk_chain_hashes"]
 
 _MASK31 = 0x7FFFFFFF
 
@@ -64,16 +75,37 @@ def chunk_chain_hashes(tokens: np.ndarray, chunk_tokens: int) -> list[int]:
     return out
 
 
+class ChainServe:
+    """Per-chain outcome of a fused tick: ``pages`` (the longest-hit
+    prefix's page values, promoted), ``hitlen``, and ``puts`` — one entry
+    per staged chunk: ``None`` if the row did not execute (inside the hit
+    prefix), else ``(absorbed, stored_value)`` where ``absorbed`` means the
+    insert hit an already-resident chunk and ``stored_value`` is the page
+    the cache actually holds for it."""
+
+    __slots__ = ("pages", "hitlen", "puts")
+
+    def __init__(self, pages, hitlen, puts):
+        self.pages = pages
+        self.hitlen = hitlen
+        self.puts = puts
+
+
 class PrefixCache:
     """Multi-step-LRU map: chain-hash -> KV page index (batched mixed ops)."""
 
     def __init__(self, num_sets: int = 1024, m: int = 2, p: int = 4,
                  chunk_tokens: int = 64, policy: str = "multistep",
-                 engine: str = "onepass", use_kernel: bool = False):
-        self.cfg = MSLRUConfig(num_sets=num_sets, m=m, p=p, value_planes=1,
-                               policy=policy)
-        self.cache = MultiStepLRUCache(self.cfg, engine=engine,
-                                       use_kernel=use_kernel)
+                 engine: str = "onepass", use_kernel: bool = False,
+                 backend=None):
+        if backend is None:
+            self.cfg = MSLRUConfig(num_sets=num_sets, m=m, p=p,
+                                   value_planes=1, policy=policy)
+            self.cache = MultiStepLRUCache(self.cfg, engine=engine,
+                                           use_kernel=use_kernel)
+        else:
+            self.cache = backend
+            self.cfg = backend.cfg
         self.chunk_tokens = chunk_tokens
         self.hits = 0
         self.misses = 0
@@ -81,8 +113,10 @@ class PrefixCache:
         self.device_calls = 0
 
     # -- batched engine access ----------------------------------------------
-    def _call(self, keys: list[int], op: int, vals: list[int] | None = None):
-        """One batched device call over ``keys`` with a uniform opcode.
+    def _call(self, keys: list[int], ops, vals: list[int] | None = None,
+              chain_ids: list[int] | None = None):
+        """ONE engine invocation over ``keys``; ``ops`` is a scalar opcode
+        or a per-row vector; ``chain_ids`` enables the fused chain ops.
 
         The batch is padded to the next power of two with OP_LOOKUP rows on
         key 0 (chunk hashes are odd, so key 0 is never resident, and LOOKUP
@@ -92,6 +126,10 @@ class PrefixCache:
         not the per-row opcode selects, are what dominates; that is also
         why this passes an explicit ops vector rather than the ACCESS-only
         ``ops=None`` specialization (padding requires mixed ops).
+
+        ``device_calls`` counts exactly one per invocation — never per row,
+        page, or recycled duplicate — so bench numbers are comparable
+        across engines and batching modes.
         """
         self.device_calls += 1
         n = len(keys)
@@ -101,22 +139,93 @@ class PrefixCache:
         v = np.zeros((bp, 1), np.int32)
         if vals is not None:
             v[:n, 0] = vals
-        ops = np.full(bp, OP_LOOKUP, np.int32)
-        ops[:n] = op
-        res = self.cache.access(k, v, ops=ops)
+        o = np.full(bp, OP_LOOKUP, np.int32)
+        o[:n] = ops
+        c = None
+        if chain_ids is not None:
+            c = np.zeros(bp, np.int32)
+            c[:n] = chain_ids
+        res = self.cache.access(k, v, ops=o, chain_ids=c)
         if bp == n:
             return res
-        return res._replace(**{f: getattr(res, f)[:n] for f in res._fields})
+        return res._replace(**{f: np.asarray(getattr(res, f))[:n]
+                               for f in res._fields})
+
+    # -- fused one-call tick -------------------------------------------------
+    def serve_chains(self, chains: list[list[int]],
+                     staged: list[list[int]]):
+        """One device call for a whole tick's chains (lookup + promote +
+        conditional insert).
+
+        ``staged[c]`` holds page values for a *prefix* of chain ``c``'s
+        chunks (the chunks the caller could fund; shorter lists simply
+        leave the tail unpublished, like an alloc failure in the split
+        path).  Returns ``(results, evicted)``: a ``ChainServe`` per chain
+        and the evicted page values to recycle.  Hit/miss/eviction stats
+        are identical to ``lookup_chains`` + ``insert_chains`` on the same
+        tick.
+        """
+        ks: list[int] = []
+        ops: list[int] = []
+        vals: list[int] = []
+        cids: list[int] = []
+        for c, chain in enumerate(chains):
+            for h in chain:
+                ks.append(h)
+                ops.append(OP_CHAIN_GET)
+                vals.append(0)
+                cids.append(c)
+        for c, chain in enumerate(chains):
+            for h, pg in zip(chain, staged[c]):
+                ks.append(h)
+                ops.append(OP_CHAIN_PUT)
+                vals.append(pg)
+                cids.append(c)
+        if not ks:
+            return [ChainServe([], 0, []) for _ in chains], []
+
+        out = self._call(ks, ops, vals=vals, chain_ids=cids)
+        hit = np.asarray(out.hit)
+        val = np.asarray(out.value)[:, 0]
+        ev_ok = np.asarray(out.evicted_valid)
+        ev_val = np.asarray(out.evicted_val)[:, 0]
+        evicted = [int(x) for x, ok in zip(ev_val, ev_ok) if bool(ok)]
+        self.evictions += len(evicted)
+
+        results: list[ChainServe] = []
+        i = 0
+        for chain in chains:
+            n = len(chain)
+            k = int(hit[i: i + n].sum())       # leading run by construction
+            pages = [int(x) for x in val[i: i + k]]
+            self.hits += k
+            if k < n:
+                self.misses += 1
+            results.append(ChainServe(pages, k, []))
+            i += n
+        for c, chain in enumerate(chains):
+            m = min(len(staged[c]), len(chain))
+            k = results[c].hitlen
+            puts = []
+            for t in range(m):
+                if t < k:
+                    puts.append(None)          # row did not execute
+                else:
+                    puts.append((bool(hit[i + t]), int(val[i + t])))
+            results[c].puts = puts
+            i += m
+        return results, evicted
 
     # -- chain ops (each ≤ the stated number of device calls) ----------------
     def lookup_chains(self, chains: list[list[int]]) -> list[list[int]]:
         """Pages for each chain's longest cached prefix; ≤ 2 device calls.
 
-        One LOOKUP batch over every chunk of every chain (read-only, so
-        chains cannot perturb each other's probe), host-side longest-prefix
-        scan, then one GET batch promoting exactly the hit-prefix chunks in
-        chain order (identical mutations and stats to probing the chains
-        one chunk at a time with get-until-miss).
+        The split baseline: one LOOKUP batch over every chunk of every
+        chain (read-only, so chains cannot perturb each other's probe),
+        host-side longest-prefix scan, then one GET batch promoting exactly
+        the hit-prefix chunks in chain order (identical mutations and stats
+        to probing the chains one chunk at a time with get-until-miss —
+        and to the fused ``serve_chains`` pass).
         """
         flat = [h for c in chains for h in c]
         if not flat:

@@ -23,7 +23,8 @@ except ImportError:  # the fixed-seed sweep below still runs
     HAVE_HYPOTHESIS = False
 
 from repro.core import (EMPTY_KEY, MSLRUConfig, MultiStepLRUCache, init_table,
-                        OP_ACCESS, OP_DELETE, OP_GET, OP_LOOKUP)
+                        OP_ACCESS, OP_CHAIN_GET, OP_CHAIN_PUT, OP_DELETE,
+                        OP_GET, OP_LOOKUP)
 from repro.core import policies
 from repro.core.engine import make_batched_engine, make_sequential_engine
 from repro.core.policies import MultiStepLRUOracle
@@ -44,6 +45,8 @@ def test_opcode_mirror_in_sync():
     """policies.py keeps jax-free literal mirrors of the engine opcodes."""
     assert (policies.OP_ACCESS, policies.OP_GET,
             policies.OP_DELETE, policies.OP_LOOKUP) == tuple(OPS)
+    assert (policies.OP_CHAIN_GET, policies.OP_CHAIN_PUT) == (OP_CHAIN_GET,
+                                                              OP_CHAIN_PUT)
 
 
 @functools.lru_cache(maxsize=None)
@@ -270,6 +273,241 @@ def test_mixed_ops_100k_zipfian_acceptance():
                                       err_msg=f"{kw}: hit mismatch")
         np.testing.assert_array_equal(np.asarray(tbl), ref_tbl,
                                       err_msg=f"{kw}: table mismatch")
+
+
+# ---------------------------------------------------------------------------
+# Chain ops (OP_CHAIN_GET / OP_CHAIN_PUT): the fused serving tick.
+# Batch layout contract: each chain's GET island first, every PUT island
+# after all GET rows, plain mutating ops last (see core/engine.py).
+# ---------------------------------------------------------------------------
+
+
+def _chain_batch(chains, puts, tail=()):
+    """(keys, vals, ops, chain_ids) for one conforming chain batch."""
+    keys, vals, ops, cids = [], [], [], []
+    for c, ch in enumerate(chains):
+        for k in ch:
+            keys.append(k)
+            vals.append(0)
+            ops.append(OP_CHAIN_GET)
+            cids.append(c)
+    for c, pv in enumerate(puts):
+        for k, v in pv:
+            keys.append(k)
+            vals.append(v)
+            ops.append(OP_CHAIN_PUT)
+            cids.append(c)
+    for k, v, op in tail:
+        keys.append(k)
+        vals.append(v)
+        ops.append(op)
+        cids.append(0)
+    return keys, vals, ops, cids
+
+
+def _replay_chain_batches(cfg, preload, batches, block_b=16):
+    """Replay ACCESS ``preload`` + chain ``batches`` through the python
+    oracle, the sequential engine, and the three batched engines (rounds /
+    onepass-jnp / onepass-kernel, the kernel with a small ``block_b`` so
+    duplicate-set chains span grid blocks); assert bitwise equality of
+    every output field and the final table; return the sequential outputs
+    (one SeqOutputs per batch)."""
+    kp, v = cfg.key_planes, cfg.value_planes
+
+    def npk(ks):
+        return np.asarray([k if kp == 2 else (k,) for k in ks],
+                          np.int32).reshape(-1, kp)
+
+    def npv(vs):
+        return np.asarray([[x] * v for x in vs], np.int32).reshape(-1, v)
+
+    pre_k, pre_v = preload
+
+    # --- python oracle (normative semantics) ---
+    oracle = MultiStepLRUOracle(cfg.num_sets, cfg.m, cfg.p,
+                                policy=cfg.policy, key_planes=cfg.key_planes)
+    for k, x in zip(pre_k, pre_v):
+        oracle.apply(OP_ACCESS, k, tuple([x] * v))
+    orefs = [oracle.apply_batch(ops, ks, [tuple([x] * v) for x in vs], cids)
+             for ks, vs, ops, cids in batches]
+
+    # --- sequential engine ---
+    seq = MultiStepLRUCache(cfg)
+    if pre_k:
+        seq.access_seq(npk(pre_k), vals=npv(pre_v))
+    seq_outs = [seq.access_seq(npk(ks), vals=npv(vs),
+                               ops=np.asarray(ops, np.int32),
+                               chain_ids=np.asarray(cids, np.int32))
+                for ks, vs, ops, cids in batches]
+    for oref, out in zip(orefs, seq_outs):
+        for i, o in enumerate(oref):
+            assert o["hit"] == bool(np.asarray(out.hit)[i]), f"oracle hit {i}"
+            assert o["pos"] == int(np.asarray(out.pos)[i]), f"oracle pos {i}"
+            ev = o["evicted"] is not None
+            assert ev == bool(np.asarray(out.evicted_valid)[i])
+
+    # --- batched engines, bit-exact vs sequential ---
+    engines = {
+        "rounds": make_batched_engine(cfg, engine="rounds"),
+        "onepass_jnp": make_batched_engine(cfg, engine="onepass",
+                                           use_kernel=False, block_b=block_b),
+        "onepass_kernel": make_batched_engine(cfg, engine="onepass",
+                                              use_kernel=True,
+                                              block_b=block_b),
+    }
+    for name, run in engines.items():
+        tbl = init_table(cfg)
+        if pre_k:
+            tbl, _ = run(tbl, jnp.asarray(npk(pre_k)), jnp.asarray(npv(pre_v)),
+                         None)
+        for (ks, vs, ops, cids), ref in zip(batches, seq_outs):
+            tbl, res = run(tbl, jnp.asarray(npk(ks)), jnp.asarray(npv(vs)),
+                           np.asarray(ops, np.int32),
+                           chain_ids=np.asarray(cids, np.int32))
+            for f in ref._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(res, f)), np.asarray(getattr(ref, f)),
+                    err_msg=f"{name}: {f}")
+        np.testing.assert_array_equal(np.asarray(tbl), np.asarray(seq.table),
+                                      err_msg=f"{name}: table")
+    return seq_outs
+
+
+def test_chain_first_chunk_miss_downgrades_whole_chain():
+    """A chain whose FIRST chunk misses: every GET row reports a miss (even
+    for chunks that are resident — they must not be promoted), and every
+    PUT row executes as an insert."""
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    resident = [11, 21, 31]
+    chain = [99] + resident           # 99 was never inserted
+    ks, vs, ops, cids = _chain_batch(
+        [chain], [[(k, k * 7) for k in chain]])
+    outs = _replay_chain_batches(cfg, (resident, [k * 5 for k in resident]),
+                                 [(ks, vs, ops, cids)])
+    hit = np.asarray(outs[0].hit)
+    assert not hit[:4].any()          # all GET rows downgraded to misses
+    assert list(hit[4:]) == [False, True, True, True]  # insert; 3 absorbed
+
+
+def test_chain_all_hit_and_all_miss():
+    """An all-hit chain promotes every chunk and executes NO insert; an
+    all-miss chain promotes nothing and inserts every funded chunk."""
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    hot = [5, 15, 25, 35]
+    cold = [6, 16, 26]
+    ks, vs, ops, cids = _chain_batch(
+        [hot, cold],
+        [[(k, k * 9) for k in hot], [(k, k * 9) for k in cold]])
+    outs = _replay_chain_batches(cfg, (hot, [k * 2 for k in hot]),
+                                 [(ks, vs, ops, cids)])
+    hit = np.asarray(outs[0].hit)
+    val = np.asarray(outs[0].value)[:, 0]
+    assert hit[:4].all()                       # all-hit chain: 4 GET hits
+    assert list(val[:4]) == [k * 2 for k in hot]
+    assert not hit[4:7].any()                  # all-miss chain
+    assert not hit[7:11].any()                 # hot PUT rows: no-ops
+    assert not hit[11:].any()                  # cold PUT rows: fresh inserts
+
+
+def test_chain_same_tick_duplicate_hashes_across_chains():
+    """Two same-batch chains sharing chunk hashes: both probe the pre-batch
+    table (both miss), the first chain's PUTs insert, and the second's are
+    absorbed as duplicate hits returning the FIRST chain's values — the
+    dedupe contract the serving tier builds on."""
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    shared = [41, 51, 61]
+    b_tail = [71]
+    ks, vs, ops, cids = _chain_batch(
+        [shared, shared + b_tail],
+        [[(k, 100 + i) for i, k in enumerate(shared)],
+         [(k, 200 + i) for i, k in enumerate(shared + b_tail)]])
+    outs = _replay_chain_batches(cfg, ([], []), [(ks, vs, ops, cids)])
+    hit = np.asarray(outs[0].hit)
+    val = np.asarray(outs[0].value)[:, 0]
+    assert not hit[:7].any()                   # both chains probe pre-batch
+    assert list(hit[7:10]) == [False] * 3      # chain A inserts
+    assert list(hit[10:13]) == [True] * 3      # chain B absorbed...
+    assert list(val[10:13]) == [100, 101, 102]  # ...returning A's pages
+    assert not hit[13]                         # B's own tail inserts
+
+
+def test_chain_put_island_shorter_than_chain():
+    """A PUT island that funds only a prefix of the chain leaves the tail
+    unpublished (the pool-pressure shape), matching the oracle."""
+    cfg = MSLRUConfig(num_sets=4, m=2, p=2, value_planes=1)
+    chain = [7, 17, 27, 37]
+    ks, vs, ops, cids = _chain_batch(
+        [chain], [[(k, k) for k in chain[:2]]])   # only 2 funded
+    outs = _replay_chain_batches(cfg, ([7], [70]), [(ks, vs, ops, cids)])
+    hit = np.asarray(outs[0].hit)
+    assert list(hit[:4]) == [True, False, False, False]
+    assert not hit[4]                          # funded put 0: inside prefix
+    assert not hit[5]                          # funded put 1: inserts
+
+
+def test_chain_spanning_grid_blocks_one_set():
+    """num_sets=1 forces every chain row into ONE duplicate-set chain that
+    crosses kernel grid blocks (block_b=4 over ~17 rows); the cross-block
+    carry must hand the row state through for chain ops too."""
+    cfg = MSLRUConfig(num_sets=1, m=2, p=4, value_planes=1)
+    a = [3, 13, 23]
+    b = [3, 13, 43, 53]                       # shares a 2-chunk prefix
+    ks, vs, ops, cids = _chain_batch(
+        [a, b],
+        [[(k, 300 + i) for i, k in enumerate(a)],
+         [(k, 400 + i) for i, k in enumerate(b)]],
+        tail=[(3, 0, OP_GET), (99, 9, OP_ACCESS), (13, 0, OP_DELETE)])
+    _replay_chain_batches(cfg, ([23], [5]), [(ks, vs, ops, cids)],
+                          block_b=4)
+
+
+def test_chain_batches_accumulate_across_ticks():
+    """Chain state resets per call: a second tick's chains observe the
+    first tick's inserts as pre-batch membership (hits extend)."""
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    chain = [9, 19, 29]
+    t1 = _chain_batch([chain], [[(k, k) for k in chain]])
+    t2 = _chain_batch([chain + [39]], [[(k, k + 1) for k in chain + [39]]])
+    outs = _replay_chain_batches(cfg, ([], []), [t1, t2])
+    hit2 = np.asarray(outs[1].hit)
+    assert hit2[:3].all() and not hit2[3]      # tick-1 inserts now hit
+    assert list(hit2[4:7]) == [False] * 3      # puts inside prefix: no-ops
+    assert not hit2[7]                         # the new tail chunk inserts
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=15)
+    @given(ci=st.integers(0, len(CFGS) - 1),
+           seed=st.integers(0, 2**31 - 1),
+           nchains=st.integers(1, 4),
+           key_range=st.integers(4, 60),
+           block_b=st.sampled_from([4, 16]))
+    def test_chain_ops_differential(ci, seed, nchains, key_range, block_b):
+        """Randomized fused ticks (random chains, random funded prefixes,
+        duplicate hashes within and across chains, plain mutating tail)
+        through every engine vs the python oracle."""
+        cfg = CFGS[ci]
+        rng = np.random.default_rng(seed)
+
+        def rand_key():
+            if cfg.key_planes == 2:
+                return (int(rng.integers(0, 3)),
+                        int(rng.integers(1, key_range)))
+            return int(rng.integers(1, key_range))
+
+        pre = [rand_key() for _ in range(rng.integers(0, 16))]
+        batches = []
+        for _ in range(2):
+            chains = [[rand_key() for _ in range(rng.integers(1, 5))]
+                      for _ in range(nchains)]
+            puts = [[(k, int(rng.integers(-99, 99))) for k in
+                     ch[: rng.integers(0, len(ch) + 1)]] for ch in chains]
+            tail = [(rand_key(), int(rng.integers(-99, 99)),
+                     int(rng.choice(np.asarray(OPS))))
+                    for _ in range(rng.integers(0, 5))]
+            batches.append(_chain_batch(chains, puts, tail))
+        _replay_chain_batches(cfg, (pre, [1] * len(pre)), batches,
+                              block_b=block_b)
 
 
 def test_mixed_ops_through_sharded_engine():

@@ -197,6 +197,209 @@ def test_batched_admission_equals_one_at_a_time():
     assert pool_a.free_pages == pool_b.free_pages
 
 
+def test_fused_tick_equals_split_path_prefix_cache():
+    """PrefixCache-level acceptance: ``serve_chains`` (ONE engine call per
+    tick) produces bit-identical stats AND table to the split
+    LOOKUP+GET+ACCESS pipeline over a multi-tick trace with cross-tick
+    reuse, intra-tick shared prefixes, and evictions."""
+    def drive(fused: bool):
+        pc = PrefixCache(num_sets=2, m=2, p=2, chunk_tokens=8)  # capacity 8
+        rng = np.random.default_rng(5)
+        base = [[int(h) for h in rng.integers(1, 2**30, 3)] for _ in range(5)]
+        page = 0
+        ticks = []
+        for t in range(16):
+            chains = [base[(t + j) % len(base)] for j in range(1 + t % 2)]
+            if t % 4 == 0:
+                chains.append(list(chains[0]))    # intra-tick shared prefix
+            if fused:
+                staged = []
+                for ch in chains:
+                    staged.append(list(range(page, page + len(ch))))
+                    page += len(ch)
+                res, _ev = pc.serve_chains(chains, staged)
+                ticks.append([r.hitlen for r in res])
+            else:
+                pages = pc.lookup_chains(chains)
+                staged = []
+                for ch in chains:
+                    staged.append(list(range(page, page + len(ch))))
+                    page += len(ch)
+                pc.insert_chains(
+                    [ch[len(g):] for ch, g in zip(chains, pages)],
+                    [s[len(g):] for s, g in zip(staged, pages)])
+                ticks.append([len(g) for g in pages])
+        return pc, ticks
+
+    a, ta = drive(True)
+    b, tb = drive(False)
+    assert ta == tb
+    assert a.stats() == b.stats()
+    assert a.stats()["evictions"] > 0            # the trace really evicts
+    np.testing.assert_array_equal(np.asarray(a.cache.table),
+                                  np.asarray(b.cache.table))
+    assert a.device_calls < b.device_calls       # 1 vs up-to-3 per tick
+
+
+@pytest.mark.slow
+def test_fused_admission_equals_split_batched():
+    """Serving acceptance: the fused one-call tick (one ``serve_chains``
+    call + one batched prefill launch per wave) emits identical tokens,
+    prefix-cache stats, and pin balance to the PR-2 batched 3-call path —
+    including a tick admitting two requests that share a prefix (intra-
+    tick dedupe: the borrower gathers the owner's pages instead of
+    recomputing, so its prefill shrinks but its tokens must not change)."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    shared = rng.integers(1, cfg.vocab_size, 40).astype(np.int32)
+    other = rng.integers(1, cfg.vocab_size, 37).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 5).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 9).astype(np.int32)]),
+        other,
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 7).astype(np.int32)]),
+    ]
+
+    def drive(mode: str):
+        pool = PagedKVPool(cfg, n_pages=64, page_tokens=16)
+        pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=16)
+        eng = ServeEngine(model, params, slots=2, max_len=128,
+                          prefix_cache=pc, pool=pool, admit_mode=mode)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+        max_calls = 0
+        while eng.queue or eng.active:
+            before = pc.device_calls
+            eng.step()
+            max_calls = max(max_calls, pc.device_calls - before)
+        return eng, pool, pc, max_calls
+
+    eng_a, pool_a, pc_a, calls_a = drive("fused")
+    eng_b, pool_b, pc_b, calls_b = drive("split")
+
+    assert calls_a <= 1                          # ONE engine call per tick
+    assert calls_b >= 2                          # the path it replaces
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    assert toks(eng_a) == toks(eng_b)            # identical tokens
+    assert pc_a.stats() == pc_b.stats()          # identical cache stats
+    # the first tick admits rid 0+1 together: the borrower skipped the
+    # shared chunks the owner prefilled (strictly more reuse than split)
+    skip = lambda e, r: [x for x in e.finished if x.rid == r][0].prefill_skipped
+    assert skip(eng_a, 1) > skip(eng_b, 1)
+    # pin balance: everything unpinned at retirement, same pool pressure
+    assert (pool_a.refcount <= 1).all() and (pool_b.refcount <= 1).all()
+    assert pool_a.free_pages == pool_b.free_pages
+    assert pool_a.refcount.sum() == pool_b.refcount.sum()
+
+
+@pytest.mark.slow
+def test_near_full_pool_reserve_commit_recycles_same_tick():
+    """Reserve-then-commit under pool pressure: with a pool too small to
+    stage every chunk up front, the fused tick must (a) recycle its own
+    evictions for the same tick's remaining inserts via the retry pass,
+    (b) keep refcounts balanced (no leaked reservations), and (c) keep
+    serving correctly."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    # 6 pages; prompts of 3 chunks each -> the second tick's reservations
+    # cannot all be funded until the tick's own evictions recycle
+    pool = PagedKVPool(cfg, n_pages=6, page_tokens=16)
+    pc = PrefixCache(num_sets=1, m=1, p=4, chunk_tokens=16)  # capacity 4
+    eng = ServeEngine(model, params, slots=2, max_len=128,
+                      prefix_cache=pc, pool=pool)
+    for i in range(4):
+        p = rng.integers(1, cfg.vocab_size, 48 + i).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    eng.run_until_done()
+    assert len(eng.finished) == 4
+    assert pc.stats()["evictions"] > 0
+    # no reservation leaks: free + cache-held pages account for the pool
+    assert (pool.refcount >= 0).all() and (pool.refcount <= 1).all()
+    assert pool.free_pages + int(pool.refcount.sum()) == pool.n_pages
+    assert len(pool._reserved) == 0
+    # the retry pass actually fired at least once (an extra ACCESS call
+    # beyond the single fused call for some tick) — and still well under
+    # the split path's 3 calls/tick
+    assert pc.device_calls > 2                   # >1 call on some tick
+    # the cache holds as many pages as its capacity allows (4 slots)
+    held = int(pool.refcount.sum())
+    assert held > 0
+
+
+@pytest.mark.slow
+def test_same_call_eviction_does_not_alias_pages():
+    """A fused tick can insert a chunk and EVICT it again within the same
+    call (set pressure).  Its page returns to the pool; the engine must
+    then neither publish it to same-tick borrowers nor hand it to the
+    pressure-retry pass as if it were still owned — otherwise two chunks
+    alias one page and a borrower gathers the wrong KV.  Tokens must match
+    the split path, which never publishes within a tick."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    shared = rng.integers(1, cfg.vocab_size, 48).astype(np.int32)  # 3 chunks
+    prompts = [
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 3).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 6).astype(np.int32)]),
+        np.concatenate([rng.integers(1, cfg.vocab_size, 48 + 5).astype(np.int32)]),
+    ]
+
+    def drive(mode: str):
+        # capacity-4 cache: 6 distinct inserts in one tick evict same-call
+        # entries; 5-page pool leaves the last request partially funded so
+        # the retry pass re-allocates the just-evicted page
+        pool = PagedKVPool(cfg, n_pages=5, page_tokens=16)
+        pc = PrefixCache(num_sets=1, m=1, p=4, chunk_tokens=16)
+        eng = ServeEngine(model, params, slots=3, max_len=128,
+                          prefix_cache=pc, pool=pool, admit_mode=mode)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+        eng.run_until_done()
+        return eng, pool, pc
+
+    eng_a, pool_a, pc_a = drive("fused")
+    eng_b, pool_b, pc_b = drive("split")
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    assert toks(eng_a) == toks(eng_b)
+    assert pc_a.stats()["evictions"] > 0
+    assert (pool_a.refcount <= 1).all()
+    assert pool_a.free_pages + int(pool_a.refcount.sum()) == pool_a.n_pages
+    assert len(pool_a._reserved) == 0
+
+
+def test_device_calls_counts_engine_invocations_only():
+    """``device_calls`` must count ONE per engine invocation on every path
+    — never per chain, per page, or per recycled duplicate-hit page."""
+    pc = PrefixCache(num_sets=8, m=2, p=4, chunk_tokens=8)
+    real_access = pc.cache.access
+    invocations = []
+
+    def counting_access(*a, **kw):
+        invocations.append(1)
+        return real_access(*a, **kw)
+
+    pc.cache.access = counting_access
+    # fused tick with duplicate staged pages absorbed as hits
+    chain = [3, 5, 7]
+    pc.serve_chains([chain, list(chain)], [[10, 11, 12], [20, 21, 22]])
+    assert pc.device_calls == len(invocations) == 1
+    # split path: lookup (1 call; nothing to promote) + insert with
+    # duplicate-hit recycled pages (1 call)
+    pages = pc.lookup_chains([[99, 101]])
+    pc.insert_chains([[3, 99]], [[30, 31]])      # 3 is a duplicate hit
+    assert pc.device_calls == len(invocations) == 3
+    # promote path adds the GET batch: exactly one more call
+    pc.lookup_chains([[3, 5]])
+    assert pc.device_calls == len(invocations) == 5
+    pc.delete(3)
+    assert pc.device_calls == len(invocations) == 6
+
+
 @pytest.mark.slow
 def test_prefix_reuse_equals_vanilla_decode():
     cfg = get_config("phi3-mini-3.8b", smoke=True)

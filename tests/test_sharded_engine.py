@@ -79,3 +79,75 @@ def test_sharded_engine_mixed_ops_exact_on_2_devices():
     rec = _run_child(2, "onepass", mixed_ops=True)
     assert rec["hits"] == rec["seq_hits"]
     assert rec["table_match"]
+
+
+_CHAIN_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs import get_config
+from repro.core import MSLRUConfig
+from repro.core.sharded import ShardedCacheClient
+from repro.launch.mesh import make_mesh_compat
+from repro.models.model import make_model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+cfg = get_config("phi3-mini-3.8b", smoke=True)
+model = make_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(4)
+shared = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+prompts = [np.concatenate([shared,
+                           rng.integers(1, cfg.vocab_size,
+                                        5 + i).astype(np.int32)])
+           for i in range(5)]
+
+def drive(backend):
+    pool = PagedKVPool(cfg, n_pages=32, page_tokens=16)
+    pc = PrefixCache(num_sets=32, m=2, p=4, chunk_tokens=16,
+                     backend=backend)
+    eng = ServeEngine(model, params, slots=2, max_len=128,
+                      prefix_cache=pc, pool=pool)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    eng.run_until_done()
+    toks = {r.rid: r.out_tokens for r in eng.finished}
+    return pc.stats(), pool, toks
+
+mesh = make_mesh_compat((2,), ("cache",))
+mcfg = MSLRUConfig(num_sets=32, m=2, p=4, value_planes=1)
+st_s, pool_s, toks_s = drive(ShardedCacheClient(mcfg, mesh))
+st_l, pool_l, toks_l = drive(None)
+print(json.dumps({
+    "hits": [st_s["hits"], st_l["hits"]],
+    "misses": [st_s["misses"], st_l["misses"]],
+    "evictions": [st_s["evictions"], st_l["evictions"]],
+    "free": [pool_s.free_pages, pool_l.free_pages],
+    "held": [int(pool_s.refcount.sum()), int(pool_l.refcount.sum())],
+    "ref_ok": bool((pool_s.refcount <= 1).all()),
+    "toks_match": toks_s == toks_l,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_prefix_cache_serving_parity_on_2_devices():
+    """PrefixCache on ``ShardedCacheClient`` over a REAL 2-device mesh:
+    the fused one-call tick (chain execute masks + evicted pages riding
+    the all_to_all payload) serves identical tokens with identical
+    hit/miss/eviction stats and pin balance to the single-device engine."""
+    res = subprocess.run([sys.executable, "-c", _CHAIN_CHILD],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    assert rec["hits"][0] == rec["hits"][1]
+    assert rec["misses"][0] == rec["misses"][1]
+    assert rec["evictions"][0] == rec["evictions"][1]
+    assert rec["free"][0] == rec["free"][1]          # pin balance parity
+    assert rec["held"][0] == rec["held"][1]
+    assert rec["ref_ok"]
+    assert rec["toks_match"]
