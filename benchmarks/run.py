@@ -32,7 +32,8 @@ def main() -> None:
                             fig08_throughput, fig11_m_sweep,
                             fig12_hit_location, fig13_p8,
                             fig14_sharded_scaling, fig15_warmup,
-                            prefix_cache_bench, roofline_table)
+                            prefix_cache_bench, roofline_table,
+                            sharded_bench)
 
     modules = [
         ("fig06", fig06_invector_small),
@@ -44,9 +45,11 @@ def main() -> None:
         ("fig14", fig14_sharded_scaling),
         ("fig15", fig15_warmup),
         ("prefix", prefix_cache_bench),
+        ("sharded", sharded_bench),
     ]
     if args.quick:
-        modules = [m for m in modules if m[0] not in ("fig07", "fig14")]
+        modules = [m for m in modules
+                   if m[0] not in ("fig07", "fig14", "sharded")]
 
     csv = ["name,us_per_call,derived"]
     for name, mod in modules:
@@ -92,6 +95,8 @@ def _csv_scalars(name, res):
             return 0, res["multistep_garbage"]["1048576"]
         if name == "prefix":
             return 0, res["multistep_m2"]["prefill_saved_frac"]
+        if name == "sharded":
+            return 0, res["2x"]["shed_rate"]
     except (KeyError, IndexError):
         pass
     return 0, 0

@@ -1,0 +1,247 @@
+"""Capacity-bounded sharded serving: the shed-rate / buffer-memory /
+hit-ratio trade-off at D=8.
+
+The sharded cache engine bounds per-shard work with fixed-capacity
+all_to_all slabs (the set-associative independence argument, lifted to
+chips).  ``cap="full"`` never sheds but sizes every per-peer buffer to the
+whole slab — O(ndev × slab) memory per device.  A bounded cap shrinks the
+buffers to ``cap × ndev`` rows but sheds chains when a tick's routing
+overflows a shard (Zipfian traffic concentrates same-template chains onto
+one home shard); the serving tier retries sheds next tick, so the question
+is how much hit ratio survives and how often chains wait.
+
+This bench sweeps cap ∈ {full, 4×, 2×, 1×, 0.5×} of the expected per-peer
+load on a Zipfian template trace served through ``PrefixCache`` on a
+``ShardedCacheClient`` over 8 forced host devices (subprocess, like
+fig14), with a next-tick retry queue (max 3 retries, then the chain is
+dropped — the forced-miss fallback).  Output per cap: shed rate (shed
+chain-events / chain submissions), retried/dropped counts, chunk hit
+ratio, and the per-device all_to_all send-buffer bytes.
+
+``run()`` merges the curve into BENCH_sharded.json at the repo root;
+``--smoke`` uses a tiny trace (entry block ``smoke``, the CI gate trace);
+``--check`` recomputes the smoke curve and fails (exit 1) if the shed rate
+at cap=2×expected exceeds the committed entry by >20% or any hit ratio
+drifts from the committed value.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import cached
+
+NDEV = 8
+CAPS = [("full", "full"), ("4x", 4.0), ("2x", 2.0), ("1x", 1.0),
+        ("0.5x", 0.5)]
+N_TEMPLATES = 96
+PREFIX_CHUNKS = 4
+CHAINS_PER_TICK = 32
+TICKS = 200
+SMOKE_TICKS = 30
+CACHE_SETS = 32          # 32 sets * 8 lanes = 256 slots vs 384 hot chunks
+MAX_RETRIES = 3
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_sharded.json"
+
+_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core import MSLRUConfig
+from repro.core.sharded import ShardedCacheClient
+from repro.data.ycsb import zipfian
+from repro.launch.mesh import make_cache_mesh
+from repro.serving.prefix_cache import PrefixCache
+
+NDEV = %(ndev)d
+TICKS = %(ticks)d
+B = %(chains_per_tick)d
+PC = %(prefix_chunks)d
+MAX_RETRIES = %(max_retries)d
+
+mesh = make_cache_mesh(NDEV)
+rng = np.random.default_rng(17)
+templates = [[(int(h) & 0x7FFFFFFF) | 1
+              for h in rng.integers(1, 2**30, PC)]
+             for _ in range(%(n_templates)d)]
+picks = zipfian(%(n_templates)d, TICKS * B, alpha=1.0, seed=18) - 1
+
+out = {}
+for name, cap in %(caps)r:
+    cap = float(cap) if isinstance(cap, (int, float)) else cap
+    mcfg = MSLRUConfig(num_sets=%(cache_sets)d, m=2, p=4, value_planes=1)
+    client = ShardedCacheClient(mcfg, mesh, cap=cap)
+    pc = PrefixCache(chunk_tokens=16, backend=client)
+    page = 0
+    retry = []            # (chain, tries)
+    submissions = dropped = 0
+    max_buf = (0, 0)
+    i = 0
+    for t in range(TICKS):
+        # retries go first (next-tick priority), fresh requests fill to B
+        todo = retry
+        retry = []
+        while len(todo) < B and i < TICKS * B:
+            todo.append((templates[int(picks[i]) %% len(templates)], 0))
+            i += 1
+        if not todo:
+            break
+        chains = [list(c) for c, _ in todo]
+        staged = []
+        for ch in chains:
+            staged.append(list(range(page, page + len(ch))))
+            page += len(ch)
+        res, _ev = pc.serve_chains(chains, staged,
+                                   retries=[n > 0 for _, n in todo])
+        submissions += len(chains)
+        q, k, planes = client.route_shape
+        max_buf = max(max_buf, (NDEV * k * planes * 4, k))
+        for (ch, n), r in zip(todo, res):
+            if r.shed:
+                # n+1 sheds so far; allow MAX_RETRIES retries (mirroring
+                # ServeEngine.max_shed_retries) before giving up
+                if n + 1 > MAX_RETRIES:
+                    dropped += 1
+                else:
+                    retry.append((ch, n + 1))
+    st = pc.stats()
+    out[name] = {
+        "cap": cap if cap == "full" else float(cap),
+        "shed_rate": st["shed"] / submissions if submissions else 0.0,
+        "shed": st["shed"],
+        "retried": st["retried"],
+        "dropped": dropped,
+        "submissions": submissions,
+        "hit_ratio": st["hit_ratio"],
+        "hits": st["hits"],
+        "misses": st["misses"],
+        "evictions": st["evictions"],
+        "send_buffer_bytes": max_buf[0],
+        "k_depth": max_buf[1],
+        "client_shed_rows": client.sheds,
+    }
+print(json.dumps(out))
+"""
+
+
+def _sweep(ticks: int) -> dict:
+    src = _CHILD % {
+        "ndev": NDEV, "ticks": ticks, "chains_per_tick": CHAINS_PER_TICK,
+        "prefix_chunks": PREFIX_CHUNKS, "n_templates": N_TEMPLATES,
+        "cache_sets": CACHE_SETS, "max_retries": MAX_RETRIES,
+        "caps": CAPS,
+    }
+    res = subprocess.run(
+        [sys.executable, "-c", src], capture_output=True, text=True,
+        cwd=str(Path(__file__).resolve().parent.parent), timeout=3600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def run(force: bool = False, smoke: bool = False):
+    ticks = SMOKE_TICKS if smoke else TICKS
+    key = "smoke" if smoke else "entries"
+
+    def compute():
+        return _sweep(ticks)
+
+    res = cached(f"sharded_bench_{key}", compute, force)
+    _emit_bench_json(res, key)
+    return res
+
+
+def _emit_bench_json(res: dict, key: str) -> None:
+    doc = {}
+    if BENCH_JSON.exists():
+        try:
+            doc = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["benchmark"] = "sharded_serving"
+    doc["config"] = {
+        "devices": NDEV, "templates": N_TEMPLATES,
+        "prefix_chunks": PREFIX_CHUNKS, "chains_per_tick": CHAINS_PER_TICK,
+        "cache_sets": CACHE_SETS, "max_retries": MAX_RETRIES,
+        "ticks": {"entries": TICKS, "smoke": SMOKE_TICKS},
+    }
+    doc[key] = res
+    BENCH_JSON.write_text(json.dumps(doc, indent=1))
+
+
+def check(res: dict, committed_doc: dict) -> list[str]:
+    """CI gate on the smoke curve: shed rate at cap=2×expected within 1.2×
+    of the committed entry, hit ratios bit-stable (empty list = pass).
+
+    ``committed_doc`` must be the BENCH_sharded.json content from *before*
+    this run (``run`` merges the fresh numbers into the file)."""
+    problems = []
+    committed = committed_doc.get("smoke", {})
+    ref2 = committed.get("2x")
+    if ref2 is None:
+        problems.append("no committed smoke '2x' entry to compare")
+    else:
+        got = res.get("2x", {}).get("shed_rate", 1.0)
+        budget = ref2["shed_rate"] * 1.2 + 1e-9
+        if got > budget:
+            problems.append(
+                f"2x shed_rate {got:.4f} > committed {ref2['shed_rate']:.4f}"
+                f" * 1.2")
+    for name, r in res.items():
+        ref = committed.get(name)
+        if ref is None:
+            problems.append(f"{name}: no committed smoke entry")
+        elif ref.get("hit_ratio") != r.get("hit_ratio"):
+            problems.append(
+                f"{name}: hit_ratio {r.get('hit_ratio')} != committed "
+                f"{ref.get('hit_ratio')}")
+    return problems
+
+
+def report(res: dict) -> list[str]:
+    lines = [f"sharded serving cap sweep (D={NDEV}, Zipfian templates; "
+             "bounded per-peer all_to_all slabs + next-tick retry)"]
+    full = res.get("full", {})
+    for name, _cap in CAPS:
+        r = res.get(name)
+        if not r:
+            continue
+        loss = (full.get("hit_ratio", 0) - r["hit_ratio"])
+        lines.append(
+            f"  cap={name:5s} shed={r['shed_rate']:.2%} "
+            f"retried={r['retried']} dropped={r['dropped']} "
+            f"hit_ratio={r['hit_ratio']:.3f} (Δ vs full {loss:+.4f}) "
+            f"buf={r['send_buffer_bytes']}B (k={r['k_depth']})")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (the CI gate block)")
+    ap.add_argument("--check", action="store_true",
+                    help="recompute the smoke curve and fail on shed-rate "
+                         "or hit-ratio regressions vs BENCH_sharded.json")
+    args = ap.parse_args()
+    committed_doc = (json.loads(BENCH_JSON.read_text())
+                     if BENCH_JSON.exists() else {})
+    res = run(force=args.force or args.check,
+              smoke=args.smoke or args.check)
+    print("\n".join(report(res)))
+    print(f"merged into {BENCH_JSON}")
+    if args.check:
+        problems = check(res, committed_doc)
+        if problems:
+            print("BENCH CHECK FAILED:\n  " + "\n  ".join(problems))
+            sys.exit(1)
+        print("bench check OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,30 @@ rows zero it).  For served queries ``evicted_key`` is the EMPTY_KEY
 sentinel whenever nothing was evicted; queries dropped by a ``max_rounds``
 cap (``served`` False) report all-zero evicted fields — test
 ``evicted_valid``, which is authoritative in both cases.
+
+Sheds and canonical ordering (the sharded engine)
+-------------------------------------------------
+The sharded engine (core/sharded.py) adds two refinements to this
+contract:
+
+* ``served=False`` additionally marks queries SHED by a bounded per-peer
+  all_to_all buffer (``cap``) — a shed query performs no mutation and
+  reports a plain miss with zero evicted fields, exactly like a
+  ``max_rounds`` drop.  A shed CHAIN_GET row breaks its chain's hit
+  prefix (conservative under-serving, never a hole); a shed CHAIN_PUT row
+  never inserts.  The serving tier does NOT fold sheds into misses: the
+  ``ShardedCacheClient`` sheds whole chains atomically and
+  ``PrefixCache``/``ServeEngine`` carry them into the next tick through a
+  retry queue, counting ``shed``/``retried`` in the cache stats.
+
+* **Canonical ordering guarantee**: with the optional ``order`` operand
+  (caller-order ranks riding the all_to_all payload) the sharded engine
+  stably sorts routed rows before the per-shard update, so the mutation
+  order — including which of two same-tick duplicate inserts from
+  DIFFERENT devices gets the inserted vs absorbed role — is exactly the
+  sequential engine's.  Sharded tables are then bit-equal to this
+  module's engines, not merely hit/miss-equivalent, and differential
+  tests may compare tables across device counts.
 """
 
 from __future__ import annotations

@@ -56,7 +56,10 @@ POLICY_SET_LRU = "set_lru"  # exact LRU *within* each set (baseline)
 # Per-query opcodes (the paper's §III.B operation set).  The numeric values
 # are part of the on-device ABI: they travel through sort prologues, Pallas
 # kernel operands, and all_to_all payload planes.  policies.py mirrors them
-# for the pure-Python oracle (asserted equal in tests).
+# for the pure-Python oracle (asserted equal in tests).  Queries a bounded
+# sharded route sheds (``served`` False) execute NO op at all and report a
+# plain miss — see "Sheds and canonical ordering" in core/engine.py for how
+# that composes with the chain ops and the serving tier's retry queue.
 OP_ACCESS = 0  # get; on miss, put (the paper's benchmark op)
 OP_GET = 1     # get only (a miss leaves the cache untouched)
 OP_DELETE = 2  # invalidate in place

@@ -8,10 +8,25 @@ set-associative independence argument the paper makes for its fine-grained
 locks, lifted from cores to chips.
 
 Capacity semantics: each device sends at most ``cap`` queries to each peer
-per step.  Overflow queries (hash-hot shards) are *dropped for this step* and
-reported as forced misses — the shed-load analogue of a busy memcached shard;
-the overflow rate is a benchmark output (it is <1e-3 for uniform hashes when
-cap ≈ 2×expected).
+per step.  Overflow queries (hash-hot shards) are *shed for this step* and
+reported via the ``served`` mask — the shed-load analogue of a busy memcached
+shard.  Shed queries are NOT silent forced misses at the serving tier: the
+``ShardedCacheClient`` sheds whole chains atomically (host-side capacity
+pre-check mirroring the device route ranks) and the serving tier carries
+them into the next tick through a retry queue (``PrefixCache`` /
+``ServeEngine``); the shed rate vs buffer-memory vs hit-ratio trade-off is a
+benchmark output (benchmarks/sharded_bench.py -> BENCH_sharded.json).
+
+Canonical cross-shard ordering: queries arrive at their owner shard in
+(source-device, send-slot) order, which for the plain engine equals global
+batch order (slabs are contiguous).  When the caller's packing permutes
+that order (``ShardedCacheClient`` deals whole chains round-robin onto
+slabs), an optional ``order`` operand carries each query's caller-order
+rank as one extra all_to_all plane and ``local_fn`` stably sorts the routed
+rows by it before the table update — so same-tick duplicate inserts from
+different devices always resolve their absorbed/inserted roles exactly as
+the sequential engine would, and sharded tables are *bit-equal* to the
+local engine, not merely equivalent.
 
 The routing/update pipeline per device:
   1. hash local queries -> (owner shard, slot within send buffer)
@@ -41,6 +56,7 @@ the results back to request order.
 from __future__ import annotations
 
 import functools
+import math
 
 import numpy as np
 import jax
@@ -54,7 +70,31 @@ from repro.core.multistep import (AccessResult, MSLRUConfig, OP_ACCESS,
                                   init_table, row_lookup, set_index_for)
 from repro.launch.mesh import shard_map_compat as _shard_map
 
-__all__ = ["make_sharded_engine", "shard_table", "ShardedCacheClient"]
+__all__ = ["make_sharded_engine", "shard_table", "ShardedCacheClient",
+           "per_peer_cap"]
+
+_INT32_MAX = np.int32(2**31 - 1)
+
+
+def per_peer_cap(cap, q_local: int, ndev: int) -> int:
+    """Resolve the per-peer send-buffer depth for a local slab of
+    ``q_local`` queries — the single source of truth shared by the engine's
+    route and the ``ShardedCacheClient`` host-side shed pre-check.
+
+    ``cap`` semantics:
+      * ``"full"`` — the whole slab (no shed possible; unbounded buffers),
+      * ``float``  — multiplier over the *expected* per-peer load
+        ``q_local / ndev`` (uniform hashing), e.g. ``2.0`` = 2×expected,
+      * ``int``    — a fixed per-peer depth,
+      * ``None``   — the legacy default, 2×expected.
+    """
+    if cap == "full":
+        return q_local
+    if cap is None:
+        return max(1, (2 * q_local) // ndev)
+    if isinstance(cap, float):
+        return max(1, math.ceil(cap * q_local / ndev))
+    return max(1, int(cap))
 
 
 def shard_table(table, mesh, axis: str = "cache"):
@@ -81,12 +121,30 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
            ``ShardedCacheClient``).  Chain mode adds the membership
            pre-phase + the execute-mask plane, and extends the result with
            the evicted value planes.
-    cap:   per-peer send-buffer depth; the string ``"full"`` sizes it to the
-           whole local slab (no overflow possible — the serving setting).
+    order: (Q,) optional int32 caller-order rank per query (requires
+           ``ops``).  One extra int32 plane rides the all_to_all payload
+           and the routed rows are stably sorted by it before the local
+           update, making the cross-shard mutation order canonical: the
+           sharded table is then bit-equal to the sequential engine fed the
+           queries in ``order`` rank order, regardless of how the caller
+           packed them into slabs.  ``None`` keeps the natural
+           (source-device, slot) arrival order — already canonical when
+           slabs are contiguous caller-order blocks.
+    cap:   per-peer send-buffer depth (see ``per_peer_cap``): ``"full"``
+           sizes it to the whole local slab (no shed possible), a float is
+           a multiplier over the expected per-peer load ``Q/ndev²``, an int
+           a fixed depth, ``None`` = 2×expected.  Sizing heuristic: for
+           uniformly hashed keys the per-peer load is ≈Binomial(q, 1/ndev),
+           so ``cap=2.0`` (2×expected) sheds <0.1% of uniform traffic while
+           shrinking the all_to_all buffers ndev/2×; skewed traffic
+           (same-tick duplicate chains concentrate on one home shard)
+           sheds more — measure with benchmarks/sharded_bench.py, and rely
+           on the serving tier's retry queue to convert sheds into next-tick
+           service instead of forced misses.
     Returns (table, hit, val, served) — chain mode appends
     (evicted_val (Q, max(V,1)), evicted_valid (Q,)).
-    hit:   (Q,) bool — False for misses AND overflow-dropped queries.
-    served:(Q,) bool — False only for overflow-dropped queries.
+    hit:   (Q,) bool — False for misses AND overflow-shed queries.
+    served:(Q,) bool — False only for overflow-shed queries.
     engine: per-shard conflict scheme — "rounds" (gather/scatter per round)
     or "onepass" (sort once, on-chip chains; ``use_kernel`` additionally
     routes the chain loop through the Pallas kernel).
@@ -100,9 +158,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
     ve = max(v, 1)
 
     def _k_for(q_local):
-        if cap == "full":
-            return q_local
-        return cap if cap is not None else max(1, (2 * q_local) // ndev)
+        return per_peer_cap(cap, q_local, ndev)
 
     def _route(qkeys, extra_planes, k):
         """Pack queries into (ndev, k, pc) send buffers and all_to_all them.
@@ -116,20 +172,21 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         onehot = (owner[:, None] == jnp.arange(ndev)[None, :])
         rank = jnp.cumsum(onehot, axis=0)                   # 1-based rank
         slot = jnp.sum(jnp.where(onehot, rank - 1, 0), axis=1)
-        served = slot < k                                   # overflow -> dropped
+        served = slot < k                                   # overflow -> shed
 
         payload = jnp.concatenate([qkeys] + extra_planes, axis=-1)
         pc = payload.shape[-1]
-        send = jnp.full((ndev, k, pc), EMPTY_KEY, jnp.int32)
-        didx = jnp.where(served, owner, ndev - 1)           # clamp for scatter
-        sidx = jnp.where(served, slot, k - 1)
-        # canonical first-wins scatter: overflow writes are masked out
-        send = send.at[didx, sidx].set(
-            jnp.where(served[:, None], payload, EMPTY_KEY))
-        # NOTE: multiple overflow queries may target (ndev-1, k-1); they all
-        # write EMPTY_KEY so the duplicate-scatter is value-deterministic.
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
+        # one SACRIFICIAL column (k) catches every overflow row's scatter:
+        # clamping overflow to a real slot would clobber the admitted row
+        # that legitimately occupies it (silently dropping its op while it
+        # reports served=True) — the dump column is sliced off before the
+        # all_to_all, so duplicate overflow scatters there are harmless
+        send = jnp.full((ndev, k + 1, pc), EMPTY_KEY, jnp.int32)
+        send = send.at[owner, jnp.where(served, slot, k)].set(payload)
+        didx = owner
+        sidx = jnp.where(served, slot, k - 1)               # clamp: unpack read
+        recv = jax.lax.all_to_all(send[:, :k], axis, split_axis=0,
+                                  concat_axis=0, tiled=True)
         return recv.reshape(ndev * k, pc), didx, sidx, served
 
     def _route_back(planes, didx, sidx, k):
@@ -140,7 +197,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         # back[d, j] = result of the query I sent to shard d in slot j
         return back[didx, sidx]
 
-    def local_fn(table, qkeys, qvals, ops=None, chain_ids=None):
+    def local_fn(table, qkeys, qvals, ops=None, chain_ids=None, order=None):
         # table (s_local, A, C); qkeys (q_local, KP); qvals (q_local, V)
         q_local = qkeys.shape[0]
         k = _k_for(q_local)
@@ -152,7 +209,8 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
             # query-owning device runs the segmented longest-prefix scan
             # over its (local) chains.  No mutation happens before phase 2,
             # so the probe is the batch-start membership the chain
-            # contract requires, globally.
+            # contract requires, globally.  (Read-only, so the canonical
+            # ``order`` sort is not needed here.)
             rq, didx, sidx, served = _route(qkeys, [], k)
             p_keys = rq[:, :kp]
             p_valid = p_keys[:, 0] != EMPTY_KEY
@@ -168,7 +226,8 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
             live_planes = [live.astype(jnp.int32)[:, None]]
 
         planes = ([qvals] + ([] if ops is None else [ops[:, None]])
-                  + live_planes)
+                  + live_planes
+                  + ([] if order is None else [order[:, None]]))
         rq, didx, sidx, served = _route(qkeys, planes, k)
         r_keys, r_vals = rq[:, :kp], rq[:, kp: kp + v]
         valid = r_keys[:, 0] != EMPTY_KEY
@@ -177,14 +236,37 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         r_live = (jnp.where(valid, rq[:, kp + v + 1], 0)
                   if chain_mode else None)
 
-        # exact local update (same conflict schemes as the batched engine)
         lsid = set_index_for(cfg, r_keys) % s_local
-        table, res, _served = update(table, lsid, valid, r_keys, r_vals,
-                                     r_ops, chain_live=r_live)
+        if order is not None:
+            # canonical arrival order: stably sort the routed rows by their
+            # caller-order rank before the update, so same-set duplicate
+            # chains resolve exactly as the sequential engine would no
+            # matter which source device each row came from; unsort the
+            # results so the route-back addressing stays (didx, sidx).
+            ord_col = (kp + v + (0 if ops is None else 1)
+                       + (1 if chain_mode else 0))
+            r_ord = jnp.where(valid, rq[:, ord_col], _INT32_MAX)
+            perm = jnp.argsort(r_ord, stable=True)
+            inv = jnp.argsort(perm)
+            table, res, _served = update(
+                table, lsid[perm], valid[perm], r_keys[perm], r_vals[perm],
+                None if r_ops is None else r_ops[perm],
+                chain_live=None if r_live is None else r_live[perm])
+            res = jax.tree.map(lambda a: a[inv], res)
+        else:
+            # exact local update (same conflict schemes as the batched
+            # engine); arrival order (source-device, slot) is already the
+            # caller's slab-major order
+            table, res, _served = update(table, lsid, valid, r_keys, r_vals,
+                                         r_ops, chain_live=r_live)
 
         hit_back = (res.hit & valid).astype(jnp.int32)[:, None]
         val_back = (res.value if v else
                     jnp.zeros((res.value.shape[0], 1), jnp.int32))
+        # shed rows' unpack reads a clamped slot (another row's result):
+        # zero every plane for them — the contract is a plain miss with
+        # all-zero fields when served is False
+        zero = served[:, None]
         if chain_mode:
             evv_back = (res.evicted_val if v else
                         jnp.zeros((res.value.shape[0], 1), jnp.int32))
@@ -192,43 +274,48 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
             home = _route_back([hit_back, val_back, evv_back, evok_back],
                                didx, sidx, k)
             my_hit = home[:, 0].astype(bool) & served
-            return (table, my_hit, home[:, 1: 1 + ve], served,
-                    home[:, 1 + ve: 1 + 2 * ve],
+            return (table, my_hit, jnp.where(zero, home[:, 1: 1 + ve], 0),
+                    served, jnp.where(zero, home[:, 1 + ve: 1 + 2 * ve], 0),
                     (home[:, 1 + 2 * ve] != 0) & served)
         home = _route_back([hit_back, val_back], didx, sidx, k)
         my_hit = home[:, 0].astype(bool) & served
-        return table, my_hit, home[:, 1:], served
+        return table, my_hit, jnp.where(zero, home[:, 1:], 0), served
 
     out_specs = (P(axis, None, None), P(axis), P(axis, None), P(axis))
     out_specs_chain = out_specs + (P(axis, None), P(axis))
+    base_in = (P(axis, None, None), P(axis, None), P(axis, None))
     fn_noops = jax.jit(_shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None), P(axis, None)),
-        out_specs=out_specs,
-    ))
+        local_fn, mesh=mesh, in_specs=base_in, out_specs=out_specs))
     fn_ops = jax.jit(_shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None), P(axis, None), P(axis)),
-        out_specs=out_specs,
-    ))
+        local_fn, mesh=mesh, in_specs=base_in + (P(axis),),
+        out_specs=out_specs))
     fn_chain = jax.jit(_shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(P(axis, None, None), P(axis, None), P(axis, None), P(axis),
-                  P(axis)),
-        out_specs=out_specs_chain,
-    ))
+        local_fn, mesh=mesh, in_specs=base_in + (P(axis), P(axis)),
+        out_specs=out_specs_chain))
+    fn_ops_ord = jax.jit(_shard_map(
+        lambda t, qk, qv, o, r: local_fn(t, qk, qv, ops=o, order=r),
+        mesh=mesh, in_specs=base_in + (P(axis), P(axis)),
+        out_specs=out_specs))
+    fn_chain_ord = jax.jit(_shard_map(
+        lambda t, qk, qv, o, c, r: local_fn(t, qk, qv, ops=o, chain_ids=c,
+                                            order=r),
+        mesh=mesh, in_specs=base_in + (P(axis), P(axis), P(axis)),
+        out_specs=out_specs_chain))
 
-    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+    def run(table, qkeys, qvals, ops=None, chain_ids=None, order=None):
+        if order is not None:
+            assert ops is not None, "order requires an ops vector"
+            order = jnp.asarray(order, jnp.int32)
         if chain_ids is not None:
             assert ops is not None, "chain_ids requires an ops vector"
-            return fn_chain(table, qkeys, qvals, jnp.asarray(ops, jnp.int32),
-                            jnp.asarray(chain_ids, jnp.int32))
+            args = (table, qkeys, qvals, jnp.asarray(ops, jnp.int32),
+                    jnp.asarray(chain_ids, jnp.int32))
+            return (fn_chain(*args) if order is None
+                    else fn_chain_ord(*args, order))
         if ops is None:
             return fn_noops(table, qkeys, qvals)
-        return fn_ops(table, qkeys, qvals, jnp.asarray(ops, jnp.int32))
+        args = (table, qkeys, qvals, jnp.asarray(ops, jnp.int32))
+        return fn_ops(*args) if order is None else fn_ops_ord(*args, order)
 
     return run
 
@@ -243,15 +330,29 @@ class ShardedCacheClient:
     deals whole chains round-robin onto slabs, renumbers chain ids
     slab-locally, pads every slab to the common pow2 length with provable
     no-op LOOKUP rows on key 0, and unpacks the outputs back to caller
-    order.  ``cap="full"`` sizes the per-peer buffers to the slab, so no
-    query can overflow (``pos`` is not routed back — it is reported as -1).
+    order.  Each packed row also carries its caller index as the engine's
+    canonical ``order`` rank, so the sharded table stays *bit-equal* to a
+    local ``MultiStepLRUCache`` fed the same batch even though the dealing
+    permutes slab order (``pos`` is not routed back — it is reported -1).
+
+    Bounded caps and the shed protocol: with ``cap != "full"`` the client
+    runs a host-side capacity pre-check that mirrors the device route ranks
+    exactly (same per-(slab, owner) counting in slab order) and sheds WHOLE
+    groups — a chain is never partially routed, so a shed never leaves a
+    half-mutated chain behind.  Shed rows come back as plain misses with
+    ``last_shed`` marking them in caller order; the engine-side ``served``
+    mask is asserted all-True for the admitted rows (a regression check
+    that the host mirror and the device ranks agree).  ``PrefixCache`` /
+    ``ServeEngine`` turn ``last_shed`` into a retry next tick.
     """
 
     batch_multiple = 1  # access() repacks internally; any B works
+    self_padding = True  # callers need not pow2-pad; slabs are padded here
 
     def __init__(self, cfg: MSLRUConfig, mesh, axis: str = "cache",
                  engine: str = "onepass", use_kernel: bool = False,
-                 block_b: int = 2048, interpret: bool | None = None):
+                 block_b: int = 2048, interpret: bool | None = None,
+                 cap="full"):
         # the slab repacking below is written for 32-bit chunk hashes; the
         # sharded ENGINE itself handles key_planes=2, the client does not
         assert cfg.key_planes == 1, (
@@ -260,10 +361,16 @@ class ShardedCacheClient:
         self.cfg = cfg
         self.mesh = mesh
         self.ndev = mesh.shape[axis]
+        self.cap = cap
+        self._s_local = cfg.num_sets // self.ndev
         self._run = make_sharded_engine(
-            cfg, mesh, axis=axis, cap="full", engine=engine,
+            cfg, mesh, axis=axis, cap=cap, engine=engine,
             use_kernel=use_kernel, block_b=block_b, interpret=interpret)
         self.table = shard_table(init_table(cfg), mesh, axis)
+        self.sheds = 0          # total rows shed by the capacity pre-check
+        self.shed_groups = 0    # total groups (chains / plain rows) shed
+        self.last_shed = None   # (n,) bool, caller order, of the last access
+        self.route_shape = None  # (q, k_depth, payload planes) of last call
 
     def access(self, keys, vals=None, ops=None, chain_ids=None):
         keys = np.asarray(keys, np.int32).reshape(-1)
@@ -300,17 +407,49 @@ class ShardedCacheClient:
             else:
                 merged[gk] = list(g)
                 order.append(gk)
-        slabs: list[list[int]] = [[] for _ in range(self.ndev)]
+        slab_groups: list[list[list[int]]] = [[] for _ in range(self.ndev)]
         for j, gk in enumerate(order):
-            slabs[j % self.ndev].extend(merged[gk])
+            slab_groups[j % self.ndev].append(merged[gk])
 
-        q = max(1, max(len(s) for s in slabs))
+        # q (and hence the per-peer depth) is fixed from the un-shed packing
+        # so the shapes the engine compiles for do not depend on shed luck
+        q = max(1, max(sum(len(g) for g in gs) for gs in slab_groups))
         q = 1 << (q - 1).bit_length()
+        k_depth = per_peer_cap(self.cap, q, self.ndev)
+
+        # host-side shed pre-check: mirror the device's per-(slab, owner)
+        # rank counting in slab order, at GROUP granularity — if any row of
+        # a group would overflow its owner's per-peer depth, the whole
+        # group is shed (atomically) and retried by the serving tier
+        shed = np.zeros(n, bool)
+        slabs: list[list[int]] = []
+        if self.cap != "full":
+            owners = np.asarray(
+                set_index_for(self.cfg, jnp.asarray(keys[:, None]))
+            ) // self._s_local
+            for gs in slab_groups:
+                counts = np.zeros(self.ndev, np.int64)
+                rows: list[int] = []
+                for g in gs:
+                    gcnt = np.bincount(owners[g], minlength=self.ndev)
+                    if np.any(counts + gcnt > k_depth):
+                        shed[g] = True
+                        self.shed_groups += 1
+                        continue
+                    counts += gcnt
+                    rows.extend(g)
+                slabs.append(rows)
+            self.sheds += int(shed.sum())
+        else:
+            slabs = [[i for g in gs for i in g] for gs in slab_groups]
+        self.last_shed = shed
+
         bp = q * self.ndev
         k = np.zeros(bp, np.int32)
         vv = np.zeros((bp, v), np.int32)
         oo = np.full(bp, OP_LOOKUP, np.int32)          # padding: no-op probe
         cc = np.zeros(bp, np.int32)
+        od = n + np.arange(bp, dtype=np.int32)         # padding ranks: last
         src = np.full(bp, -1, np.int64)                # row -> caller index
         for d, slab in enumerate(slabs):
             # renumber chain ids slab-locally: first-row index of the chain
@@ -320,30 +459,40 @@ class ShardedCacheClient:
                 k[row] = keys[i]
                 vv[row] = vals[i]
                 oo[row] = ops[i]
+                od[row] = i                            # caller-order rank
                 src[row] = i
                 if is_chain[i]:
                     cid = int(chain_ids[i])
                     local_first.setdefault(cid, r)
                     cc[row] = local_first[cid]
+        self.route_shape = (q, k_depth, 1 + v + 3)     # key+val+op+live+order
 
         self.table, hit, val, served, ev_val, ev_ok = self._run(
             self.table, jnp.asarray(k[:, None]), jnp.asarray(vv),
-            jnp.asarray(oo), jnp.asarray(cc))
+            jnp.asarray(oo), jnp.asarray(cc), order=jnp.asarray(od))
+        # the pre-check guarantees every admitted row fits its per-peer
+        # buffer; a violation means the host mirror and device ranks drifted
         assert bool(np.asarray(served)[src >= 0].all()), "client overflow"
 
-        inv = np.zeros(n, np.int64)
-        inv[src[src >= 0]] = np.nonzero(src >= 0)[0]
-        hit = np.asarray(hit)[inv]
-        val = np.asarray(val)[inv][:, :v] if v else np.zeros((n, 0), np.int32)
-        ev_ok_u = np.asarray(ev_ok)[inv]
-        ev_val_u = (np.asarray(ev_val)[inv][:, :v] if v
-                    else np.zeros((n, 0), np.int32))
+        sel = src >= 0
+        rows = np.nonzero(sel)[0]
+        idx = src[rows]
+        hit_u = np.zeros(n, bool)
+        hit_u[idx] = np.asarray(hit)[rows]
+        val_u = np.zeros((n, v), np.int32)
+        if v:
+            val_u[idx] = np.asarray(val)[rows][:, :v]
+        ev_ok_u = np.zeros(n, bool)
+        ev_ok_u[idx] = np.asarray(ev_ok)[rows]
+        ev_val_u = np.zeros((n, v), np.int32)
+        if v:
+            ev_val_u[idx] = np.asarray(ev_val)[rows][:, :v]
         ev_key = np.where(ev_ok_u[:, None], 0,
                           EMPTY_KEY).astype(np.int32)
         ev_key = np.broadcast_to(ev_key, (n, self.cfg.key_planes))
         return AccessResult(
-            hit=hit,
-            value=val,
+            hit=hit_u,
+            value=val_u,
             pos=np.full(n, -1, np.int32),
             evicted_key=ev_key,
             evicted_val=ev_val_u,
@@ -359,22 +508,45 @@ class ShardedCacheClient:
 def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",
                                cap: int | None = None, batch: int = 4096,
                                engine: str = "rounds", **engine_kwargs):
-    """scan the sharded engine over a long stream (throughput/scaling bench)."""
-    engine = make_sharded_engine(cfg, mesh, axis, cap, engine=engine,
-                                 **engine_kwargs)
+    """Scan the sharded engine over a long stream (throughput/scaling bench).
+
+    Parity with every other engine entry point: ``run(table, qkeys, qvals,
+    ops=None, chain_ids=None)`` — ``ops`` (N,) per-query opcodes and
+    ``chain_ids`` (N,) per-query chain segment ids (device-local per batch,
+    requires ``ops``) reshape alongside the query stream, one (batch,)
+    slice per scan step.  ``ops=None`` stays the separately-compiled
+    ACCESS-only specialization (no ops plane in the all_to_all).  Returns
+    (table, hits, served) — ``served`` counts non-shed queries, so
+    ``1 - served/n`` is the stream's shed rate under a bounded ``cap``.
+    """
+    eng = make_sharded_engine(cfg, mesh, axis, cap, engine=engine,
+                              **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run(table, qkeys, qvals):
+    def run_stream(table, qkeys, qvals, ops, chain_ids):
+        # ops/chain_ids=None are distinct (static) pytree structures: the
+        # ACCESS-only and no-chain paths compile without those planes
         n = qkeys.shape[0] // batch * batch
         qk = qkeys[:n].reshape(-1, batch, qkeys.shape[-1])
         qv = qvals[:n].reshape(-1, batch, qvals.shape[-1])
+        qo = None if ops is None else ops[:n].reshape(-1, batch)
+        qc = None if chain_ids is None else chain_ids[:n].reshape(-1, batch)
 
         def step(tbl, xs):
-            k, q = xs
-            tbl, hit, _val, served = engine(tbl, k, q)
+            k, q, o, c = xs
+            out = eng(tbl, k, q, o, c)
+            tbl, hit, _val, served = out[:4]   # chain mode appends evicted
             return tbl, (jnp.sum(hit), jnp.sum(served))
 
-        table, (hits, served) = jax.lax.scan(step, table, (qk, qv))
+        table, (hits, served) = jax.lax.scan(step, table, (qk, qv, qo, qc))
         return table, jnp.sum(hits), jnp.sum(served)
+
+    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+        if ops is not None:
+            ops = jnp.asarray(ops, jnp.int32)
+        if chain_ids is not None:
+            assert ops is not None, "chain_ids requires an ops vector"
+            chain_ids = jnp.asarray(chain_ids, jnp.int32)
+        return run_stream(table, qkeys, qvals, ops, chain_ids)
 
     return run

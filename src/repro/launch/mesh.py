@@ -60,7 +60,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_cache_mesh(n_devices: int | None = None):
-    """1-D mesh over all (or n) devices for the sharded key-value cache."""
+    """1-D mesh over all (or n) devices for the sharded key-value cache.
+
+    For CPU-only multi-device runs (the sharded tests / benches), set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE the first
+    jax import — the fake-device count is locked at backend init, which is
+    why those runs live in subprocesses (see tests/test_sharded_engine.py
+    and benchmarks/sharded_bench.py).
+    """
     n = n_devices or len(jax.devices())
     return make_mesh_compat((n,), ("cache",))
 

@@ -43,15 +43,43 @@ call:
   pages release *first*, so a near-full pool can re-fund this same tick's
   remaining inserts from its own evictions (one extra ACCESS call, only
   under pressure).
+* **Decode-overlapped waves** — the tick's decode launch is issued right
+  after the wave-0 prefill and BEFORE the borrower waves: on device, the
+  wave-2 (borrower) prefill runs concurrently with wave-1 decode
+  (continuous batching inside the tick), hiding the dedupe wave's latency.
+  The decode consumes a snapshot of the cache and its rows are merged back
+  per-slot (the prefill waves touch disjoint slots), so tokens are
+  bit-identical to the sequential launch order.  A borrower slot that
+  lands exactly on the tick's decode position gets a follow-up decode
+  launch after its wave, preserving the tick schedule exactly.
+
+Shed / retry protocol (capacity-bounded sharded backends)
+---------------------------------------------------------
+A bounded ``ShardedCacheClient(cap=...)`` backend sheds whole chains when
+a tick would overflow a shard's per-peer all_to_all buffers.  A shed
+request releases its slot and staged pages and moves to ``retry_queue``;
+the next tick re-admits it ahead of the regular queue (counted in
+``PrefixCache.stats()["retried"]``).  After ``max_shed_retries`` sheds a
+request falls back to plain (cache-less) prefill, guaranteeing progress
+even for a chain that can never fit its home shard's buffers.  One corner
+needs care: a shed chain may be the intra-tick dedupe OWNER of a chunk a
+*served* borrower inserted (the borrower's CHAIN_PUT carried the owner's
+reserved page).  The table then maps the chunk to a page the owner will
+never write — so the reconciliation *promotes* the first such borrower to
+owner: it commits the page and writes its content during the borrower's
+prefill.  With no executing borrower the page simply aborts back to the
+pool.
 
 ``admit_batching=False`` degrades to one-at-a-time split admission (the
 equivalence baseline); ``admit_mode="split"`` keeps PR-2's batched
-3-call path (one LOOKUP + one GET + one ACCESS per tick).
+3-call path (one LOOKUP + one GET + one ACCESS per tick — no retry: on
+that path a bounded backend's sheds degrade to forced misses).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import numpy as np
@@ -76,6 +104,8 @@ class Request:
     pinned_pages: list = dataclasses.field(default_factory=list)
     prefill_skipped: int = 0
     prefill_computed: int = 0
+    shed_count: int = 0          # times a bounded backend shed this chain
+    force_plain: bool = False    # bypass the prefix cache (shed fallback)
 
 
 def continuation_prefill(cfg: ArchConfig, params, tokens, kv_prefix, prefix_len):
@@ -235,7 +265,8 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, prefix_cache: PrefixCache | None = None,
                  pool: PagedKVPool | None = None, eos_token: int = -1,
-                 admit_batching: bool = True, admit_mode: str | None = None):
+                 admit_batching: bool = True, admit_mode: str | None = None,
+                 overlap_decode: bool = True, max_shed_retries: int = 3):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -269,8 +300,11 @@ class ServeEngine:
         ) if self.use_prefix else None
         self._prefill_plain = jax.jit(model.prefill)
         self.queue: list[Request] = []
+        self.retry_queue: list[Request] = []   # shed chains, next-tick pri
         self.finished: list[Request] = []
         self.admit_batching = admit_batching
+        self.overlap_decode = overlap_decode
+        self.max_shed_retries = max_shed_retries
         # "fused" (default): one cache call + batched prefill per tick;
         # "split": PR-2's LOOKUP+GET+ACCESS path (equivalence baseline).
         self.admit_mode = admit_mode or ("fused" if admit_batching
@@ -291,7 +325,8 @@ class ServeEngine:
         time admission could reuse it immediately; the fused path's
         reserve-then-commit protocol recycles same-tick)."""
         ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
-        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct]
+        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct
+                and not r.force_plain]
         pref_ids = {id(r) for r in pref}
         plain = [r for r in reqs if id(r) not in pref_ids]
 
@@ -372,6 +407,9 @@ class ServeEngine:
     def _admit_fused(self, reqs: list[Request]):
         """Admit a whole tick through ONE ``serve_chains`` call plus one
         batched prefill launch per dependency wave (see module docstring).
+        Runs the wave-0 prefill inline and returns ``(pending, late)``:
+        thunks for the borrower waves (``step`` interleaves them with the
+        tick's decode launch) and the rids admitted in those waves.
 
         Page protocol per staged chunk, after the call:
           * inside the hit prefix      -> ``abort`` (chunk was cached)
@@ -382,18 +420,23 @@ class ServeEngine:
             value == our page          -> ``commit`` (a same-tick borrower
             carrying our page id won a cross-shard race; the table holds
             OUR page, so it must live and we write its content)
+          * owner chain SHED           -> promote the first served borrower
+            whose insert carried the page (commit; the borrower writes the
+            content), else ``abort``
         Evicted pages release before the reconciliation, so the
         pressure-retry pass can re-fund unfunded inserts from this tick's
         own evictions (one extra ACCESS call, only when it fires).
         """
         ct = self.prefix_cache.chunk_tokens if self.use_prefix else 0
-        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct]
+        pref = [r for r in reqs if self.use_prefix and len(r.prompt) >= ct
+                and not r.force_plain]
         pref_ids = {id(r) for r in pref}
         plain = [r for r in reqs if id(r) not in pref_ids]
 
         chains = [chunk_chain_hashes(r.prompt, ct) for r in pref]
         # --- stage pages: intra-tick dedupe + reserve --------------------
         owner: dict[int, tuple[int, int, bool]] = {}  # hash -> (c, page, ok)
+        borrowers: dict[int, list[tuple[int, int]]] = {}  # hash -> [(c, t)]
         staged: list[list[int]] = []
         own: list[list[bool]] = []
         for c, chain in enumerate(chains):
@@ -404,6 +447,7 @@ class ServeEngine:
                     oc, pg, funded = owner[h]
                     if not funded:
                         break              # keep the funded run a prefix
+                    borrowers.setdefault(h, []).append((c, len(vals)))
                     vals.append(pg)
                     owns.append(False)     # borrowed: the owner's page
                 else:
@@ -419,7 +463,8 @@ class ServeEngine:
 
         evicted_set: set[int] = set()
         if pref:
-            results, evicted = self.prefix_cache.serve_chains(chains, staged)
+            results, evicted = self.prefix_cache.serve_chains(
+                chains, staged, retries=[r.shed_count > 0 for r in pref])
             evicted_set = set(evicted)
             for pg in evicted:
                 self.pool.release(pg)
@@ -434,6 +479,28 @@ class ServeEngine:
             for t, (pg, is_own) in enumerate(zip(staged[c], own[c])):
                 if not is_own:
                     continue               # the owner reconciles this page
+                if r.shed:
+                    # the owner never reached the device, but a SERVED
+                    # borrower's CHAIN_PUT may have inserted our page id:
+                    # promote the first one to owner so the published entry
+                    # gets real content (it writes the page in its prefill)
+                    promoted = False
+                    for c2, t2 in borrowers.get(chain[t], []):
+                        r2 = results[c2]
+                        if r2.shed or t2 < r2.hitlen or t2 >= len(r2.puts):
+                            continue       # borrower row did not insert
+                        absorbed2, stored2 = r2.puts[t2]
+                        if absorbed2 and stored2 != pg:
+                            break          # chunk resident under another pg
+                        self.pool.commit(pg)
+                        if pg not in evicted_set:
+                            to_write[c2].append((t2, pg))
+                            published[chain[t]] = (c2, pg)
+                        promoted = True
+                        break
+                    if not promoted:
+                        self.pool.abort(pg)
+                    continue
                 if t < r.hitlen:
                     self.pool.abort(pg)    # chunk was already cached
                     continue
@@ -451,9 +518,19 @@ class ServeEngine:
                     to_write[c].append((t, pg))
                     published[chain[t]] = (c, pg)
 
+        # --- shed chains: release the slot, retry next tick ---------------
+        for c, req in enumerate(pref):
+            if results[c].shed:
+                req.shed_count += 1
+                self._free_slots.append(req.slot)
+                req.slot = -1
+                self.retry_queue.append(req)
+
         # --- pressure retry: fund leftover inserts from recycled pages ----
         retry: list[tuple[int, int, list[int], list[int]]] = []
         for c, chain in enumerate(chains):
+            if results[c].shed:
+                continue
             start = max(results[c].hitlen, len(staged[c]))
             sub_h: list[int] = []
             sub_p: list[int] = []
@@ -487,15 +564,16 @@ class ServeEngine:
 
         # --- prefill jobs: effective prefix + dependency waves ------------
         jobs = []
-        wave_of: dict[int, int] = {}
         for c, (req, chain) in enumerate(zip(pref, chains)):
             r = results[c]
+            if r.shed:
+                continue
             pages = list(r.pages)
+            deps: set[int] = set()
             if r.hitlen * ct >= len(req.prompt):
                 # fully-cached chunk-aligned prompt: always compute at
                 # least the last chunk
                 pages = pages[:-1]
-            wave = 0
             if len(pages) == r.hitlen:     # untrimmed: try dedupe extension
                 t = r.hitlen
                 while t < len(chain) and (t + 1) * ct < len(req.prompt):
@@ -503,16 +581,46 @@ class ServeEngine:
                     if pub is None or pub[0] == c:
                         break
                     pages.append(pub[1])   # gather the owner's page
-                    wave = max(wave, wave_of.get(pub[0], 0) + 1)
+                    deps.add(pub[0])       # ... after the owner WRITES it
                     t += 1
-            wave_of[c] = wave
-            jobs.append({"req": req, "c": c, "pages": pages, "wave": wave})
+            # register now so the tick's decode schedule (cur = min over
+            # active) already accounts for the later-wave admits
+            self.cur_len[req.slot] = len(req.prompt)
+            self.active[req.rid] = req
+            jobs.append({"req": req, "c": c, "pages": pages, "deps": deps})
 
-        for w in range(max((j["wave"] for j in jobs), default=-1) + 1):
-            self._prefill_wave([j for j in jobs if j["wave"] == w],
-                               to_write, chains, ct)
+        # a gatherer must run STRICTLY after every chain whose published
+        # pages it gathers has written them.  Publishers are not always
+        # earlier-indexed chains (a promoted borrower, or the pressure
+        # retry funding a chunk another chain's broken staging skipped), so
+        # the waves come from a fixpoint over the dependency edges — the
+        # relation is acyclic because a chunk hash pins its chain depth:
+        # writes always sit at or past the writer's gather frontier.
+        wave_of = {j["c"]: 0 for j in jobs}
+        for _ in range(len(jobs)):
+            changed = False
+            for j in jobs:
+                w = max((wave_of[p] + 1 for p in j["deps"]), default=0)
+                if w != wave_of[j["c"]]:
+                    wave_of[j["c"]] = w
+                    changed = True
+            if not changed:
+                break
+        for j in jobs:
+            j["wave"] = wave_of[j["c"]]
+
+        self._prefill_wave([j for j in jobs if j["wave"] == 0],
+                           to_write, chains, ct)
+        pending = []
+        late: set[int] = set()
+        for w in range(1, max((j["wave"] for j in jobs), default=-1) + 1):
+            jw = [j for j in jobs if j["wave"] == w]
+            pending.append(functools.partial(
+                self._prefill_wave, jw, to_write, chains, ct))
+            late.update(j["req"].rid for j in jw)
 
         self._admit_plain(plain)
+        return pending, late
 
     def _prefill_wave(self, jobs, to_write, chains, ct):
         """One bucket-padded batched prefill launch for ``jobs``."""
@@ -598,6 +706,36 @@ class ServeEngine:
             cache["xv"] = cache["xv"].at[:, slot].set(pc["xv"][:, 0])
         self.cache = cache
 
+    def _merge_cache(self, new_cache, accept: np.ndarray):
+        """Keep ``new_cache``'s rows only for the accepted slots (every
+        cache leaf carries the slot axis at position 1).
+
+        Also the fix for a long-standing wart: a decode tick used to write
+        EVERY slot's cache at position ``cur``, clobbering the real entry
+        of any slot whose cur_len > cur.  Masking per slot makes each
+        slot's token stream independent of decode-launch membership, which
+        is what lets the overlapped-wave schedule stay token-identical to
+        the sequential baseline."""
+        if not accept.any():
+            return
+        if accept.all():
+            self.cache = new_cache
+            return
+        mask = jnp.asarray(accept)
+
+        def sel(new, old):
+            m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        self.cache = jax.tree.map(sel, new_cache, self.cache)
+
+    def _decode_tokens(self) -> np.ndarray:
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for r in self.active.values():
+            if r.out_tokens:
+                tokens[r.slot, 0] = r.out_tokens[-1]
+        return tokens
+
     # -- main loop -------------------------------------------------------------
     def step(self):
         """One engine tick: admit all free slots, decode one token each.
@@ -606,21 +744,32 @@ class ServeEngine:
         one fused call (``admit_mode="fused"``, default — ~1 cache-engine
         call per tick) or the PR-2 3-call path (``admit_mode="split"``).
         ``admit_batching=False`` degrades to one-at-a-time split admission
-        — the equivalence baseline."""
+        — the equivalence baseline.  Shed requests re-admit from
+        ``retry_queue`` ahead of the regular queue.  With
+        ``overlap_decode`` (default) the tick's decode launch is issued
+        between the wave-0 and borrower prefill launches, so the dedupe
+        waves run concurrently with decode on device."""
         admits = []
-        while self.queue and self._free_slots:
-            req = self.queue.pop(0)
+        while self._free_slots and (self.retry_queue or self.queue):
+            src = self.retry_queue if self.retry_queue else self.queue
+            req = src.pop(0)
+            if req.shed_count >= self.max_shed_retries:
+                req.force_plain = True     # guaranteed progress
             req.slot = self._free_slots.pop()
             admits.append(req)
+        pending: list = []
+        late: set[int] = set()
         if admits:
             if not self.admit_batching:
                 for req in admits:
                     self._admit_split([req])
             elif self.admit_mode == "fused":
-                self._admit_fused(admits)
+                pending, late = self._admit_fused(admits)
             else:
                 self._admit_split(admits)
         if not self.active:
+            for th in pending:
+                th()
             return
         # decode uses a single cur_len: engine ticks groups of equal length;
         # for simplicity all slots share max(cur_len of active) semantics by
@@ -628,12 +777,47 @@ class ServeEngine:
         # here we step slots whose cur_len equals the minimum (round-robin).
         lens = {r.slot: self.cur_len[r.slot] for r in self.active.values()}
         cur = int(min(lens.values()))
-        tokens = np.zeros((self.slots, 1), np.int32)
+        late_slots = {r.slot for r in self.active.values() if r.rid in late}
+        nxt = np.zeros(self.slots, np.int64)
+        accept = np.zeros(self.slots, bool)
         for r in self.active.values():
-            tokens[r.slot, 0] = r.out_tokens[-1]
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+            accept[r.slot] = self.cur_len[r.slot] == cur
+        if pending and self.overlap_decode:
+            # decode launch first (ready slots, cache snapshot), THEN the
+            # borrower waves — on device the wave-2 prefill overlaps the
+            # wave-1 decode; the caches merge per disjoint slot sets
+            tokens = self._decode_tokens()
+            logits_a, cache_a = self._decode(
+                self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
+            for th in pending:
+                th()
+            accept_a = accept.copy()
+            for s in late_slots:
+                accept_a[s] = False
+            self._merge_cache(cache_a, accept_a)
+            nxt_a = np.asarray(jnp.argmax(logits_a, -1))
+            nxt[accept_a] = nxt_a[accept_a]
+            late_due = accept & ~accept_a
+            if late_due.any():
+                # a borrower slot landed exactly on this tick's decode
+                # position: give it its decode now that its prefill ran,
+                # preserving the tick schedule of the sequential order
+                tokens_b = self._decode_tokens()
+                logits_b, cache_b = self._decode(
+                    self.params, jnp.asarray(tokens_b), self.cache,
+                    jnp.int32(cur))
+                self._merge_cache(cache_b, late_due)
+                nxt_b = np.asarray(jnp.argmax(logits_b, -1))
+                nxt[late_due] = nxt_b[late_due]
+        else:
+            for th in pending:
+                th()
+            tokens = self._decode_tokens()
+            logits, cache_n = self._decode(
+                self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
+            self._merge_cache(cache_n, accept)
+            nxt_n = np.asarray(jnp.argmax(logits, -1))
+            nxt[accept] = nxt_n[accept]
         done = []
         for r in self.active.values():
             if self.cur_len[r.slot] == cur:
@@ -653,7 +837,7 @@ class ServeEngine:
 
     def run_until_done(self, max_ticks: int = 10000):
         t = 0
-        while (self.queue or self.active) and t < max_ticks:
+        while (self.queue or self.retry_queue or self.active) and t < max_ticks:
             self.step()
             t += 1
         return t

@@ -39,8 +39,24 @@ chain-op contract.
 same ``access``/``occupancy`` interface — e.g.
 ``core.sharded.ShardedCacheClient``, which routes the same one-call tick
 through a set-sharded mesh engine (chain ids ride the all_to_all payload).
+With the client's canonical caller-order ranks the sharded table is
+*bit-equal* to the local engine — the table comparison in the sharded
+serving tests is a regression oracle, not an equivalence workaround.
 ``device_calls`` counts engine invocations — exactly one per ``_call``,
 on every path — for benchmarks and the calls-per-tick acceptance tests.
+
+Sheds and retries
+-----------------
+A capacity-bounded backend (``ShardedCacheClient(cap=...)``) may *shed*
+whole chains when a tick would overflow a shard's per-peer buffers; it
+reports them via a ``last_shed`` caller-order mask.  ``serve_chains``
+surfaces a shed chain as ``ChainServe(shed=True)`` — none of its rows
+executed (the client sheds atomically), it contributes nothing to
+hit/miss stats, and the caller re-submits it next tick (``ServeEngine``
+keeps the retry queue; pass ``retries`` flags so ``stats()["retried"]``
+counts re-submissions).  ``stats()`` reports ``shed`` (chain-events) and
+``retried`` alongside the hit/miss/eviction counters, so benchmarks can
+report shed rate against hit-ratio and buffer-memory curves.
 """
 
 from __future__ import annotations
@@ -81,14 +97,17 @@ class ChainServe:
     per staged chunk: ``None`` if the row did not execute (inside the hit
     prefix), else ``(absorbed, stored_value)`` where ``absorbed`` means the
     insert hit an already-resident chunk and ``stored_value`` is the page
-    the cache actually holds for it."""
+    the cache actually holds for it.  ``shed=True`` means a capacity-
+    bounded backend dropped the WHOLE chain this tick (no row executed, no
+    stats counted) — re-submit it next tick."""
 
-    __slots__ = ("pages", "hitlen", "puts")
+    __slots__ = ("pages", "hitlen", "puts", "shed")
 
-    def __init__(self, pages, hitlen, puts):
+    def __init__(self, pages, hitlen, puts, shed=False):
         self.pages = pages
         self.hitlen = hitlen
         self.puts = puts
+        self.shed = shed
 
 
 class PrefixCache:
@@ -111,12 +130,16 @@ class PrefixCache:
         self.misses = 0
         self.evictions = 0
         self.device_calls = 0
+        self.shed = 0      # chain-events a bounded backend dropped
+        self.retried = 0   # chains re-submitted after a shed
 
     # -- batched engine access ----------------------------------------------
     def _call(self, keys: list[int], ops, vals: list[int] | None = None,
               chain_ids: list[int] | None = None):
         """ONE engine invocation over ``keys``; ``ops`` is a scalar opcode
         or a per-row vector; ``chain_ids`` enables the fused chain ops.
+        Returns ``(result, shed)`` — ``shed`` is a (n,) bool mask of rows a
+        capacity-bounded backend dropped (all-False for the local engine).
 
         The batch is padded to the next power of two with OP_LOOKUP rows on
         key 0 (chunk hashes are odd, so key 0 is never resident, and LOOKUP
@@ -126,6 +149,9 @@ class PrefixCache:
         not the per-row opcode selects, are what dominates; that is also
         why this passes an explicit ops vector rather than the ACCESS-only
         ``ops=None`` specialization (padding requires mixed ops).
+        Backends that repack internally (``self_padding``, e.g. the sharded
+        client's pow2 slabs) skip the padding here — their padding rows
+        must not compete with real rows for bounded per-peer buffers.
 
         ``device_calls`` counts exactly one per invocation — never per row,
         page, or recycled duplicate — so bench numbers are comparable
@@ -133,7 +159,8 @@ class PrefixCache:
         """
         self.device_calls += 1
         n = len(keys)
-        bp = 1 << (n - 1).bit_length()
+        bp = (n if getattr(self.cache, "self_padding", False)
+              else 1 << (n - 1).bit_length())
         k = np.zeros(bp, np.int32)
         k[:n] = keys
         v = np.zeros((bp, 1), np.int32)
@@ -146,25 +173,34 @@ class PrefixCache:
             c = np.zeros(bp, np.int32)
             c[:n] = chain_ids
         res = self.cache.access(k, v, ops=o, chain_ids=c)
-        if bp == n:
-            return res
-        return res._replace(**{f: np.asarray(getattr(res, f))[:n]
-                               for f in res._fields})
+        shed = getattr(self.cache, "last_shed", None)
+        shed = (np.zeros(n, bool) if shed is None
+                else np.asarray(shed)[:n])
+        if bp != n:
+            res = res._replace(**{f: np.asarray(getattr(res, f))[:n]
+                                  for f in res._fields})
+        return res, shed
 
     # -- fused one-call tick -------------------------------------------------
     def serve_chains(self, chains: list[list[int]],
-                     staged: list[list[int]]):
+                     staged: list[list[int]],
+                     retries: list[bool] | None = None):
         """One device call for a whole tick's chains (lookup + promote +
         conditional insert).
 
         ``staged[c]`` holds page values for a *prefix* of chain ``c``'s
         chunks (the chunks the caller could fund; shorter lists simply
         leave the tail unpublished, like an alloc failure in the split
-        path).  Returns ``(results, evicted)``: a ``ChainServe`` per chain
-        and the evicted page values to recycle.  Hit/miss/eviction stats
-        are identical to ``lookup_chains`` + ``insert_chains`` on the same
-        tick.
+        path).  ``retries[c]`` marks a chain re-submitted after a shed (for
+        the ``retried`` counter).  Returns ``(results, evicted)``: a
+        ``ChainServe`` per chain and the evicted page values to recycle.
+        Hit/miss/eviction stats are identical to ``lookup_chains`` +
+        ``insert_chains`` on the same tick.  A chain a bounded backend shed
+        comes back as ``ChainServe(shed=True)`` — nothing executed, nothing
+        counted; the caller re-submits it next tick.
         """
+        if retries is not None:
+            self.retried += sum(bool(r) for r in retries)
         ks: list[int] = []
         ops: list[int] = []
         vals: list[int] = []
@@ -184,7 +220,7 @@ class PrefixCache:
         if not ks:
             return [ChainServe([], 0, []) for _ in chains], []
 
-        out = self._call(ks, ops, vals=vals, chain_ids=cids)
+        out, shed = self._call(ks, ops, vals=vals, chain_ids=cids)
         hit = np.asarray(out.hit)
         val = np.asarray(out.value)[:, 0]
         ev_ok = np.asarray(out.evicted_valid)
@@ -192,10 +228,27 @@ class PrefixCache:
         evicted = [int(x) for x, ok in zip(ev_val, ev_ok) if bool(ok)]
         self.evictions += len(evicted)
 
+        # a shed is whole-chain (the client drops groups atomically): any
+        # shed row of a chain means none of its rows executed
+        chain_shed = np.zeros(len(chains), bool)
+        i = 0
+        for c, chain in enumerate(chains):
+            chain_shed[c] = bool(shed[i: i + len(chain)].any())
+            i += len(chain)
+        for c, chain in enumerate(chains):
+            m = min(len(staged[c]), len(chain))
+            chain_shed[c] |= bool(shed[i: i + m].any())
+            i += m
+        self.shed += int(chain_shed.sum())
+
         results: list[ChainServe] = []
         i = 0
-        for chain in chains:
+        for c, chain in enumerate(chains):
             n = len(chain)
+            if chain_shed[c]:
+                results.append(ChainServe([], 0, [], shed=True))
+                i += n
+                continue
             k = int(hit[i: i + n].sum())       # leading run by construction
             pages = [int(x) for x in val[i: i + k]]
             self.hits += k
@@ -205,6 +258,9 @@ class PrefixCache:
             i += n
         for c, chain in enumerate(chains):
             m = min(len(staged[c]), len(chain))
+            if chain_shed[c]:
+                i += m
+                continue
             k = results[c].hitlen
             puts = []
             for t in range(m):
@@ -230,17 +286,24 @@ class PrefixCache:
         flat = [h for c in chains for h in c]
         if not flat:
             return [[] for _ in chains]
-        out = self._call(flat, OP_LOOKUP)
+        out, shed = self._call(flat, OP_LOOKUP)
         hit = np.asarray(out.hit)
         val = np.asarray(out.value)[:, 0]
 
         pages: list[list[int]] = []
         promote: list[int] = []
+        promote_chain: list[int] = []      # promote row -> chain index
+        shed_chains: set[int] = set()
         i = 0
-        for chain in chains:
+        for ci, chain in enumerate(chains):
             got: list[int] = []
+            # on this split path a shed probe degrades to a forced miss
+            # (the fused ``serve_chains`` path is the one with atomic
+            # whole-chain shed + retry); it still counts in ``shed``
+            if shed[i: i + len(chain)].any():
+                shed_chains.add(ci)
             for j, h in enumerate(chain):
-                if not bool(hit[i + j]):
+                if not bool(hit[i + j]) or bool(shed[i + j]):
                     break
                 got.append(int(val[i + j]))
             i += len(chain)
@@ -248,9 +311,16 @@ class PrefixCache:
             if len(got) < len(chain):
                 self.misses += 1
             promote.extend(chain[: len(got)])
+            promote_chain.extend([ci] * len(got))
             pages.append(got)
         if promote:
-            self._call(promote, OP_GET)
+            # a shed promote row loses only its recency bump (the hit was
+            # already served from the probe); a chain counts ONCE however
+            # many of its rows shed across the two calls
+            _, pshed = self._call(promote, OP_GET)
+            shed_chains |= {c for c, s in zip(promote_chain, pshed)
+                            if bool(s)}
+        self.shed += len(shed_chains)
         return pages
 
     def insert_chains(self, chains: list[list[int]],
@@ -268,14 +338,24 @@ class PrefixCache:
         assert len(flat_k) == len(flat_p)
         if not flat_k:
             return []
-        out = self._call(flat_k, OP_ACCESS, vals=flat_p)
+        out, shed = self._call(flat_k, OP_ACCESS, vals=flat_p)
         hit = np.asarray(out.hit)
         ev_ok = np.asarray(out.evicted_valid)
         ev_val = np.asarray(out.evicted_val)[:, 0]
         evicted = [int(v) for v, ok in zip(ev_val, ev_ok) if bool(ok)]
         self.evictions += len(evicted)
         redundant = [int(p) for p, h in zip(flat_p, hit) if bool(h)]
-        return evicted + redundant
+        # shed insert rows never published: return their staged pages so
+        # the pool does not leak (split-path degradation; the fused path
+        # retries instead)
+        dropped = [int(p) for p, s in zip(flat_p, shed) if bool(s)]
+        if dropped:
+            i = 0
+            for ps in pages:
+                if shed[i: i + len(ps)].any():
+                    self.shed += 1
+                i += len(ps)
+        return evicted + redundant + dropped
 
     # -- single-chain conveniences (delegate to the batched path) ------------
     def lookup_chain(self, chain: list[int]) -> list[int]:
@@ -287,7 +367,10 @@ class PrefixCache:
         return self.insert_chains([chain], [pages])
 
     def delete(self, chain_hash: int) -> bool:
-        out = self._call([chain_hash], OP_DELETE)
+        out, shed = self._call([chain_hash], OP_DELETE)
+        if bool(shed[0]):
+            self.shed += 1
+            return False
         return bool(out.hit[0])
 
     def stats(self) -> dict:
@@ -298,4 +381,6 @@ class PrefixCache:
             "hit_ratio": self.hits / total if total else 0.0,
             "evictions": self.evictions,
             "occupancy": self.cache.occupancy,
+            "shed": self.shed,
+            "retried": self.retried,
         }

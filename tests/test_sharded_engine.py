@@ -1,11 +1,14 @@
 """Distributed cache engine: exactness across device counts (subprocess —
-the fake-device count is locked at first jax init)."""
+the fake-device count is locked at first jax init), canonical cross-shard
+ordering (bit-equality with the sequential engine), bounded-cap sheds, and
+the stream-runner op parity."""
 
 import json
 import subprocess
 import sys
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
@@ -115,12 +118,15 @@ def drive(backend):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
     eng.run_until_done()
     toks = {r.rid: r.out_tokens for r in eng.finished}
-    return pc.stats(), pool, toks
+    return pc, pool, toks
 
 mesh = make_mesh_compat((2,), ("cache",))
 mcfg = MSLRUConfig(num_sets=32, m=2, p=4, value_planes=1)
-st_s, pool_s, toks_s = drive(ShardedCacheClient(mcfg, mesh))
-st_l, pool_l, toks_l = drive(None)
+pc_s, pool_s, toks_s = drive(ShardedCacheClient(mcfg, mesh))
+pc_l, pool_l, toks_l = drive(None)
+st_s, st_l = pc_s.stats(), pc_l.stats()
+tbl_s = np.asarray(jax.device_get(pc_s.cache.table))
+tbl_l = np.asarray(pc_l.cache.table)
 print(json.dumps({
     "hits": [st_s["hits"], st_l["hits"]],
     "misses": [st_s["misses"], st_l["misses"]],
@@ -129,6 +135,7 @@ print(json.dumps({
     "held": [int(pool_s.refcount.sum()), int(pool_l.refcount.sum())],
     "ref_ok": bool((pool_s.refcount <= 1).all()),
     "toks_match": toks_s == toks_l,
+    "table_match": bool((tbl_s == tbl_l).all()),
 }))
 """
 
@@ -151,3 +158,246 @@ def test_sharded_prefix_cache_serving_parity_on_2_devices():
     assert rec["held"][0] == rec["held"][1]
     assert rec["ref_ok"]
     assert rec["toks_match"]
+    # canonical order: the regression ORACLE — sharded table bit-equal
+    assert rec["table_match"]
+
+
+# --- canonical cross-shard ordering: bit-equality with the local engine ----
+
+_BITEQ_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.core import MSLRUConfig
+from repro.core.sharded import ShardedCacheClient
+from repro.launch.mesh import make_mesh_compat
+from repro.serving.prefix_cache import PrefixCache
+
+NDEV = %(ndev)d
+mesh = make_mesh_compat((NDEV,), ("cache",))
+# capacity 4*NDEV slots vs 36 distinct chunks: real eviction pressure, so
+# a swapped absorbed/inserted role would leave a bit-different table
+mcfg = MSLRUConfig(num_sets=NDEV, m=2, p=2, value_planes=1)
+
+def drive(backend):
+    pc = PrefixCache(num_sets=mcfg.num_sets, m=2, p=2, chunk_tokens=8,
+                     backend=backend)
+    rng = np.random.default_rng(3)
+    base = [[(int(h) & 0x7FFFFFFF) | 1 for h in rng.integers(1, 2**30, 3)]
+            for _ in range(12)]
+    page = 0
+    for t in range(16):
+        chains = [base[(t + j) %% len(base)] for j in range(3)]
+        # same-tick DUPLICATE chains: the round-robin dealing sends the
+        # copies to DIFFERENT devices, so without the canonical order the
+        # absorbed/inserted roles (and hence the stored page values) could
+        # swap between the copies
+        chains.append(list(chains[0]))
+        chains.append(list(chains[1]))
+        staged = []
+        for ch in chains:
+            staged.append(list(range(page, page + len(ch))))
+            page += len(ch)
+        pc.serve_chains(chains, staged)
+    return pc
+
+pc_s = drive(ShardedCacheClient(mcfg, mesh))
+pc_l = drive(None)
+tbl_s = np.asarray(jax.device_get(pc_s.cache.table))
+tbl_l = np.asarray(pc_l.cache.table)
+print(json.dumps({
+    "table_match": bool((tbl_s == tbl_l).all()),
+    "stats_match": pc_s.stats() == pc_l.stats(),
+    "evictions": pc_l.stats()["evictions"],
+    "hits": pc_l.stats()["hits"],
+}))
+"""
+
+
+def _run_biteq(ndev: int) -> dict:
+    res = subprocess.run([sys.executable, "-c",
+                          _BITEQ_CHILD % {"ndev": ndev}],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("ndev", [2, 8])
+def test_cross_shard_duplicate_chains_bit_equal_table(ndev):
+    """Same-tick duplicate chains on DIFFERENT devices must leave the
+    sharded table bit-identical to the sequential engine — the canonical
+    (caller-order rank) all_to_all merge order makes the absorbed/inserted
+    roles deterministic, promoting the serving tier's stored-value compare
+    from a workaround to a regression oracle."""
+    rec = _run_biteq(ndev)
+    assert rec["table_match"], "sharded table diverged from local engine"
+    assert rec["stats_match"]
+    assert rec["evictions"] > 0      # the trace really exercised evictions
+
+
+# --- stream runner: ops/chain_ids parity (fast, 1-device mesh) -------------
+
+def test_sharded_stream_runner_mixed_ops_matches_sequential():
+    """``make_sharded_stream_runner`` now threads ``ops`` like every other
+    engine entry point: a mixed LOOKUP/GET/ACCESS/DELETE stream through the
+    scanned sharded engine must match the sequential oracle bit-for-bit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import MSLRUConfig, MultiStepLRUCache, init_table
+    from repro.core.sharded import make_sharded_stream_runner, shard_table
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("cache",))
+    cfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+    rng = np.random.default_rng(7)
+    n, batch = 2048, 512
+    keys = rng.integers(1, 1500, size=(n, 1)).astype(np.int32)
+    vals = keys.copy()
+    ops = rng.integers(0, 4, size=n).astype(np.int32)
+
+    run = make_sharded_stream_runner(cfg, mesh, batch=batch, cap="full",
+                                     engine="onepass")
+    tbl = shard_table(init_table(cfg), mesh)
+    tbl, hits, served = run(tbl, jnp.asarray(keys), jnp.asarray(vals),
+                            jnp.asarray(ops))
+    ref = MultiStepLRUCache(cfg)
+    out = ref.access_seq(keys[:, 0], vals=vals, ops=ops)
+    assert int(hits) == int(np.asarray(out.hit).sum())
+    assert int(served) == n
+    np.testing.assert_array_equal(np.asarray(jax.device_get(tbl)),
+                                  np.asarray(ref.table))
+
+
+def test_sharded_stream_runner_chain_ops_matches_batched():
+    """``chain_ids`` rides the stream runner too: a chain-op stream (one
+    chain batch per scan step) matches the local batched chain engine."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (MSLRUConfig, init_table, make_batched_engine,
+                            OP_CHAIN_GET, OP_CHAIN_PUT, OP_LOOKUP)
+    from repro.core.sharded import make_sharded_stream_runner, shard_table
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("cache",))
+    cfg = MSLRUConfig(num_sets=32, m=2, p=2, value_planes=1)
+    rng = np.random.default_rng(11)
+    batch, steps = 16, 4
+    keys = np.zeros((batch * steps, 1), np.int32)
+    vals = np.zeros((batch * steps, 1), np.int32)
+    ops = np.full(batch * steps, OP_LOOKUP, np.int32)
+    cids = np.zeros(batch * steps, np.int32)
+    for s in range(steps):
+        chain = [(int(h) & 0x7FFFFFFF) | 1
+                 for h in rng.integers(1, 2**30, 3)]
+        base = s * batch
+        for j, h in enumerate(chain):          # CHAIN_GET island
+            keys[base + j, 0] = h
+            ops[base + j] = OP_CHAIN_GET
+            cids[base + j] = 0
+        for j, h in enumerate(chain):          # CHAIN_PUT island
+            keys[base + 3 + j, 0] = h
+            vals[base + 3 + j, 0] = 100 + s * 8 + j
+            ops[base + 3 + j] = OP_CHAIN_PUT
+            cids[base + 3 + j] = 0
+
+    run = make_sharded_stream_runner(cfg, mesh, batch=batch, cap="full",
+                                     engine="onepass")
+    tbl = shard_table(init_table(cfg), mesh)
+    tbl, hits, served = run(tbl, jnp.asarray(keys), jnp.asarray(vals),
+                            jnp.asarray(ops), jnp.asarray(cids))
+
+    ref_run = make_batched_engine(cfg, engine="onepass")
+    ref_tbl = init_table(cfg)
+    ref_hits = 0
+    for s in range(steps):
+        sl = slice(s * batch, (s + 1) * batch)
+        ref_tbl, res = ref_run(ref_tbl, jnp.asarray(keys[sl]),
+                               jnp.asarray(vals[sl]), ops[sl], cids[sl])
+        ref_hits += int(np.asarray(res.hit).sum())
+    assert int(hits) == ref_hits
+    assert int(served) == batch * steps
+    np.testing.assert_array_equal(np.asarray(jax.device_get(tbl)),
+                                  np.asarray(ref_tbl))
+
+
+# --- bounded caps: host shed pre-check mirrors the device route ------------
+
+def test_client_bounded_cap_sheds_whole_groups_atomically():
+    """A bounded ``ShardedCacheClient`` sheds whole chains (never a partial
+    chain), marks them in ``last_shed`` caller order, returns misses for
+    them, and the host pre-check exactly mirrors the device ranks (the
+    engine ``served`` assert inside access() would trip otherwise)."""
+    import jax.numpy as jnp  # noqa: F401  (jax init)
+    from repro.core import (MSLRUConfig, OP_CHAIN_GET, OP_CHAIN_PUT)
+    from repro.core.sharded import ShardedCacheClient
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("cache",))
+    cfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+    # 1 device: every row targets the single peer, so cap=8 admits the
+    # first chain (6 rows) and sheds the second (12 > 8)
+    cl = ShardedCacheClient(cfg, mesh, cap=8)
+    rng = np.random.default_rng(2)
+    c0 = [(int(h) & 0x7FFFFFFF) | 1 for h in rng.integers(1, 2**30, 3)]
+    c1 = [(int(h) & 0x7FFFFFFF) | 1 for h in rng.integers(1, 2**30, 3)]
+    keys = c0 + c1 + c0 + c1
+    ops = [OP_CHAIN_GET] * 6 + [OP_CHAIN_PUT] * 6
+    vals = np.zeros((12, 1), np.int32)
+    vals[6:9, 0] = [10, 11, 12]
+    vals[9:12, 0] = [20, 21, 22]
+    cids = [0, 0, 0, 1, 1, 1] * 2
+    res = cl.access(np.asarray(keys, np.int32), vals,
+                    ops=np.asarray(ops, np.int32),
+                    chain_ids=np.asarray(cids, np.int32))
+    shed = cl.last_shed
+    # chain 1's rows (GET and PUT islands both) shed together — atomically
+    c1_rows = np.asarray([c == 1 for c in cids])
+    assert shed[c1_rows].all()
+    assert not shed[~c1_rows].any()
+    assert cl.sheds == 6 and cl.shed_groups == 1
+    assert not res.hit[c1_rows].any()        # shed rows report plain misses
+    assert not res.evicted_valid[c1_rows].any()
+    # chain 0 executed normally: its PUT island inserted the staged pages
+    res2 = cl.access(np.asarray(c0, np.int32),
+                     ops=np.full(3, 3, np.int32))   # OP_LOOKUP
+    assert res2.hit.all()
+    assert list(res2.value[:, 0]) == [10, 11, 12]
+
+
+def test_overflow_rows_never_clobber_admitted_rows():
+    """Regression: overflow scatters used to clamp onto send-buffer slot
+    (ndev-1, k-1), overwriting the REAL row that legitimately filled the
+    per-peer depth — its op was silently dropped while reported served.
+    With a 2-chunk chain exactly filling cap=4 and a second (shed) chain
+    forcing pow2 padding past the depth, every admitted row must still
+    execute."""
+    import jax.numpy as jnp  # noqa: F401  (jax init)
+    from repro.core import MSLRUConfig, OP_CHAIN_GET, OP_CHAIN_PUT, OP_LOOKUP
+    from repro.core.sharded import ShardedCacheClient
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("cache",))
+    cfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+    cl = ShardedCacheClient(cfg, mesh, cap=4)
+    rng = np.random.default_rng(23)
+    c0 = [(int(h) & 0x7FFFFFFF) | 1 for h in rng.integers(1, 2**30, 2)]
+    c1 = [(int(h) & 0x7FFFFFFF) | 1 for h in rng.integers(1, 2**30, 2)]
+    keys = c0 + c1 + c0 + c1                     # GET islands, PUT islands
+    ops = [OP_CHAIN_GET] * 4 + [OP_CHAIN_PUT] * 4
+    vals = np.zeros((8, 1), np.int32)
+    vals[4:6, 0] = [10, 11]
+    vals[6:8, 0] = [20, 21]
+    cids = [0, 0, 1, 1] * 2
+    cl.access(np.asarray(keys, np.int32), vals,
+              ops=np.asarray(ops, np.int32),
+              chain_ids=np.asarray(cids, np.int32))
+    # chain 0 (4 rows) exactly fills k=4; chain 1 sheds; the slab pads to
+    # q=8, so 4 key-0 padding rows overflow the depth
+    assert cl.shed_groups == 1
+    res = cl.access(np.asarray(c0, np.int32),
+                    ops=np.full(2, OP_LOOKUP, np.int32))
+    assert list(res.hit) == [True, True]         # both PUT rows executed
+    assert list(res.value[:, 0]) == [10, 11]

@@ -1,0 +1,258 @@
+"""Shed/retry protocol: capacity-bounded backends, the ServeEngine retry
+queue, the plain-prefill fallback, and the shed-owner borrower promotion.
+
+Shed sources here are (a) a real ``ShardedCacheClient`` with a bounded cap
+on a 1-device mesh (every row targets the single peer, so an int cap
+deterministically sheds whole chains), and (b) a ``ForceShedBackend``
+wrapper that drops selected chain ids on selected calls — the only way to
+deterministically engineer the owner-shed/borrower-served corner."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import (MSLRUConfig, MultiStepLRUCache, OP_CHAIN_GET,
+                        OP_CHAIN_PUT)
+from repro.core.multistep import AccessResult
+from repro.core.sharded import ShardedCacheClient
+from repro.launch.mesh import make_mesh_compat
+from repro.models.model import make_model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+
+class ForceShedBackend:
+    """Local-cache wrapper that sheds the rows of selected chain ids on the
+    first ``shed_calls`` chain calls, mimicking ``ShardedCacheClient``'s
+    atomic whole-chain shed (dropped rows never reach the engine; the rest
+    execute in caller order)."""
+
+    batch_multiple = 1
+    self_padding = True   # keep caller row indexing 1:1 (no pow2 padding)
+
+    def __init__(self, cfg: MSLRUConfig, shed_cids, shed_calls: int = 1):
+        self.cfg = cfg
+        self.inner = MultiStepLRUCache(cfg)
+        self.shed_cids = set(shed_cids)
+        self.shed_calls = shed_calls
+        self.chain_calls = 0
+        self.last_shed = None
+
+    def access(self, keys, vals=None, ops=None, chain_ids=None):
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        n = keys.shape[0]
+        shed = np.zeros(n, bool)
+        if chain_ids is not None:
+            if self.chain_calls < self.shed_calls:
+                ops_a = np.asarray(ops)
+                cid = np.asarray(chain_ids)
+                is_chain = (ops_a == OP_CHAIN_GET) | (ops_a == OP_CHAIN_PUT)
+                shed = is_chain & np.isin(cid, list(self.shed_cids))
+            self.chain_calls += 1
+        self.last_shed = shed
+        keep = ~shed
+        v = self.cfg.value_planes
+        out = AccessResult(
+            hit=np.zeros(n, bool),
+            value=np.zeros((n, v), np.int32),
+            pos=np.full(n, -1, np.int32),
+            evicted_key=np.zeros((n, self.cfg.key_planes), np.int32),
+            evicted_val=np.zeros((n, v), np.int32),
+            evicted_valid=np.zeros(n, bool),
+        )
+        idx = np.nonzero(keep)[0]
+        if len(idx):
+            sub = self.inner.access(
+                keys[keep],
+                None if vals is None else np.asarray(vals)[keep],
+                ops=None if ops is None else np.asarray(ops)[keep],
+                chain_ids=(None if chain_ids is None
+                           else np.asarray(chain_ids)[keep]))
+            for f in out._fields:
+                np.asarray(getattr(out, f))[idx] = np.asarray(getattr(sub, f))
+        return out
+
+    @property
+    def occupancy(self):
+        return self.inner.occupancy
+
+
+def _setup_model():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _drive(cfg, model, params, prompts, backend, *, slots=2, n_pages=32,
+           chunk=16, sets=64):
+    pool = PagedKVPool(cfg, n_pages=n_pages, page_tokens=chunk)
+    pc = PrefixCache(num_sets=sets, m=2, p=4, chunk_tokens=chunk,
+                     backend=backend)
+    eng = ServeEngine(model, params, slots=slots, max_len=128,
+                      prefix_cache=pc, pool=pool)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=2))
+    eng.run_until_done()
+    return eng, pool, pc
+
+
+@pytest.mark.slow
+def test_bounded_client_sheds_are_retried_not_forced_misses():
+    """A bounded sharded backend sheds the second chain of a double-
+    admission tick; the request must come back through the retry queue and
+    serve with identical tokens to the unbounded run — and the shed must
+    show up in stats instead of silently becoming a forced miss."""
+    cfg, model, params = _setup_model()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab_size, 48 + i).astype(np.int32)
+               for i in range(4)]                     # 3 chunks each
+    mesh = make_mesh_compat((1,), ("cache",))
+    mcfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+
+    # cap=8 on 1 device: one 3-chunk chain = 6 rows fits, two chains = 12
+    # rows overflow -> the second admission of every double tick sheds
+    eng_b, pool_b, pc_b = _drive(cfg, model, params, prompts,
+                                 ShardedCacheClient(mcfg, mesh, cap=8))
+    eng_f, pool_f, pc_f = _drive(cfg, model, params, prompts,
+                                 ShardedCacheClient(mcfg, mesh, cap="full"))
+
+    assert len(eng_b.finished) == 4
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    assert toks(eng_b) == toks(eng_f)                # tokens unaffected
+    assert pc_b.stats()["shed"] > 0                  # sheds really happened
+    assert pc_b.stats()["retried"] > 0               # ... and were retried
+    assert pc_f.stats()["shed"] == 0
+    # every request eventually served through the prefix path (no silent
+    # forced misses): the retried chains hit/insert like the unbounded run
+    assert (pool_b.refcount <= 1).all()
+    assert pool_b.free_pages + int(pool_b.refcount.sum()) == pool_b.n_pages
+    assert len(pool_b._reserved) == 0
+
+
+@pytest.mark.slow
+def test_unserveable_chain_falls_back_to_plain_prefill():
+    """A chain that can NEVER fit the per-peer buffers (cap smaller than
+    one chain's rows) must not retry forever: after ``max_shed_retries``
+    sheds the request is admitted as a plain (cache-less) prefill with the
+    same tokens."""
+    cfg, model, params = _setup_model()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab_size, 48 + i).astype(np.int32)
+               for i in range(2)]
+    mesh = make_mesh_compat((1,), ("cache",))
+    mcfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+
+    eng_b, pool_b, pc_b = _drive(cfg, model, params, prompts,
+                                 ShardedCacheClient(mcfg, mesh, cap=2))
+    eng_f, pool_f, pc_f = _drive(cfg, model, params, prompts,
+                                 ShardedCacheClient(mcfg, mesh, cap="full"))
+
+    assert len(eng_b.finished) == 2
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    assert toks(eng_b) == toks(eng_f)
+    for r in eng_b.finished:
+        assert r.shed_count == eng_b.max_shed_retries
+        assert r.force_plain
+        assert r.prefill_skipped == 0                # served cache-less
+    assert pc_b.stats()["hits"] == 0
+    assert (pool_b.refcount == 0).all()              # nothing ever staged
+    assert len(pool_b._reserved) == 0
+
+
+@pytest.mark.slow
+def test_shed_owner_promotes_served_borrower():
+    """The gnarliest shed corner: two same-tick requests share every chunk;
+    the dedupe OWNER's chain is shed but the borrower's is served, so the
+    borrower's CHAIN_PUT rows inserted the owner's reserved pages.  The
+    reconciliation must promote the borrower to owner (commit + write the
+    page content in ITS prefill) — otherwise the table maps the chunks to
+    pages nobody ever writes, and the retried owner (or any later request)
+    would gather garbage KV."""
+    cfg, model, params = _setup_model()
+    rng = np.random.default_rng(9)
+    shared = rng.integers(1, cfg.vocab_size, 48).astype(np.int32)  # 3 chunks
+    prompts = [
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 3).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 5).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 7).astype(np.int32)]),
+    ]
+    mcfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+
+    # chain id 0 (the owner, first admit of the first tick) sheds on the
+    # first chain call only; the borrower (chain 1) is served
+    eng_s, pool_s, pc_s = _drive(cfg, model, params, prompts,
+                                 ForceShedBackend(mcfg, shed_cids=[0]))
+    eng_f, pool_f, pc_f = _drive(cfg, model, params, prompts, None)
+
+    assert len(eng_s.finished) == 3
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    # token equality is the strong check: rid 0 retried next tick and rid 2
+    # (admitted later) both GATHER the pages the promoted borrower wrote —
+    # garbage KV would change their tokens
+    assert toks(eng_s) == toks(eng_f)
+    r0 = [r for r in eng_s.finished if r.rid == 0][0]
+    assert r0.shed_count == 1
+    assert r0.prefill_skipped == 48                  # full 3-chunk reuse
+    assert pc_s.stats()["shed"] == 1
+    assert pc_s.stats()["retried"] == 1
+    assert (pool_s.refcount <= 1).all()
+    assert pool_s.free_pages + int(pool_s.refcount.sum()) == pool_s.n_pages
+    assert len(pool_s._reserved) == 0
+
+
+@pytest.mark.slow
+def test_all_chains_shed_aborts_all_reservations():
+    """When every chain of a tick sheds (no served borrower exists), all
+    reserved pages must abort straight back to the pool, and the whole
+    tick replays next tick with identical results."""
+    cfg, model, params = _setup_model()
+    rng = np.random.default_rng(13)
+    shared = rng.integers(1, cfg.vocab_size, 48).astype(np.int32)
+    prompts = [
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 3).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(1, cfg.vocab_size, 5).astype(np.int32)]),
+    ]
+    mcfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+
+    eng_s, pool_s, pc_s = _drive(cfg, model, params, prompts,
+                                 ForceShedBackend(mcfg, shed_cids=[0, 1]))
+    eng_f, pool_f, pc_f = _drive(cfg, model, params, prompts, None)
+
+    assert len(eng_s.finished) == 2
+    toks = lambda e: {r.rid: r.out_tokens for r in e.finished}
+    assert toks(eng_s) == toks(eng_f)
+    assert pc_s.stats()["shed"] == 2
+    assert pc_s.stats()["retried"] == 2
+    assert (pool_s.refcount <= 1).all()
+    assert pool_s.free_pages + int(pool_s.refcount.sum()) == pool_s.n_pages
+    assert len(pool_s._reserved) == 0
+
+
+def test_serve_chains_marks_shed_chains_and_counts_stats():
+    """PrefixCache-level contract: a shed chain comes back as
+    ``ChainServe(shed=True)``, contributes nothing to hit/miss stats, and
+    serves normally when re-submitted (counted in ``retried``)."""
+    mcfg = MSLRUConfig(num_sets=16, m=2, p=2, value_planes=1)
+    be = ForceShedBackend(mcfg, shed_cids=[1])
+    pc = PrefixCache(chunk_tokens=8, backend=be)
+    chains = [[11, 13, 15], [21, 23, 25]]
+    res, ev = pc.serve_chains(chains, [[1, 2, 3], [4, 5, 6]])
+    assert not res[0].shed and res[1].shed
+    assert res[1].hitlen == 0 and res[1].pages == [] and res[1].puts == []
+    st = pc.stats()
+    assert st["shed"] == 1 and st["retried"] == 0
+    assert st["hits"] == 0 and st["misses"] == 1     # only chain 0 counted
+    # retry the shed chain: it now serves (and is counted as retried)
+    res2, _ = pc.serve_chains([chains[1]], [[4, 5, 6]],
+                              retries=[True])
+    assert not res2[0].shed
+    assert res2[0].hitlen == 0
+    assert all(p is not None for p in res2[0].puts)
+    st = pc.stats()
+    assert st["retried"] == 1 and st["misses"] == 2
+    # everything is resident now
+    res3, _ = pc.serve_chains(chains, [[], []])
+    assert [r.hitlen for r in res3] == [3, 3]
