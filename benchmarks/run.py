@@ -33,7 +33,7 @@ def main() -> None:
                             fig12_hit_location, fig13_p8,
                             fig14_sharded_scaling, fig15_warmup,
                             prefix_cache_bench, roofline_table,
-                            sharded_bench)
+                            serve_bench, sharded_bench)
 
     modules = [
         ("fig06", fig06_invector_small),
@@ -46,10 +46,11 @@ def main() -> None:
         ("fig15", fig15_warmup),
         ("prefix", prefix_cache_bench),
         ("sharded", sharded_bench),
+        ("serve", serve_bench),
     ]
     if args.quick:
         modules = [m for m in modules
-                   if m[0] not in ("fig07", "fig14", "sharded")]
+                   if m[0] not in ("fig07", "fig14", "sharded", "serve")]
 
     csv = ["name,us_per_call,derived"]
     for name, mod in modules:
@@ -97,6 +98,8 @@ def _csv_scalars(name, res):
             return 0, res["multistep_m2"]["prefill_saved_frac"]
         if name == "sharded":
             return 0, res["2x"]["shed_rate"]
+        if name == "serve":
+            return 0, res["inflight"]["launches_per_token"]
     except (KeyError, IndexError):
         pass
     return 0, 0

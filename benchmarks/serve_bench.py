@@ -1,0 +1,236 @@
+"""In-flight decode batching: launch economics on a mixed-length trace.
+
+The serve engine's decode tick is the model-side analogue of the paper's
+SIMD batching argument: a device launch has fixed overhead, so throughput
+comes from filling every lane of every launch with useful work.  The
+legacy round-robin schedule decodes only the slots at the batch-min
+``cur_len`` — a Zipfian trace with mixed prompt lengths burns ~one launch
+per DISTINCT length to advance the whole batch one token, and longer
+slots idle while shorter ones catch up.  In-flight batching
+(``decode_mode="inflight"``) advances every active slot at its own
+position in ONE launch per tick.
+
+Workload: prompt templates with Zipfian popularity (shared 2-chunk
+prefixes exercise the prefix cache and the same-tick dedupe waves) plus a
+per-request random tail, so concurrently-resident slots sit at genuinely
+different lengths.  Metrics per decode mode:
+
+  * ``ticks_to_drain``    — engine ticks to retire the whole queue,
+  * ``decode_launches``   — decode_step invocations,
+  * ``launches_per_token``— active rows computed per token emitted
+    (``launch_rows / decode_tokens``): 1.0 means every decode lane did
+    useful work — the SIMD-occupancy analogue.  Round-robin wastes the
+    non-min rows of every launch, so this ≈ the mean distinct-length
+    count; in-flight is 1.0 except for the rare borrower-wave follow-up
+    launch,
+  * hit ratio and admit-latency p50/p99 (the trace is identical, so hit
+    ratios may differ only through slot-scheduling, not correctness).
+
+``run()`` merges both modes into BENCH_serve.json at the repo root;
+``--smoke`` uses the tiny CI trace (entry block ``smoke``).  ``--check``
+recomputes the smoke block and fails (exit 1) if the in-flight
+``launches_per_token`` exceeds 1.05, ticks-to-drain regresses past 1.1×
+the committed entry, or the two modes' token streams diverge (the
+differential oracle riding along in CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import cached
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+MODEL = "phi3-mini-3.8b"
+CHUNK = 16
+PREFIX_CHUNKS = 2            # 32 shared tokens per template
+N_TEMPLATES = 8
+ZIPF_ALPHA = 1.0
+
+FULL = dict(requests=32, slots=8, max_tail=28, max_new_lo=4, max_new_hi=13)
+SMOKE = dict(requests=16, slots=4, max_tail=20, max_new_lo=4, max_new_hi=11)
+
+LAUNCHES_PER_TOKEN_BUDGET = 1.05
+TICKS_BUDGET_FACTOR = 1.1
+
+
+def _workload(cfg, shape: dict):
+    """Zipf-popular templates + random tails: mixed lengths, shared
+    prefixes — (prompt, max_new_tokens) per request, deterministic."""
+    from repro.data.ycsb import zipfian
+
+    rng = np.random.default_rng(42)
+    templates = [rng.integers(1, cfg.vocab_size,
+                              CHUNK * PREFIX_CHUNKS).astype(np.int32)
+                 for _ in range(N_TEMPLATES)]
+    picks = zipfian(N_TEMPLATES, shape["requests"], alpha=ZIPF_ALPHA,
+                    seed=43) - 1
+    out = []
+    for i in range(shape["requests"]):
+        tail = rng.integers(1, cfg.vocab_size,
+                            1 + int(rng.integers(0, shape["max_tail"]))
+                            ).astype(np.int32)
+        prompt = np.concatenate([templates[int(picks[i]) % N_TEMPLATES],
+                                 tail])
+        max_new = shape["max_new_lo"] + i % (shape["max_new_hi"]
+                                             - shape["max_new_lo"])
+        out.append((prompt, max_new))
+    return out
+
+
+def _drive(mode: str, shape: dict) -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.models.model import make_model
+    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.kv_cache import PagedKVPool
+    from repro.serving.prefix_cache import PrefixCache
+
+    cfg = get_config(MODEL, smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pool = PagedKVPool(cfg, n_pages=96, page_tokens=CHUNK)
+    pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=CHUNK)
+    eng = ServeEngine(model, params, slots=shape["slots"], max_len=128,
+                      prefix_cache=pc, pool=pool, decode_mode=mode)
+    for i, (prompt, max_new) in enumerate(_workload(cfg, shape)):
+        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    t0 = time.time()
+    ticks = eng.run_until_done()
+    dt = time.time() - t0
+    st = eng.stats()
+    pst = pc.stats()
+    return {
+        "ticks_to_drain": ticks,
+        "decode_launches": st["decode_launches"],
+        "decode_tokens": st["decode_tokens"],
+        "launch_rows": st["launch_rows"],
+        "launches_per_token": round(st["launches_per_token"], 4),
+        "hit_ratio": pst["hit_ratio"],
+        "service_ticks_p50": st["service_ticks_p50"],
+        "service_ticks_p99": st["service_ticks_p99"],
+        "seconds": round(dt, 3),
+        "tokens": {str(r.rid): r.out_tokens for r in eng.finished},
+    }
+
+
+def _sweep(shape: dict) -> dict:
+    out = {}
+    for mode in ("inflight", "roundrobin"):
+        out[mode] = _drive(mode, shape)
+    # the differential oracle rides along: identical token streams
+    out["tokens_match"] = (out["inflight"]["tokens"]
+                          == out["roundrobin"]["tokens"])
+    for mode in ("inflight", "roundrobin"):
+        del out[mode]["tokens"]          # bulky; only the match is kept
+    return out
+
+
+def run(force: bool = False, smoke: bool = False):
+    key = "smoke" if smoke else "entries"
+    shape = SMOKE if smoke else FULL
+
+    def compute():
+        return _sweep(shape)
+
+    res = cached(f"serve_bench_{key}", compute, force)
+    _emit_bench_json(res, key)
+    return res
+
+
+def _emit_bench_json(res: dict, key: str) -> None:
+    doc = {}
+    if BENCH_JSON.exists():
+        try:
+            doc = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["benchmark"] = "inflight_decode_serving"
+    doc["config"] = {
+        "model": MODEL, "chunk_tokens": CHUNK,
+        "prefix_chunks": PREFIX_CHUNKS, "templates": N_TEMPLATES,
+        "zipf_alpha": ZIPF_ALPHA, "shapes": {"entries": FULL,
+                                             "smoke": SMOKE},
+    }
+    doc[key] = res
+    BENCH_JSON.write_text(json.dumps(doc, indent=1))
+
+
+def check(res: dict, committed_doc: dict) -> list[str]:
+    """CI gate on the smoke block: in-flight decode stays at ~1 launch of
+    useful rows per token (≤ 1.05), drains within 1.1× the committed
+    ticks, and the two decode modes emit identical tokens."""
+    problems = []
+    inf = res.get("inflight", {})
+    if inf.get("launches_per_token", 99.0) > LAUNCHES_PER_TOKEN_BUDGET:
+        problems.append(
+            f"inflight launches_per_token {inf.get('launches_per_token')}"
+            f" > {LAUNCHES_PER_TOKEN_BUDGET}")
+    if not res.get("tokens_match", False):
+        problems.append("inflight tokens diverge from the round-robin "
+                        "oracle")
+    ref = committed_doc.get("smoke", {}).get("inflight")
+    if ref is None:
+        problems.append("no committed smoke 'inflight' entry to compare")
+    else:
+        budget = ref["ticks_to_drain"] * TICKS_BUDGET_FACTOR + 1e-9
+        if inf.get("ticks_to_drain", 10**9) > budget:
+            problems.append(
+                f"inflight ticks_to_drain {inf.get('ticks_to_drain')} > "
+                f"committed {ref['ticks_to_drain']} * {TICKS_BUDGET_FACTOR}")
+    return problems
+
+
+def report(res: dict) -> list[str]:
+    lines = ["in-flight decode vs round-robin (Zipfian templates, mixed "
+             "prompt lengths)"]
+    rr = res.get("roundrobin", {})
+    for mode in ("inflight", "roundrobin"):
+        r = res.get(mode)
+        if not r:
+            continue
+        speed = (rr["ticks_to_drain"] / r["ticks_to_drain"]
+                 if r.get("ticks_to_drain") else 0.0)
+        lines.append(
+            f"  {mode:10s} ticks={r['ticks_to_drain']:4d} "
+            f"launches={r['decode_launches']:4d} "
+            f"launches/token={r['launches_per_token']:.3f} "
+            f"hit_ratio={r['hit_ratio']:.3f} "
+            f"p50/p99 wait={r['service_ticks_p50']:.0f}/"
+            f"{r['service_ticks_p99']:.0f} ticks "
+            f"({speed:.2f}x ticks vs rr)")
+    lines.append(f"  tokens_match={res.get('tokens_match')}")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (the CI gate block)")
+    ap.add_argument("--check", action="store_true",
+                    help="recompute the smoke block and fail on launch or "
+                         "ticks regressions vs BENCH_serve.json")
+    args = ap.parse_args()
+    committed_doc = (json.loads(BENCH_JSON.read_text())
+                     if BENCH_JSON.exists() else {})
+    res = run(force=args.force or args.check, smoke=args.smoke or args.check)
+    print("\n".join(report(res)))
+    print(f"merged into {BENCH_JSON}")
+    if args.check:
+        problems = check(res, committed_doc)
+        if problems:
+            print("BENCH CHECK FAILED:\n  " + "\n  ".join(problems))
+            sys.exit(1)
+        print("bench check OK")
+
+
+if __name__ == "__main__":
+    main()

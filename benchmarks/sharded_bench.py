@@ -18,6 +18,14 @@ dropped — the forced-miss fallback).  Output per cap: shed rate (shed
 chain-events / chain submissions), retried/dropped counts, chunk hit
 ratio, and the per-device all_to_all send-buffer bytes.
 
+Placement: the client's default ``placement="load"`` packs each chain
+onto the slab whose home shards it stresses least (judged on the same
+per-(slab, owner) counts the shed pre-check mirrors); the ``2x-rr`` /
+``1x-rr`` entries re-run those caps with the legacy round-robin deal, so
+the committed curve shows the shed-rate drop load-aware packing buys at
+bounded caps.  Tokens/tables are placement-independent (canonical
+``order`` ranks) — only shed luck changes.
+
 ``run()`` merges the curve into BENCH_sharded.json at the repo root;
 ``--smoke`` uses a tiny trace (entry block ``smoke``, the CI gate trace);
 ``--check`` recomputes the smoke curve and fails (exit 1) if the shed rate
@@ -36,8 +44,9 @@ from pathlib import Path
 from benchmarks.common import cached
 
 NDEV = 8
-CAPS = [("full", "full"), ("4x", 4.0), ("2x", 2.0), ("1x", 1.0),
-        ("0.5x", 0.5)]
+CAPS = [("full", "full", "load"), ("4x", 4.0, "load"), ("2x", 2.0, "load"),
+        ("1x", 1.0, "load"), ("0.5x", 0.5, "load"),
+        ("2x-rr", 2.0, "roundrobin"), ("1x-rr", 1.0, "roundrobin")]
 N_TEMPLATES = 96
 PREFIX_CHUNKS = 4
 CHAINS_PER_TICK = 32
@@ -73,10 +82,10 @@ templates = [[(int(h) & 0x7FFFFFFF) | 1
 picks = zipfian(%(n_templates)d, TICKS * B, alpha=1.0, seed=18) - 1
 
 out = {}
-for name, cap in %(caps)r:
+for name, cap, placement in %(caps)r:
     cap = float(cap) if isinstance(cap, (int, float)) else cap
     mcfg = MSLRUConfig(num_sets=%(cache_sets)d, m=2, p=4, value_planes=1)
-    client = ShardedCacheClient(mcfg, mesh, cap=cap)
+    client = ShardedCacheClient(mcfg, mesh, cap=cap, placement=placement)
     pc = PrefixCache(chunk_tokens=16, backend=client)
     page = 0
     retry = []            # (chain, tries)
@@ -113,6 +122,7 @@ for name, cap in %(caps)r:
     st = pc.stats()
     out[name] = {
         "cap": cap if cap == "full" else float(cap),
+        "placement": placement,
         "shed_rate": st["shed"] / submissions if submissions else 0.0,
         "shed": st["shed"],
         "retried": st["retried"],
@@ -200,14 +210,23 @@ def check(res: dict, committed_doc: dict) -> list[str]:
             problems.append(
                 f"{name}: hit_ratio {r.get('hit_ratio')} != committed "
                 f"{ref.get('hit_ratio')}")
+    # load-aware placement must not shed MORE than the round-robin deal
+    for cap in ("2x", "1x"):
+        rr = res.get(f"{cap}-rr", {}).get("shed_rate")
+        ld = res.get(cap, {}).get("shed_rate")
+        if rr is not None and ld is not None and ld > rr + 1e-9:
+            problems.append(
+                f"{cap}: load placement shed_rate {ld:.4f} > round-robin "
+                f"{rr:.4f}")
     return problems
 
 
 def report(res: dict) -> list[str]:
     lines = [f"sharded serving cap sweep (D={NDEV}, Zipfian templates; "
-             "bounded per-peer all_to_all slabs + next-tick retry)"]
+             "bounded per-peer all_to_all slabs + next-tick retry; "
+             "-rr = round-robin chain placement, else load-aware)"]
     full = res.get("full", {})
-    for name, _cap in CAPS:
+    for name, _cap, _pl in CAPS:
         r = res.get(name)
         if not r:
             continue
@@ -217,6 +236,12 @@ def report(res: dict) -> list[str]:
             f"retried={r['retried']} dropped={r['dropped']} "
             f"hit_ratio={r['hit_ratio']:.3f} (Δ vs full {loss:+.4f}) "
             f"buf={r['send_buffer_bytes']}B (k={r['k_depth']})")
+    for cap in ("2x", "1x"):
+        rr, ld = res.get(f"{cap}-rr"), res.get(cap)
+        if rr and ld:
+            lines.append(
+                f"  load-aware placement at {cap}: shed "
+                f"{rr['shed_rate']:.2%} -> {ld['shed_rate']:.2%}")
     return lines
 
 

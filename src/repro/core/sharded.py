@@ -344,6 +344,20 @@ class ShardedCacheClient:
     mask is asserted all-True for the admitted rows (a regression check
     that the host mirror and the device ranks agree).  ``PrefixCache`` /
     ``ServeEngine`` turn ``last_shed`` into a retry next tick.
+
+    Load-aware shed placement: a chain stresses exactly the per-peer
+    buffers of its chunks' HOME shards, and the pre-check already counts
+    per-(slab, owner) loads — so with ``placement="load"`` (the default
+    under a bounded cap) each group is placed greedily on the slab where
+    its peak resulting per-owner depth is smallest (ties: fewer total rows,
+    then lower slab index) instead of dealt round-robin.  Same-home-shard
+    chains (Zipfian duplicates) then spread across slabs instead of
+    stacking one slab's buffer for that owner, cutting the shed rate at a
+    given cap; the canonical ``order`` ranks keep the table bit-equal to
+    the sequential engine under ANY placement, so this is purely a
+    shed-rate knob.  ``placement="roundrobin"`` keeps the legacy dealing
+    (the committed BENCH_sharded baseline); with ``cap="full"`` nothing
+    can shed, so the round-robin deal is kept regardless.
     """
 
     batch_multiple = 1  # access() repacks internally; any B works
@@ -352,16 +366,18 @@ class ShardedCacheClient:
     def __init__(self, cfg: MSLRUConfig, mesh, axis: str = "cache",
                  engine: str = "onepass", use_kernel: bool = False,
                  block_b: int = 2048, interpret: bool | None = None,
-                 cap="full"):
+                 cap="full", placement: str = "load"):
         # the slab repacking below is written for 32-bit chunk hashes; the
         # sharded ENGINE itself handles key_planes=2, the client does not
         assert cfg.key_planes == 1, (
             "ShardedCacheClient packs 1-plane keys (chunk hashes); "
             "key_planes=2 is not supported here")
+        assert placement in ("load", "roundrobin"), placement
         self.cfg = cfg
         self.mesh = mesh
         self.ndev = mesh.shape[axis]
         self.cap = cap
+        self.placement = placement
         self._s_local = cfg.num_sets // self.ndev
         self._run = make_sharded_engine(
             cfg, mesh, axis=axis, cap=cap, engine=engine,
@@ -408,8 +424,47 @@ class ShardedCacheClient:
                 merged[gk] = list(g)
                 order.append(gk)
         slab_groups: list[list[list[int]]] = [[] for _ in range(self.ndev)]
-        for j, gk in enumerate(order):
-            slab_groups[j % self.ndev].append(merged[gk])
+        owners = None
+        if self.cap != "full":
+            owners = np.asarray(
+                set_index_for(self.cfg, jnp.asarray(keys[:, None]))
+            ) // self._s_local
+        if owners is not None and self.placement == "load" and self.ndev > 1:
+            # greedy load-aware deal: place each group on the slab where
+            # its peak resulting per-owner depth stays smallest — judged
+            # on exactly the per-(slab, owner) counts the shed pre-check
+            # mirrors below, so placement optimizes the quantity that
+            # triggers sheds.  Ties fall to the slab with fewer rows, then
+            # the lowest index (deterministic).  A slab row cap at the
+            # pow2 ceiling of the balanced load keeps q — and with it the
+            # per-peer depth and all_to_all buffer bytes — the same as an
+            # even deal's: lower sheds must come from smarter placement,
+            # not quietly larger buffers.  (Soft cap: if no slab fits, the
+            # group goes to the emptiest one and q grows a step.)
+            counts = np.zeros((self.ndev, self.ndev), np.int64)
+            rows_ct = np.zeros(self.ndev, np.int64)
+            balanced = (n + self.ndev - 1) // self.ndev
+            cap_rows = 1 << max(0, balanced - 1).bit_length()
+            for gk in order:
+                g = merged[gk]
+                gcnt = np.bincount(owners[g], minlength=self.ndev)
+                touched = np.nonzero(gcnt)[0]
+                if touched.size:
+                    peaks = (counts[:, touched] + gcnt[touched]).max(axis=1)
+                else:
+                    peaks = np.zeros(self.ndev, np.int64)
+                cands = [d for d in range(self.ndev)
+                         if rows_ct[d] + len(g) <= cap_rows]
+                if not cands:
+                    cands = list(range(self.ndev))
+                best = min(cands,
+                           key=lambda d: (int(peaks[d]), int(rows_ct[d]), d))
+                counts[best] += gcnt
+                rows_ct[best] += len(g)
+                slab_groups[best].append(g)
+        else:
+            for j, gk in enumerate(order):
+                slab_groups[j % self.ndev].append(merged[gk])
 
         # q (and hence the per-peer depth) is fixed from the un-shed packing
         # so the shapes the engine compiles for do not depend on shed luck
@@ -424,9 +479,6 @@ class ShardedCacheClient:
         shed = np.zeros(n, bool)
         slabs: list[list[int]] = []
         if self.cap != "full":
-            owners = np.asarray(
-                set_index_for(self.cfg, jnp.asarray(keys[:, None]))
-            ) // self._s_local
             for gs in slab_groups:
                 counts = np.zeros(self.ndev, np.int64)
                 rows: list[int] = []

@@ -32,6 +32,11 @@ def main():
     ap.add_argument("--chunk-tokens", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--decode-mode", choices=["inflight", "roundrobin"],
+                    default="inflight",
+                    help="inflight: one decode launch/tick advances every "
+                         "slot at its own length; roundrobin: legacy "
+                         "min-length schedule (equivalence oracle)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -43,7 +48,8 @@ def main():
         pool = PagedKVPool(cfg, n_pages=256, page_tokens=args.chunk_tokens)
         pc = PrefixCache(num_sets=256, m=2, p=4, chunk_tokens=args.chunk_tokens)
     eng = ServeEngine(model, params, slots=4, max_len=256,
-                      prefix_cache=pc, pool=pool)
+                      prefix_cache=pc, pool=pool,
+                      decode_mode=args.decode_mode)
 
     rng = np.random.default_rng(0)
     templates = [rng.integers(1, cfg.vocab_size, args.prefix_tokens).astype(np.int32)
@@ -63,6 +69,12 @@ def main():
     print(f"[serve] {len(eng.finished)} requests in {ticks} ticks, {dt:.1f}s")
     print(f"[serve] prefill tokens: computed={computed} skipped={skipped} "
           f"({skipped/(skipped+computed):.1%} saved)")
+    st = eng.stats()
+    print(f"[serve] decode: {st['decode_launches']} launches, "
+          f"{st['decode_tokens']} tokens, "
+          f"{st['launches_per_token']:.3f} rows/token, admit wait "
+          f"p50/p99 {st['service_ticks_p50']:.0f}/"
+          f"{st['service_ticks_p99']:.0f} ticks")
     if pc:
         print(f"[serve] prefix cache: {pc.stats()}")
 

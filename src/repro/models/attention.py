@@ -192,19 +192,27 @@ def attn_decode(params, x, cache_k, cache_v, cur_len, *, n_heads, n_kv_heads,
                 d_head, rope_kind="rope", theta=1e4, window=None, softcap=0.0):
     """x (B,1,D); cache_k/v (B,Smax,KVH,Dh) with cur_len valid entries.
 
-    Writes the new KV at cur_len, attends over [0, cur_len].  Returns
+    ``cur_len`` is a scalar (every row at one position — the classic
+    lockstep decode) or a (B,) vector (in-flight batching: row b writes its
+    new KV at ``cur_len[b]`` and attends over [0, cur_len[b]], so one
+    launch advances a batch of sequences at *unequal* lengths).  All the
+    math is row-local — batched einsums never mix rows — so a row's output
+    is bit-identical whichever other rows share its launch; that is the
+    invariant the serve engine's per-slot cache merge relies on.  Returns
     (out (B,1,D), cache_k, cache_v).  The cache may be sequence-sharded:
     the softmax reductions over Smax become psums under pjit (split-KV /
     flash-decoding on TPU collectives).
     """
     b = x.shape[0]
-    pos = jnp.full((b, 1), cur_len, jnp.int32)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    pos = cur[:, None]
     if rope_kind == "mrope":
-        pos = jnp.broadcast_to(jnp.full((b, 3, 1), cur_len, jnp.int32), (b, 3, 1))
+        pos = jnp.broadcast_to(cur[:, None, None], (b, 3, 1))
     q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head, pos,
                            rope_kind, theta)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0))
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, cur].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, cur].set(v[:, 0].astype(cache_v.dtype))
 
     smax, kvh = cache_k.shape[1], cache_k.shape[2]
     rep = n_heads // kvh
@@ -215,11 +223,11 @@ def attn_decode(params, x, cache_k, cache_v, cur_len, *, n_heads, n_kv_heads,
     s_ = jnp.einsum("bgrd,bkgd->bgrk", qg, cache_k.astype(q.dtype)).astype(jnp.float32)
     if softcap > 0.0:
         s_ = jnp.tanh(s_ / softcap) * softcap
-    mask = k_pos <= cur_len
+    mask = k_pos[None, :] <= cur[:, None]
     if window is not None:
         w = jnp.asarray(window)
-        mask &= jnp.where(w > 0, cur_len - k_pos < w, True)
-    s_ = jnp.where(mask[None, None, None, :], s_, NEG_INF)
+        mask &= jnp.where(w > 0, cur[:, None] - k_pos[None, :] < w, True)
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1)
     ctx = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), cache_v.astype(q.dtype))
     out = jnp.einsum("bh,hd->bd", ctx.reshape(b, n_heads * d_head), params["wo"])

@@ -8,8 +8,12 @@
     init_cache(batch, max_len)         -> zeroed cache pytree
     decode_step(params, tokens, cache, cur_len) -> (logits, cache)  [decode_*]
 
-Batches are dicts of arrays; ``input_specs`` in configs/specs.py builds the
-matching ShapeDtypeStructs for abstract lowering.
+``cur_len`` may be a scalar (all rows decode at one position) or a (B,)
+vector (in-flight batching: each row decodes at its own position in the
+same launch); recurrent families (mamba/xlstm state) are position-free and
+accept either.  Batches are dicts of arrays; ``input_specs`` in
+configs/specs.py builds the matching ShapeDtypeStructs for abstract
+lowering.
 """
 
 from __future__ import annotations
@@ -259,10 +263,15 @@ def _make_decoder(cfg: ArchConfig) -> Model:
         return cache
 
     def decode_step(params, tokens, cache, cur_len):
-        """tokens (B,1); cur_len counts real tokens (meta offset added here)."""
+        """tokens (B,1); cur_len counts real tokens (meta offset added here).
+
+        ``cur_len`` is a scalar (lockstep decode) or a (B,) vector
+        (in-flight batching: every row advances at its OWN length in one
+        launch — see ``attention.attn_decode``).  Row outputs are
+        launch-membership independent either way."""
         b = tokens.shape[0]
         h = _embed(cfg, params, tokens)
-        pos = cur_len + cfg.meta_tokens
+        pos = jnp.asarray(cur_len, jnp.int32) + cfg.meta_tokens
 
         if is_hymba:
             def body(hh, xs):
@@ -480,6 +489,7 @@ def _make_encdec(cfg: ArchConfig) -> Model:
         return logits, {"k": k, "v": v, "xk": xk, "xv": xv}
 
     def decode_step(params, tokens, cache, cur_len):
+        # cur_len: scalar or (B,) per-row positions (in-flight batching)
         h = _embed(cfg, params, tokens) + _sinusoid_at(cur_len, cfg.d_model)
 
         def body(hh, xs):
@@ -498,8 +508,11 @@ def _make_encdec(cfg: ArchConfig) -> Model:
 
 
 def _sinusoid_at(pos, d):
+    """Positional encoding at ``pos`` — scalar -> (1,1,d), (B,) -> (B,1,d)
+    (per-row decode positions for in-flight batching)."""
+    pos = jnp.asarray(pos, jnp.float32).reshape(-1)[:, None]
     dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
-    ang = jnp.asarray(pos, jnp.float32) / jnp.power(10000.0, dim / d)
-    pe = jnp.zeros((1, d), jnp.float32)
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((pos.shape[0], d), jnp.float32)
     pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
-    return pe[None].astype(COMPUTE_DTYPE)
+    return pe[:, None, :].astype(COMPUTE_DTYPE)

@@ -17,6 +17,32 @@ Flow per request (attention-family archs):
 SSM/hybrid archs skip prefix reuse (their state is not prefix-separable);
 the engine still serves them via model.prefill + decode_step.
 
+In-flight decode (default)
+--------------------------
+``decode_mode="inflight"`` is the decode-side analogue of the cache
+engine's one-call tick: ONE decode launch per tick advances EVERY active
+slot at its own position (``decode_step`` takes a per-slot ``cur_lens``
+vector; each row writes its KV at its own length and masks its own keys).
+The invariant: **every active slot emits exactly one token every tick** —
+a batch of mixed prompt lengths costs 1 launch per tick instead of one
+launch per distinct length, and long slots never sit idle waiting for the
+batch minimum to catch up.  Token streams are bit-identical to the
+round-robin schedule because every decode row is launch-membership
+independent (batched einsums never mix rows) and the cache merge is
+per-slot.
+
+    decode_mode     launches/tick     slots advanced per tick
+    "inflight"      1 (+1 only on a   every active slot, each at its
+                    borrower-wave     own cur_len
+                    tick)
+    "roundrobin"    1                 only the slots at min(cur_len) —
+                                      the legacy schedule, kept as the
+                                      token-equivalence oracle
+
+Per-tick decode tokens ride a persistent (slots, 1) buffer updated when a
+token is emitted (admission or decode), so a tick never rebuilds the
+token batch from a scan over ``active``.
+
 Fused one-call admission (default)
 ----------------------------------
 ``_admit_fused`` runs a whole tick's admissions through ONE op-coded
@@ -91,7 +117,8 @@ from repro.models import transformer as tfm
 from repro.models import attention as attn_mod
 from repro.models.model import Model
 from repro.serving.kv_cache import PagedKVPool
-from repro.serving.prefix_cache import PrefixCache, chunk_chain_hashes
+from repro.serving.prefix_cache import (PrefixCache, chunk_chain_hashes,
+                                        service_tick_percentiles)
 
 
 @dataclasses.dataclass
@@ -106,6 +133,15 @@ class Request:
     prefill_computed: int = 0
     shed_count: int = 0          # times a bounded backend shed this chain
     force_plain: bool = False    # bypass the prefix cache (shed fallback)
+    submit_tick: int = -1        # engine tick the request was queued
+    admit_tick: int = -1         # tick it was actually served (post-sheds)
+
+    @property
+    def service_ticks(self) -> int:
+        """Admit latency in ticks (queue wait + shed retries)."""
+        if self.admit_tick < 0 or self.submit_tick < 0:
+            return 0
+        return self.admit_tick - self.submit_tick
 
 
 def continuation_prefill(cfg: ArchConfig, params, tokens, kv_prefix, prefix_len):
@@ -266,7 +302,8 @@ class ServeEngine:
                  max_len: int = 512, prefix_cache: PrefixCache | None = None,
                  pool: PagedKVPool | None = None, eos_token: int = -1,
                  admit_batching: bool = True, admit_mode: str | None = None,
-                 overlap_decode: bool = True, max_shed_retries: int = 3):
+                 overlap_decode: bool = True, max_shed_retries: int = 3,
+                 decode_mode: str = "inflight"):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -310,10 +347,41 @@ class ServeEngine:
         self.admit_mode = admit_mode or ("fused" if admit_batching
                                          else "split")
         assert self.admit_mode in ("fused", "split"), self.admit_mode
+        # "inflight" (default): one decode launch advances every active
+        # slot at its own cur_len; "roundrobin": the legacy min-cur_len
+        # schedule (the token-equivalence oracle).
+        assert decode_mode in ("inflight", "roundrobin"), decode_mode
+        self.decode_mode = decode_mode
+        self.ticks = 0               # completed engine ticks
+        self.decode_launches = 0     # decode_step invocations
+        self.decode_tokens = 0       # tokens emitted by decode launches
+        self.launch_rows = 0         # active rows computed across launches
+        self._last_tok = np.zeros((slots, 1), np.int32)  # per-slot last token
+        self._service_ticks: list[int] = []  # per-request admit latencies
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        if req.submit_tick < 0:
+            req.submit_tick = self.ticks
         self.queue.append(req)
+
+    def _mark_active(self, req: Request):
+        """Register ``req`` as serving; first call stamps its admit tick
+        and records the ticks-to-service sample (queue wait + sheds)."""
+        self.active[req.rid] = req
+        if req.admit_tick < 0:
+            req.admit_tick = self.ticks
+            waited = req.service_ticks
+            self._service_ticks.append(waited)
+            if self.prefix_cache is not None:
+                self.prefix_cache.note_service_latency(waited)
+
+    def _emit(self, req: Request, tok: int):
+        """Append a token and keep the persistent decode-token buffer (the
+        (slots, 1) batch every decode launch consumes) current."""
+        req.out_tokens.append(tok)
+        if req.slot >= 0:
+            self._last_tok[req.slot, 0] = tok
 
     def _admit_split(self, reqs: list[Request]):
         """PR-2 batched admission (≤ 3 cache-engine device calls total):
@@ -385,8 +453,8 @@ class ServeEngine:
                     ins_chains.append(chain[len(pages): len(pages) + npg])
                     ins_pages.append(new_pages)
             self.cur_len[slot] = len(req.prompt)
-            req.out_tokens.append(int(jnp.argmax(logits)))
-            self.active[req.rid] = req
+            self._mark_active(req)
+            self._emit(req, int(jnp.argmax(logits)))
         if ins_chains:
             for pg in self.prefix_cache.insert_chains(ins_chains, ins_pages):
                 self.pool.release(pg)
@@ -400,8 +468,8 @@ class ServeEngine:
             self._install_prefill(req.slot, pc)
             req.prefill_computed = len(req.prompt)
             self.cur_len[req.slot] = len(req.prompt)
-            req.out_tokens.append(int(jnp.argmax(logits[0])))
-            self.active[req.rid] = req
+            self._mark_active(req)
+            self._emit(req, int(jnp.argmax(logits[0])))
 
     # -- fused one-call admission -------------------------------------------
     def _admit_fused(self, reqs: list[Request]):
@@ -583,10 +651,10 @@ class ServeEngine:
                     pages.append(pub[1])   # gather the owner's page
                     deps.add(pub[0])       # ... after the owner WRITES it
                     t += 1
-            # register now so the tick's decode schedule (cur = min over
-            # active) already accounts for the later-wave admits
+            # register now so the tick's decode schedule (per-slot curs /
+            # min over active) already accounts for the later-wave admits
             self.cur_len[req.slot] = len(req.prompt)
-            self.active[req.rid] = req
+            self._mark_active(req)
             jobs.append({"req": req, "c": c, "pages": pages, "deps": deps})
 
         # a gatherer must run STRICTLY after every chain whose published
@@ -688,8 +756,8 @@ class ServeEngine:
                 self.pool.write_pages(np.asarray([pg for _, pg in writes]),
                                       kc, vc)
             self.cur_len[slot] = len(req.prompt)
-            req.out_tokens.append(int(jnp.argmax(logits[i])))
-            self.active[req.rid] = req
+            self._mark_active(req)
+            self._emit(req, int(jnp.argmax(logits[i])))
 
     def _install_prefill(self, slot, pc):
         """Copy a model.prefill cache (batch=1 semantics) into `slot`."""
@@ -729,26 +797,38 @@ class ServeEngine:
 
         self.cache = jax.tree.map(sel, new_cache, self.cache)
 
-    def _decode_tokens(self) -> np.ndarray:
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for r in self.active.values():
-            if r.out_tokens:
-                tokens[r.slot, 0] = r.out_tokens[-1]
-        return tokens
+    def _launch_decode(self, curs: np.ndarray):
+        """ONE decode launch over the persistent token buffer, every row at
+        its ``curs`` position; counts the launch and its active rows."""
+        logits, cache = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.cache,
+            jnp.asarray(curs))
+        self.decode_launches += 1
+        self.launch_rows += len(self.active)
+        return np.asarray(jnp.argmax(logits, -1)), cache
 
     # -- main loop -------------------------------------------------------------
     def step(self):
-        """One engine tick: admit all free slots, decode one token each.
+        """One engine tick: admit all free slots, then ONE decode launch.
 
         Admission is batched: every request admitted this tick goes through
         one fused call (``admit_mode="fused"``, default — ~1 cache-engine
         call per tick) or the PR-2 3-call path (``admit_mode="split"``).
         ``admit_batching=False`` degrades to one-at-a-time split admission
         — the equivalence baseline.  Shed requests re-admit from
-        ``retry_queue`` ahead of the regular queue.  With
+        ``retry_queue`` ahead of the regular queue.
+
+        Decode: with ``decode_mode="inflight"`` (default) the tick's single
+        launch advances EVERY active slot at its own ``cur_len`` (per-slot
+        positions ride ``decode_step`` as a vector), so every active slot
+        emits exactly one token per tick regardless of length mix;
+        ``"roundrobin"`` keeps the legacy schedule (only the slots at the
+        batch-min length advance) as the token-equivalence oracle.  With
         ``overlap_decode`` (default) the tick's decode launch is issued
         between the wave-0 and borrower prefill launches, so the dedupe
-        waves run concurrently with decode on device."""
+        waves run concurrently with decode on device; borrower slots
+        admitted by those later waves owe this tick's token and get one
+        follow-up launch (the only case a tick costs 2 launches)."""
         admits = []
         while self._free_slots and (self.retry_queue or self.queue):
             src = self.retry_queue if self.retry_queue else self.queue
@@ -770,74 +850,93 @@ class ServeEngine:
         if not self.active:
             for th in pending:
                 th()
+            self.ticks += 1
             return
-        # decode uses a single cur_len: engine ticks groups of equal length;
-        # for simplicity all slots share max(cur_len of active) semantics by
-        # decoding each active slot's token at its own position via masking —
-        # here we step slots whose cur_len equals the minimum (round-robin).
-        lens = {r.slot: self.cur_len[r.slot] for r in self.active.values()}
-        cur = int(min(lens.values()))
+        accept = np.zeros(self.slots, bool)
+        if self.decode_mode == "roundrobin":
+            # legacy oracle: only slots at the batch-min length decode (a
+            # mixed-length batch burns one launch per distinct length)
+            lens = {r.slot: self.cur_len[r.slot] for r in self.active.values()}
+            cur = int(min(lens.values()))
+            curs = np.full(self.slots, cur, np.int32)
+            for r in self.active.values():
+                accept[r.slot] = self.cur_len[r.slot] == cur
+        else:
+            # in-flight: every active slot decodes at its own position
+            curs = self.cur_len.copy()
+            for r in self.active.values():
+                accept[r.slot] = True
         late_slots = {r.slot for r in self.active.values() if r.rid in late}
         nxt = np.zeros(self.slots, np.int64)
-        accept = np.zeros(self.slots, bool)
-        for r in self.active.values():
-            accept[r.slot] = self.cur_len[r.slot] == cur
         if pending and self.overlap_decode:
             # decode launch first (ready slots, cache snapshot), THEN the
             # borrower waves — on device the wave-2 prefill overlaps the
             # wave-1 decode; the caches merge per disjoint slot sets
-            tokens = self._decode_tokens()
-            logits_a, cache_a = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
+            nxt_a, cache_a = self._launch_decode(curs)
             for th in pending:
                 th()
             accept_a = accept.copy()
             for s in late_slots:
                 accept_a[s] = False
             self._merge_cache(cache_a, accept_a)
-            nxt_a = np.asarray(jnp.argmax(logits_a, -1))
             nxt[accept_a] = nxt_a[accept_a]
             late_due = accept & ~accept_a
             if late_due.any():
-                # a borrower slot landed exactly on this tick's decode
-                # position: give it its decode now that its prefill ran,
-                # preserving the tick schedule of the sequential order
-                tokens_b = self._decode_tokens()
-                logits_b, cache_b = self._decode(
-                    self.params, jnp.asarray(tokens_b), self.cache,
-                    jnp.int32(cur))
+                # a borrower slot admitted by a later wave owes this tick's
+                # token (in-flight: always; round-robin: when it landed on
+                # the tick's decode position) — follow-up launch now that
+                # its prefill ran, preserving the tick schedule exactly
+                nxt_b, cache_b = self._launch_decode(curs)
                 self._merge_cache(cache_b, late_due)
-                nxt_b = np.asarray(jnp.argmax(logits_b, -1))
                 nxt[late_due] = nxt_b[late_due]
         else:
             for th in pending:
                 th()
-            tokens = self._decode_tokens()
-            logits, cache_n = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, jnp.int32(cur))
+            nxt_n, cache_n = self._launch_decode(curs)
             self._merge_cache(cache_n, accept)
-            nxt_n = np.asarray(jnp.argmax(logits, -1))
             nxt[accept] = nxt_n[accept]
         done = []
         for r in self.active.values():
-            if self.cur_len[r.slot] == cur:
+            if accept[r.slot]:
                 tok = int(nxt[r.slot])
-                r.out_tokens.append(tok)
+                self._emit(r, tok)
                 self.cur_len[r.slot] += 1
                 if (len(r.out_tokens) >= r.max_new_tokens
                         or tok == self.eos
                         or self.cur_len[r.slot] >= self.max_len - 1):
                     done.append(r.rid)
+        self.decode_tokens += int(accept.sum())
         for rid in done:
             r = self.active.pop(rid)
             for pg in r.pinned_pages:
                 self.pool.unpin(pg)
             self._free_slots.append(r.slot)
             self.finished.append(r)
+        self.ticks += 1
 
     def run_until_done(self, max_ticks: int = 10000):
+        """Drive ticks until every queued/active request retires; returns
+        the tick count (the bench's ticks-to-drain)."""
         t = 0
         while (self.queue or self.retry_queue or self.active) and t < max_ticks:
             self.step()
             t += 1
         return t
+
+    def stats(self) -> dict:
+        """Serve-side counters: launch economics (the in-flight batching
+        win) and per-request admit latency (shed/queue starvation)."""
+        p50, p99 = service_tick_percentiles(self._service_ticks)
+        return {
+            "ticks": self.ticks,
+            "decode_launches": self.decode_launches,
+            "decode_tokens": self.decode_tokens,
+            "launch_rows": self.launch_rows,
+            # active rows computed per token emitted: 1.0 = every decode
+            # lane did useful work (the SIMD-occupancy analogue)
+            "launches_per_token": (self.launch_rows / self.decode_tokens
+                                   if self.decode_tokens else 0.0),
+            "requests_serviced": len(self._service_ticks),
+            "service_ticks_p50": p50,
+            "service_ticks_p99": p99,
+        }

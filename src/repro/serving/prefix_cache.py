@@ -68,9 +68,22 @@ from repro.core import (MSLRUConfig, MultiStepLRUCache, OP_ACCESS,
                         OP_LOOKUP)
 from repro.core.policies import fmix32_py
 
-__all__ = ["PrefixCache", "ChainServe", "chunk_chain_hashes"]
+__all__ = ["PrefixCache", "ChainServe", "chunk_chain_hashes",
+           "service_tick_percentiles"]
 
 _MASK31 = 0x7FFFFFFF
+
+
+def service_tick_percentiles(samples) -> tuple[float, float]:
+    """(p50, p99) of integer tick-latency samples — ``method="higher"``
+    keeps them conservative instead of interpolating; (0, 0) when empty.
+    Shared by ``ServeEngine.stats()`` and ``PrefixCache.stats()`` so the
+    two summaries cannot drift."""
+    lat = np.asarray(samples, np.float64)
+    if not lat.size:
+        return 0.0, 0.0
+    return (float(np.percentile(lat, 50, method="higher")),
+            float(np.percentile(lat, 99, method="higher")))
 
 
 def chunk_chain_hashes(tokens: np.ndarray, chunk_tokens: int) -> list[int]:
@@ -132,6 +145,10 @@ class PrefixCache:
         self.device_calls = 0
         self.shed = 0      # chain-events a bounded backend dropped
         self.retried = 0   # chains re-submitted after a shed
+        # per-request ticks-to-service samples (queue wait + shed retries),
+        # reported by the serving tier via ``note_service_latency`` — shed
+        # starvation shows up here as a long tail, not just event counts
+        self.service_ticks: list[int] = []
 
     # -- batched engine access ----------------------------------------------
     def _call(self, keys: list[int], ops, vals: list[int] | None = None,
@@ -373,8 +390,14 @@ class PrefixCache:
             return False
         return bool(out.hit[0])
 
+    def note_service_latency(self, ticks: int) -> None:
+        """Record one request's ticks-to-service (admit latency including
+        shed retries); summarized as p50/p99 in ``stats()``."""
+        self.service_ticks.append(int(ticks))
+
     def stats(self) -> dict:
         total = self.hits + self.misses
+        p50, p99 = service_tick_percentiles(self.service_ticks)
         return {
             "hits": self.hits,
             "misses": self.misses,
@@ -383,4 +406,6 @@ class PrefixCache:
             "occupancy": self.cache.occupancy,
             "shed": self.shed,
             "retried": self.retried,
+            "service_ticks_p50": p50,
+            "service_ticks_p99": p99,
         }
