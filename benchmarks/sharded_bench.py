@@ -14,9 +14,19 @@ This bench sweeps cap ∈ {full, 4×, 2×, 1×, 0.5×} of the expected per-peer
 load on a Zipfian template trace served through ``PrefixCache`` on a
 ``ShardedCacheClient`` over 8 forced host devices (subprocess, like
 fig14), with a next-tick retry queue (max 3 retries, then the chain is
-dropped — the forced-miss fallback).  Output per cap: shed rate (shed
-chain-events / chain submissions), retried/dropped counts, chunk hit
+served PLAIN — counted as a ``fallback``, never dropped: the elastic
+serving contract is that faults and caps cost goodput, not answers).
+Output per cap: shed rate (shed chain-events / chain submissions),
+retried/fallback counts, goodput (completed chains per tick), chunk hit
 ratio, and the per-device all_to_all send-buffer bytes.
+
+Elastic entries ride the same trace: ``2x-deg`` / ``full-deg`` lose
+shard 0 a quarter of the way in (``mark_degraded`` — orphaned chains
+re-prefill or fall back; placement stops targeting the dead slab) and
+``2x-resize`` live-reshards the mesh 8→4 halfway through (drain +
+canonical re-insert, serving resumes on the rebuilt table).  These are
+the robustness curve: how much goodput survives a lost shard or a live
+resize, with ZERO dropped requests by construction.
 
 Placement: the client's default ``placement="load"`` packs each chain
 onto the slab whose home shards it stresses least (judged on the same
@@ -29,8 +39,9 @@ bounded caps.  Tokens/tables are placement-independent (canonical
 ``run()`` merges the curve into BENCH_sharded.json at the repo root;
 ``--smoke`` uses a tiny trace (entry block ``smoke``, the CI gate trace);
 ``--check`` recomputes the smoke curve and fails (exit 1) if the shed rate
-at cap=2×expected exceeds the committed entry by >20% or any hit ratio
-drifts from the committed value.
+at cap=2×expected exceeds the committed entry by >20%, any hit ratio
+drifts from the committed value, any fault entry drops a request, or a
+fault entry's goodput falls below 1/1.2× of the committed number.
 """
 
 from __future__ import annotations
@@ -44,9 +55,16 @@ from pathlib import Path
 from benchmarks.common import cached
 
 NDEV = 8
-CAPS = [("full", "full", "load"), ("4x", 4.0, "load"), ("2x", 2.0, "load"),
-        ("1x", 1.0, "load"), ("0.5x", 0.5, "load"),
-        ("2x-rr", 2.0, "roundrobin"), ("1x-rr", 1.0, "roundrobin")]
+# (name, cap, placement, fault): fault None = steady-state; "degrade" =
+# mark_degraded(0) at TICKS//4; "resize" = live reshard 8 -> 4 at TICKS//2
+CAPS = [("full", "full", "load", None), ("4x", 4.0, "load", None),
+        ("2x", 2.0, "load", None), ("1x", 1.0, "load", None),
+        ("0.5x", 0.5, "load", None),
+        ("2x-rr", 2.0, "roundrobin", None),
+        ("1x-rr", 1.0, "roundrobin", None),
+        ("full-deg", "full", "load", "degrade"),
+        ("2x-deg", 2.0, "load", "degrade"),
+        ("2x-resize", 2.0, "load", "resize")]
 N_TEMPLATES = 96
 PREFIX_CHUNKS = 4
 CHAINS_PER_TICK = 32
@@ -82,25 +100,34 @@ templates = [[(int(h) & 0x7FFFFFFF) | 1
 picks = zipfian(%(n_templates)d, TICKS * B, alpha=1.0, seed=18) - 1
 
 out = {}
-for name, cap, placement in %(caps)r:
+for name, cap, placement, fault in %(caps)r:
     cap = float(cap) if isinstance(cap, (int, float)) else cap
     mcfg = MSLRUConfig(num_sets=%(cache_sets)d, m=2, p=4, value_planes=1)
     client = ShardedCacheClient(mcfg, mesh, cap=cap, placement=placement)
     pc = PrefixCache(chunk_tokens=16, backend=client)
     page = 0
     retry = []            # (chain, tries)
-    submissions = dropped = 0
+    submissions = completed = fallbacks = fresh = 0
+    orphans = 0
     max_buf = (0, 0)
     i = 0
-    for t in range(TICKS):
-        # retries go first (next-tick priority), fresh requests fill to B
+    t = 0
+    while True:
+        # retries go first (next-tick priority), fresh requests fill to B;
+        # the loop runs past TICKS until the retry queue drains, so every
+        # submitted chain finishes (served or fallback) — zero drops
         todo = retry
         retry = []
         while len(todo) < B and i < TICKS * B:
             todo.append((templates[int(picks[i]) %% len(templates)], 0))
             i += 1
+            fresh += 1
         if not todo:
             break
+        if fault == "degrade" and t == TICKS // 4:
+            orphans = len(client.mark_degraded(0))
+        if fault == "resize" and t == TICKS // 2:
+            client.reshard(NDEV // 2)
         chains = [list(c) for c, _ in todo]
         staged = []
         for ch in chains:
@@ -114,19 +141,34 @@ for name, cap, placement in %(caps)r:
         for (ch, n), r in zip(todo, res):
             if r.shed:
                 # n+1 sheds so far; allow MAX_RETRIES retries (mirroring
-                # ServeEngine.max_shed_retries) before giving up
+                # ServeEngine.max_shed_retries), then serve PLAIN — the
+                # chain completes cache-less, it is never dropped
                 if n + 1 > MAX_RETRIES:
-                    dropped += 1
+                    fallbacks += 1
+                    pc.note_fallback()
+                    completed += 1
                 else:
                     retry.append((ch, n + 1))
+            else:
+                completed += 1
+        t += 1
+    # distinct chains in minus chains out: the drain loop makes this 0
+    # (submissions counts ATTEMPTS — the shed_rate denominator)
+    dropped = fresh - completed
     st = pc.stats()
     out[name] = {
         "cap": cap if cap == "full" else float(cap),
         "placement": placement,
+        "fault": fault,
         "shed_rate": st["shed"] / submissions if submissions else 0.0,
         "shed": st["shed"],
         "retried": st["retried"],
         "dropped": dropped,
+        "fallbacks": fallbacks,
+        "completed": completed,
+        "goodput": completed / t if t else 0.0,
+        "ticks_run": t,
+        "orphans": orphans,
         "submissions": submissions,
         "hit_ratio": st["hit_ratio"],
         "hits": st["hits"],
@@ -135,6 +177,7 @@ for name, cap, placement in %(caps)r:
         "send_buffer_bytes": max_buf[0],
         "k_depth": max_buf[1],
         "client_shed_rows": client.sheds,
+        "degraded_sheds": client.degraded_sheds,
     }
 print(json.dumps(out))
 """
@@ -186,7 +229,9 @@ def _emit_bench_json(res: dict, key: str) -> None:
 
 def check(res: dict, committed_doc: dict) -> list[str]:
     """CI gate on the smoke curve: shed rate at cap=2×expected within 1.2×
-    of the committed entry, hit ratios bit-stable (empty list = pass).
+    of the committed entry, hit ratios bit-stable, fault entries (degrade /
+    resize) dropping NOTHING and keeping goodput within 1.2× of committed
+    (empty list = pass).
 
     ``committed_doc`` must be the BENCH_sharded.json content from *before*
     this run (``run`` merges the fresh numbers into the file)."""
@@ -210,6 +255,22 @@ def check(res: dict, committed_doc: dict) -> list[str]:
             problems.append(
                 f"{name}: hit_ratio {r.get('hit_ratio')} != committed "
                 f"{ref.get('hit_ratio')}")
+    # the robustness gate: a lost shard or a live resize may cost goodput
+    # (sheds, retries, plain fallbacks) but must never drop a request, and
+    # the goodput hit must stay within 1.2x of the committed curve
+    for name, r in res.items():
+        if not r.get("fault"):
+            continue
+        if r.get("dropped", 1) != 0:
+            problems.append(f"{name}: dropped {r['dropped']} requests "
+                            "under fault (must be 0)")
+        ref = committed.get(name)
+        if ref and ref.get("goodput"):
+            floor = ref["goodput"] / 1.2 - 1e-9
+            if r.get("goodput", 0.0) < floor:
+                problems.append(
+                    f"{name}: goodput {r.get('goodput', 0.0):.2f} < "
+                    f"committed {ref['goodput']:.2f} / 1.2")
     # load-aware placement must not shed MORE than the round-robin deal
     for cap in ("2x", "1x"):
         rr = res.get(f"{cap}-rr", {}).get("shed_rate")
@@ -224,16 +285,18 @@ def check(res: dict, committed_doc: dict) -> list[str]:
 def report(res: dict) -> list[str]:
     lines = [f"sharded serving cap sweep (D={NDEV}, Zipfian templates; "
              "bounded per-peer all_to_all slabs + next-tick retry; "
-             "-rr = round-robin chain placement, else load-aware)"]
+             "-rr = round-robin chain placement; -deg = shard 0 lost at "
+             "T/4; -resize = live 8->4 reshard at T/2)"]
     full = res.get("full", {})
-    for name, _cap, _pl in CAPS:
+    for name, _cap, _pl, _fault in CAPS:
         r = res.get(name)
         if not r:
             continue
         loss = (full.get("hit_ratio", 0) - r["hit_ratio"])
         lines.append(
-            f"  cap={name:5s} shed={r['shed_rate']:.2%} "
-            f"retried={r['retried']} dropped={r['dropped']} "
+            f"  cap={name:9s} shed={r['shed_rate']:.2%} "
+            f"retried={r['retried']} fallbacks={r['fallbacks']} "
+            f"dropped={r['dropped']} goodput={r['goodput']:.1f}/tick "
             f"hit_ratio={r['hit_ratio']:.3f} (Δ vs full {loss:+.4f}) "
             f"buf={r['send_buffer_bytes']}B (k={r['k_depth']})")
     for cap in ("2x", "1x"):

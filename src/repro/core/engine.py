@@ -103,6 +103,37 @@ contract:
   sequential engine's.  Sharded tables are then bit-equal to this
   module's engines, not merely hit/miss-equivalent, and differential
   tests may compare tables across device counts.
+
+Elasticity (drain / re-insert and degraded shards)
+--------------------------------------------------
+The same two primitives carry the elastic operations, so resilience needs
+no new table semantics:
+
+* **Live resharding** (``ShardedCacheClient.reshard(D')``): every chain in
+  the client's registry is drained from the old mesh with batched
+  OP_CHAIN_GET sweeps — each chain survives as its longest-hit PREFIX
+  (an evicted shallow chunk orphans the deeper resident chunks; their
+  pages are returned for pool release, the entries are dropped) — and the
+  surviving prefixes are re-inserted into a freshly initialised D' table
+  with OP_CHAIN_PUT batches in canonical caller order.  Because
+  ``num_sets`` is unchanged, every set receives at most its associativity
+  of previously co-resident entries: the rebuild can never evict, and the
+  rebuilt table is bit-equal to a COLD sequential engine fed the recorded
+  canonical stream (``last_drain_stream``) — the same oracle relation as
+  the per-tick ordering guarantee, lifted to whole-table rebuilds.
+  ``num_sets`` need not divide D': the table tail is padded with EMPTY
+  sets (``sets_per_shard`` = ceil) that no key can hash into.
+
+* **Degraded shards** (``ShardedCacheClient.mark_degraded(s)``): a lost
+  shard's sets are wiped to EMPTY host-side and the shard is excluded
+  from placement; any chain that still homes a chunk there sheds — the
+  SAME atomic whole-chain shed as a capacity overflow, feeding the same
+  serve-tier retry queue, so the serving invariants (no holes, no
+  partial mutations) carry over unchanged.  Orphaned pages are reported
+  once for pool release.  A chain that keeps shedding past
+  ``max_shed_retries`` (permanently homed on a dead shard) is served as
+  a PLAIN prefill — counted in ``fallbacks`` with its latency charged
+  from the ORIGINAL submit tick — never dropped.
 """
 
 from __future__ import annotations

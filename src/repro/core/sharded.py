@@ -71,9 +71,22 @@ from repro.core.multistep import (AccessResult, MSLRUConfig, OP_ACCESS,
 from repro.launch.mesh import shard_map_compat as _shard_map
 
 __all__ = ["make_sharded_engine", "shard_table", "ShardedCacheClient",
-           "per_peer_cap"]
+           "per_peer_cap", "sets_per_shard"]
 
 _INT32_MAX = np.int32(2**31 - 1)
+
+
+def sets_per_shard(num_sets: int, ndev: int) -> int:
+    """Sets owned by each shard: ``ceil(num_sets / ndev)``.
+
+    ``num_sets`` is a power of two but an elastic mesh is whatever survived
+    — 7 hosts own ``ceil(S/7)`` sets each and the table is padded with
+    EMPTY sets up to ``ndev * s_local`` rows (``shard_table``).  The route
+    math is unchanged: ``owner = sid // s_local`` and ``local = sid %
+    s_local`` are exact for ``sid = owner * s_local + local``, and no key
+    ever hashes into the padded tail (``set_index_for`` yields sids below
+    ``num_sets``)."""
+    return -(-num_sets // ndev)
 
 
 def per_peer_cap(cap, q_local: int, ndev: int) -> int:
@@ -98,7 +111,20 @@ def per_peer_cap(cap, q_local: int, ndev: int) -> int:
 
 
 def shard_table(table, mesh, axis: str = "cache"):
-    """Place a (S, A, C) table with sets sharded over ``axis``."""
+    """Place a (S, A, C) table with sets sharded over ``axis``.
+
+    When ``ndev`` does not divide S (elastic meshes — e.g. 7 survivors of
+    8), the table is padded with EMPTY sets to ``ndev * ceil(S/ndev)`` rows
+    so every shard owns the same row count; the padded sets live on the
+    last shard and are unreachable (no key hashes there).  Host-side reads
+    must slice back to ``[:num_sets]``."""
+    ndev = mesh.shape[axis]
+    s = table.shape[0]
+    pad = ndev * sets_per_shard(s, ndev) - s
+    if pad:
+        empty = jnp.zeros((pad,) + table.shape[1:], table.dtype)
+        empty = empty.at[:, :, 0].set(EMPTY_KEY)
+        table = jnp.concatenate([jnp.asarray(table), empty])
     return jax.device_put(
         table, jax.NamedSharding(mesh, P(axis, None, None)))
 
@@ -152,8 +178,9 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
     update = make_conflict_update(cfg, engine, max_rounds, use_kernel,
                                   block_b, interpret)
     ndev = mesh.shape[axis]
-    assert cfg.num_sets % ndev == 0
-    s_local = cfg.num_sets // ndev
+    # elastic meshes: ndev need not divide num_sets — shards own
+    # ceil(S/ndev) sets each and shard_table pads the tail with EMPTY sets
+    s_local = sets_per_shard(cfg.num_sets, ndev)
     kp, v = cfg.key_planes, cfg.value_planes
     ve = max(v, 1)
 
@@ -374,19 +401,43 @@ class ShardedCacheClient:
             "key_planes=2 is not supported here")
         assert placement in ("load", "roundrobin"), placement
         self.cfg = cfg
-        self.mesh = mesh
-        self.ndev = mesh.shape[axis]
         self.cap = cap
         self.placement = placement
-        self._s_local = cfg.num_sets // self.ndev
-        self._run = make_sharded_engine(
-            cfg, mesh, axis=axis, cap=cap, engine=engine,
-            use_kernel=use_kernel, block_b=block_b, interpret=interpret)
+        # engine ctor args, kept so reshard() can rebuild on a new mesh
+        self._axis = axis
+        self._engine_kwargs = dict(engine=engine, use_kernel=use_kernel,
+                                   block_b=block_b, interpret=interpret)
+        self._bind_mesh(mesh)
         self.table = shard_table(init_table(cfg), mesh, axis)
         self.sheds = 0          # total rows shed by the capacity pre-check
         self.shed_groups = 0    # total groups (chains / plain rows) shed
         self.last_shed = None   # (n,) bool, caller order, of the last access
         self.route_shape = None  # (q, k_depth, payload planes) of last call
+        # -- elasticity / fault state -------------------------------------
+        self.degraded: set[int] = set()   # shards treated as lost: every
+        #   group with a chunk HOMED there (or packed onto that slab) sheds
+        self.degraded_sheds = 0           # groups shed because of degraded
+        self.fault_sheds = 0              # groups shed by injected faults
+        self._transient_fail = None       # [calls_left, frac, rng]
+        # chain registry: tuple(chain hashes) -> last-touch counter.  The
+        # serving tier notes every chain it serves (``note_chain``) so a
+        # live reshard can drain the table chain-by-chain — the table
+        # itself stores bare chunk->page entries with no chain structure.
+        self._chain_registry: dict[tuple, int] = {}
+        self._touch = 0
+        self.last_drain_stream: list[dict] = []   # reshard()'s canonical
+        #   re-insert batches (the sequential-oracle replay stream)
+
+    def _bind_mesh(self, mesh):
+        """(Re)bind the routing engine to ``mesh`` — used by __init__ and
+        by ``reshard`` when the device count changes."""
+        self.mesh = mesh
+        self.ndev = mesh.shape[self._axis]
+        self._s_local = sets_per_shard(self.cfg.num_sets, self.ndev)
+        self._run = make_sharded_engine(self.cfg, mesh, axis=self._axis,
+                                        cap=self.cap, **self._engine_kwargs)
+        # full-cap engine for control-plane sweeps (drain); built lazily
+        self._full_run = self._run if self.cap == "full" else None
 
     def access(self, keys, vals=None, ops=None, chain_ids=None):
         keys = np.asarray(keys, np.int32).reshape(-1)
@@ -424,12 +475,18 @@ class ShardedCacheClient:
                 merged[gk] = list(g)
                 order.append(gk)
         slab_groups: list[list[list[int]]] = [[] for _ in range(self.ndev)]
+        # degraded shards neither host query slabs (a dead device sends
+        # nothing) nor answer routed probes (any group homing a chunk there
+        # is shed for re-prefill) — see mark_degraded
+        healthy = [d for d in range(self.ndev) if d not in self.degraded]
+        assert healthy, "every shard degraded; reshard() to a live mesh"
         owners = None
-        if self.cap != "full":
+        if self.cap != "full" or self.degraded or self._transient_fail:
             owners = np.asarray(
                 set_index_for(self.cfg, jnp.asarray(keys[:, None]))
             ) // self._s_local
-        if owners is not None and self.placement == "load" and self.ndev > 1:
+        if (owners is not None and self.placement == "load"
+                and len(healthy) > 1):
             # greedy load-aware deal: place each group on the slab where
             # its peak resulting per-owner depth stays smallest — judged
             # on exactly the per-(slab, owner) counts the shed pre-check
@@ -443,7 +500,7 @@ class ShardedCacheClient:
             # group goes to the emptiest one and q grows a step.)
             counts = np.zeros((self.ndev, self.ndev), np.int64)
             rows_ct = np.zeros(self.ndev, np.int64)
-            balanced = (n + self.ndev - 1) // self.ndev
+            balanced = (n + len(healthy) - 1) // len(healthy)
             cap_rows = 1 << max(0, balanced - 1).bit_length()
             for gk in order:
                 g = merged[gk]
@@ -453,10 +510,10 @@ class ShardedCacheClient:
                     peaks = (counts[:, touched] + gcnt[touched]).max(axis=1)
                 else:
                     peaks = np.zeros(self.ndev, np.int64)
-                cands = [d for d in range(self.ndev)
+                cands = [d for d in healthy
                          if rows_ct[d] + len(g) <= cap_rows]
                 if not cands:
-                    cands = list(range(self.ndev))
+                    cands = healthy
                 best = min(cands,
                            key=lambda d: (int(peaks[d]), int(rows_ct[d]), d))
                 counts[best] += gcnt
@@ -464,7 +521,7 @@ class ShardedCacheClient:
                 slab_groups[best].append(g)
         else:
             for j, gk in enumerate(order):
-                slab_groups[j % self.ndev].append(merged[gk])
+                slab_groups[healthy[j % len(healthy)]].append(merged[gk])
 
         # q (and hence the per-peer depth) is fixed from the un-shed packing
         # so the shapes the engine compiles for do not depend on shed luck
@@ -475,16 +532,32 @@ class ShardedCacheClient:
         # host-side shed pre-check: mirror the device's per-(slab, owner)
         # rank counting in slab order, at GROUP granularity — if any row of
         # a group would overflow its owner's per-peer depth, the whole
-        # group is shed (atomically) and retried by the serving tier
+        # group is shed (atomically) and retried by the serving tier.
+        # Degraded-owner groups and injected transient route failures shed
+        # through the same path: whole groups, retried next tick, never a
+        # half-mutated chain.
         shed = np.zeros(n, bool)
         slabs: list[list[int]] = []
-        if self.cap != "full":
+        dg = (np.array(sorted(self.degraded), np.int64)
+              if self.degraded else None)
+        tf = self._transient_fail
+        if owners is not None:
             for gs in slab_groups:
                 counts = np.zeros(self.ndev, np.int64)
                 rows: list[int] = []
                 for g in gs:
                     gcnt = np.bincount(owners[g], minlength=self.ndev)
-                    if np.any(counts + gcnt > k_depth):
+                    if dg is not None and gcnt[dg].any():
+                        shed[g] = True
+                        self.shed_groups += 1
+                        self.degraded_sheds += 1
+                        continue
+                    if tf is not None and tf[2].random() < tf[1]:
+                        shed[g] = True
+                        self.shed_groups += 1
+                        self.fault_sheds += 1
+                        continue
+                    if self.cap != "full" and np.any(counts + gcnt > k_depth):
                         shed[g] = True
                         self.shed_groups += 1
                         continue
@@ -495,6 +568,10 @@ class ShardedCacheClient:
         else:
             slabs = [[i for g in gs for i in g] for gs in slab_groups]
         self.last_shed = shed
+        if tf is not None:
+            tf[0] -= 1
+            if tf[0] <= 0:
+                self._transient_fail = None
 
         bp = q * self.ndev
         k = np.zeros(bp, np.int32)
@@ -551,10 +628,193 @@ class ShardedCacheClient:
             evicted_valid=ev_ok_u,
         )
 
+    # -- elasticity / fault tolerance -------------------------------------
+
+    def note_chain(self, chain) -> None:
+        """Register a chain (sequence of chunk hashes) as live.  The table
+        stores bare chunk->page entries with no chain structure, so the
+        serving tier notes every chain it touches; ``reshard`` drains the
+        registry in last-touch (LRU-first) order.  Re-noting refreshes the
+        touch counter; prefixes of a longer chain need no separate entry
+        (the longer drain sweep covers them)."""
+        key = tuple(int(h) for h in np.asarray(chain).reshape(-1))
+        if not key:
+            return
+        self._touch += 1
+        self._chain_registry[key] = self._touch
+
+    def inject_route_failures(self, calls: int = 1, frac: float = 0.5,
+                              seed: int = 0) -> None:
+        """Fault injection: for the next ``calls`` access() calls, each
+        group independently sheds with probability ``frac`` (on top of the
+        capacity/degraded checks).  Models transient route loss — the
+        serving tier's retry queue must absorb it without drops."""
+        self._transient_fail = [int(calls), float(frac),
+                                np.random.default_rng(seed)]
+
+    def mark_degraded(self, shard: int) -> list[int]:
+        """Treat ``shard`` as lost: wipe its sets from the table and shed
+        every future group that homes a chunk there (permanently, until a
+        ``reshard``).  Returns the ORPHANED pages — value-plane-0 ints of
+        the entries that lived on the lost shard — so the serving tier can
+        reconcile its page pool (release reservations the shard held).
+        Orphaned chains are not errors: their next serve misses, sheds, and
+        re-prefills through the normal shed/retry + plain-fallback path."""
+        assert 0 <= shard < self.ndev, shard
+        if shard in self.degraded:
+            return []
+        self.degraded.add(shard)
+        assert len(self.degraded) < self.ndev, \
+            "every shard degraded; reshard() to a live mesh"
+        kp = self.cfg.key_planes
+        tbl = np.array(jax.device_get(self.table))[: self.cfg.num_sets]
+        lo = shard * self._s_local
+        hi = min((shard + 1) * self._s_local, self.cfg.num_sets)
+        live = tbl[lo:hi, :, 0] != EMPTY_KEY
+        orphans = ([int(p) for p in tbl[lo:hi, :, kp][live]]
+                   if self.cfg.value_planes else [])
+        tbl[lo:hi] = 0
+        tbl[lo:hi, :, 0] = EMPTY_KEY
+        self.table = shard_table(tbl, self.mesh, self._axis)
+        return orphans
+
+    def _full_engine(self):
+        """Full-cap engine on the current mesh for control-plane sweeps
+        (drain): a drain must observe every entry, never shed on capacity."""
+        if self._full_run is None:
+            self._full_run = make_sharded_engine(
+                self.cfg, self.mesh, axis=self._axis, cap="full",
+                **self._engine_kwargs)
+        return self._full_run
+
+    def _sweep_access(self, keys, vals, ops, chain_ids):
+        """access() with sheds disabled: full cap, degraded and injected
+        faults bypassed.  Used by reshard()'s drain/re-insert sweeps."""
+        run, cap = self._run, self.cap
+        degraded, tf = self.degraded, self._transient_fail
+        self._run, self.cap = self._full_engine(), "full"
+        self.degraded, self._transient_fail = set(), None
+        try:
+            return self.access(keys, vals, ops, chain_ids)
+        finally:
+            self._run, self.cap = run, cap
+            self.degraded, self._transient_fail = degraded, tf
+
+    def reshard(self, new_ndev: int, drain_batch: int = 256) -> list[int]:
+        """Live D→D′ reshard: drain every registered chain from the current
+        mesh via batched OP_CHAIN_GET sweeps, rebuild a cold table on a
+        ``new_ndev``-device mesh, and re-insert the drained prefixes via
+        OP_CHAIN_PUT in canonical caller order.
+
+        Bit-reproducibility: ``num_sets`` is unchanged, so each set gets
+        back exactly the entries it held (≤ assoc — they were co-resident),
+        meaning the rebuild never evicts; with the canonical ``order``
+        ranks the rebuilt table is bit-equal to a cold SEQUENTIAL engine
+        fed the same stream — recorded in ``self.last_drain_stream`` as the
+        oracle's replay input (list of {keys, vals, ops, chain_ids}
+        batches, numpy, in call order).
+
+        What survives: for each registry chain, its longest resident prefix
+        (lookups stop at the first miss, so deeper chunks behind an evicted
+        or lost one are unreachable).  Everything live-but-unreachable is
+        returned as ORPHANED pages for pool reconciliation; those chains
+        re-prefill on their next serve.  Degraded shards are cleared — the
+        new mesh is assumed healthy."""
+        assert new_ndev >= 1
+        assert self.cfg.value_planes >= 1, \
+            "reshard drains (key, page) pairs; needs a value plane"
+        kp = self.cfg.key_planes
+        # 1. snapshot live entries host-side: key -> value planes
+        tbl = np.asarray(jax.device_get(self.table))[: self.cfg.num_sets]
+        live = tbl[:, :, 0] != EMPTY_KEY
+        live_map = {int(k): vv.astype(np.int32)
+                    for k, vv in zip(tbl[live][:, 0], tbl[live][:, kp:])}
+        # 2. drain: CHAIN_GET sweeps in last-touch (LRU-first) order — the
+        # canonical re-insert order, so the rebuilt recency lanes rank
+        # chains exactly as serving touched them
+        chains = sorted(self._chain_registry,
+                        key=self._chain_registry.__getitem__)
+        drained: list[tuple] = []      # (chain_prefix,) surviving prefixes
+        reached: set[int] = set()
+        batch: list[tuple] = []
+        rows = 0
+
+        def flush():
+            nonlocal rows
+            if not batch:
+                return
+            keys = np.concatenate(
+                [np.asarray(c, np.int32) for c in batch])
+            ops = np.full(keys.size, OP_CHAIN_GET, np.int32)
+            cids = np.concatenate(
+                [np.full(len(c), j, np.int32)
+                 for j, c in enumerate(batch)])
+            hit = self._sweep_access(keys, None, ops, cids).hit
+            off = 0
+            for c in batch:
+                h = hit[off: off + len(c)]
+                off += len(c)
+                hitlen = len(c) if h.all() else int(np.argmin(h))
+                if hitlen:
+                    drained.append(c[:hitlen])
+                    reached.update(c[:hitlen])
+            batch.clear()
+            rows = 0
+
+        for c in chains:
+            if rows + len(c) > drain_batch and batch:
+                flush()
+            batch.append(c)
+            rows += len(c)
+        flush()
+        orphans = [int(live_map[k][0]) for k in live_map
+                   if k not in reached]
+        # 3. rebuild on the new mesh, cold
+        from repro.launch.mesh import make_cache_mesh
+        self.degraded.clear()
+        self._bind_mesh(make_cache_mesh(new_ndev))
+        self.table = shard_table(init_table(self.cfg), self.mesh,
+                                 self._axis)
+        # 4. re-insert the surviving prefixes via CHAIN_PUT in the same
+        # canonical order, batched; record the stream for the oracle
+        self.last_drain_stream = []
+        self._chain_registry = {
+            c: t for c, t in self._chain_registry.items()
+            if c and int(c[0]) in reached}
+        batch2: list[tuple] = []
+        rows = 0
+
+        def flush2():
+            nonlocal rows
+            if not batch2:
+                return
+            keys = np.concatenate(
+                [np.asarray(c, np.int32) for c in batch2])
+            vals = np.concatenate(
+                [np.stack([live_map[k] for k in c]) for c in batch2])
+            ops = np.full(keys.size, OP_CHAIN_PUT, np.int32)
+            cids = np.concatenate(
+                [np.full(len(c), j, np.int32)
+                 for j, c in enumerate(batch2)])
+            self.last_drain_stream.append(dict(
+                keys=keys, vals=vals, ops=ops, chain_ids=cids))
+            self._sweep_access(keys, vals, ops, cids)
+            batch2.clear()
+            rows = 0
+
+        for c in drained:
+            if rows + len(c) > drain_batch and batch2:
+                flush2()
+            batch2.append(c)
+            rows += len(c)
+        flush2()
+        return orphans
+
     @property
     def occupancy(self) -> float:
-        valid = np.asarray(jax.device_get(self.table))[:, :, 0] != EMPTY_KEY
-        return float(valid.mean())
+        # elastic meshes pad the sharded table with EMPTY sets — slice back
+        tbl = np.asarray(jax.device_get(self.table))[: self.cfg.num_sets]
+        return float((tbl[:, :, 0] != EMPTY_KEY).mean())
 
 
 def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",

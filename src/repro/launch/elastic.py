@@ -21,10 +21,25 @@ pieces a 1000-node deployment needs around the pure-JAX core:
 The in-process pieces (timing stats, re-mesh planning, restore-on-new-mesh)
 are unit-tested; the cross-host transport (file/KV heartbeats) is a thin
 I/O shim by design.
+
+Serving meshes add two pieces:
+
+  * ``plan_cache_remesh`` — the cache analogue of ``plan_remesh``: the set
+    table shards over a flat 1-D mesh and, unlike the training grid, ANY
+    surviving device count works (shards own ``ceil(S/D')`` sets each;
+    ``core.sharded.sets_per_shard``), so the plan is about padding and
+    rebuild cost, not divisor hunting.
+  * ``FaultPlan`` / ``FaultEvent`` — a seeded, deterministic schedule of
+    faults (shard degrade/loss, D→D' resize, transient route failure)
+    that ``ServeEngine.run_until_done(fault_plan=...)`` applies at tick
+    boundaries.  The chaos differential suite (tests/test_chaos.py) drives
+    the same workload with and without a plan and asserts token equality
+    for every surviving request — faults may cost goodput, never answers.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -32,7 +47,8 @@ from pathlib import Path
 
 import numpy as np
 
-__all__ = ["Heartbeater", "Watchdog", "StragglerTracker", "plan_remesh"]
+__all__ = ["Heartbeater", "Watchdog", "StragglerTracker", "plan_remesh",
+           "plan_cache_remesh", "FaultEvent", "FaultPlan"]
 
 
 class Heartbeater:
@@ -60,13 +76,22 @@ class Watchdog:
         for h in range(self.n_hosts):
             p = self.dir / f"host_{h}.hb"
             if p.exists():
+                # a corrupt / partially-written / wrong-shape heartbeat is
+                # indistinguishable from a crashed writer: treat the host
+                # as dead, never raise out of the watchdog loop
                 try:
                     rec = json.loads(p.read_text())
-                    if now - rec["t"] <= self.dead_after:
+                    if now - float(rec["t"]) <= self.dead_after:
                         out.append(h)
-                except (json.JSONDecodeError, KeyError):
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError, OSError):
                     pass
         return out
+
+    def dead(self) -> list[int]:
+        """Complement of ``alive()`` over the configured host count."""
+        live = set(self.alive())
+        return [h for h in range(self.n_hosts) if h not in live]
 
 
 class StragglerTracker:
@@ -87,10 +112,16 @@ class StragglerTracker:
             t.pop(0)
 
     def check(self) -> list[int]:
-        med = np.median([t[-1] for t in self.times if t])
+        last = [t[-1] for t in self.times if t]
+        if not last:
+            return []            # nothing recorded yet: nobody to flag
+        med = float(np.median(last))
         flagged = []
         for h, t in enumerate(self.times):
-            if t and t[-1] > self.factor * med:
+            # med == 0 (zero-duration steps: mocked clocks, sub-resolution
+            # timers) would make any positive time a "straggler" — treat a
+            # degenerate median as healthy instead of flagging the fleet
+            if t and med > 0.0 and t[-1] > self.factor * med:
                 self.strikes[h] += 1
             else:
                 self.strikes[h] = 0
@@ -120,3 +151,109 @@ def plan_remesh(n_devices: int, model_parallel: int,
         "devices_idle": n_devices - used,
         "grad_accum_scale": micro_scale,
     }
+
+
+def plan_cache_remesh(n_devices: int, num_sets: int) -> dict:
+    """Serving-mesh analogue of ``plan_remesh`` for the sharded cache.
+
+    The cache mesh is flat 1-D and the table shards by SETS, so — unlike
+    the training grid — every surviving device count is usable: each shard
+    owns ``ceil(num_sets / D')`` sets and the table pads with EMPTY sets to
+    ``D' * s_local`` rows (``core.sharded``).  The plan reports the shard
+    geometry plus how many padded (dead-weight) sets the uneven split
+    costs, so a coordinator can decide between resharding to D' now or
+    waiting for a replacement host."""
+    assert n_devices >= 1 and num_sets >= 1
+    s_local = -(-num_sets // n_devices)
+    padded = n_devices * s_local - num_sets
+    return {
+        "mesh_shape": (n_devices,),
+        "sets_per_shard": s_local,
+        "padded_sets": padded,
+        "even": padded == 0,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``kind``:
+
+      * ``"degrade"`` / ``"lose"`` — mark shard ``arg`` lost (same client
+        path: a degraded shard is treated exactly as a dead one),
+      * ``"resize"``    — live-reshard the cache mesh to ``arg`` devices,
+      * ``"route_fail"``— transient: for the next ``arg`` backend calls
+        each group sheds with probability ``frac`` (rng seeded ``seed``).
+    """
+    tick: int
+    kind: str
+    arg: int
+    frac: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("degrade", "lose", "resize", "route_fail"), \
+            self.kind
+
+
+class FaultPlan:
+    """A deterministic fault schedule for the chaos harness.
+
+    ``ServeEngine.run_until_done(fault_plan=...)`` pops due events at each
+    tick boundary (before the tick's admissions) and applies them via
+    ``ServeEngine.apply_fault``.  Determinism contract: the same plan over
+    the same workload yields the same shed/fallback/rebuild sequence, so
+    chaos runs are reproducible and diffable against the fault-free run.
+    """
+
+    def __init__(self, events):
+        self.events = sorted(events, key=lambda e: e.tick)
+        self.applied: list[FaultEvent] = []
+
+    def pop_due(self, tick: int) -> list[FaultEvent]:
+        """Events scheduled at or before ``tick``, removed from the plan."""
+        due = [e for e in self.events if e.tick <= tick]
+        if due:
+            self.events = [e for e in self.events if e.tick > tick]
+            self.applied.extend(due)
+        return due
+
+    def __len__(self):
+        return len(self.events)
+
+    @classmethod
+    def seeded(cls, seed: int, *, ticks: int, ndev: int,
+               n_events: int = 3, allow_resize: bool = True) -> "FaultPlan":
+        """Random-but-reproducible plan: ``n_events`` faults spread over
+        ``[1, ticks)`` against a ``ndev``-device mesh.  Never degrades the
+        last healthy shard (the client forbids it); a resize targets a
+        device count in ``[1, ndev]``."""
+        rng = np.random.default_rng(seed)
+        kinds = ["degrade", "route_fail"] + (["resize"] if allow_resize else [])
+        # draw the ticks first and walk them sorted, so the degraded-set
+        # tracking below follows APPLICATION order (events apply by tick)
+        times = sorted(int(rng.integers(1, max(2, ticks)))
+                       for _ in range(n_events))
+        events, degraded = [], set()
+        for t in times:
+            kind = kinds[int(rng.integers(len(kinds)))]
+            if kind == "degrade":
+                healthy = [d for d in range(ndev) if d not in degraded]
+                if len(healthy) <= 1:
+                    kind = "route_fail"
+                else:
+                    shard = int(healthy[int(rng.integers(len(healthy)))])
+                    degraded.add(shard)
+                    events.append(FaultEvent(t, "degrade", shard))
+                    continue
+            if kind == "resize":
+                # a resize rebuilds on a fresh healthy mesh (degraded set
+                # clears), so later degrades may re-target any shard
+                events.append(FaultEvent(
+                    t, "resize", int(rng.integers(1, ndev + 1))))
+                degraded.clear()
+            else:
+                events.append(FaultEvent(
+                    t, "route_fail", int(rng.integers(1, 3)),
+                    frac=float(rng.uniform(0.2, 0.6)),
+                    seed=int(rng.integers(2**31))))
+        return cls(events)

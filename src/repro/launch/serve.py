@@ -37,6 +37,18 @@ def main():
                     help="inflight: one decode launch/tick advances every "
                          "slot at its own length; roundrobin: legacy "
                          "min-length schedule (equivalence oracle)")
+    ap.add_argument("--sharded", type=int, default=0, metavar="D",
+                    help="back the prefix cache with a D-device "
+                         "ShardedCacheClient (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=D on CPU)")
+    ap.add_argument("--cap", type=float, default=0.0,
+                    help="per-peer cap multiplier for --sharded "
+                         "(0 = 'full', no shedding)")
+    ap.add_argument("--chaos-seed", type=int, default=-1,
+                    help="run under a seeded FaultPlan (requires --sharded); "
+                         "faults apply at tick boundaries")
+    ap.add_argument("--chaos-events", type=int, default=3,
+                    help="events in the seeded FaultPlan")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -46,10 +58,29 @@ def main():
     pool = pc = None
     if not args.no_prefix_cache:
         pool = PagedKVPool(cfg, n_pages=256, page_tokens=args.chunk_tokens)
-        pc = PrefixCache(num_sets=256, m=2, p=4, chunk_tokens=args.chunk_tokens)
+        backend = None
+        if args.sharded:
+            from repro.core.multistep import MSLRUConfig
+            from repro.core.sharded import ShardedCacheClient
+            from repro.launch.mesh import make_cache_mesh
+            backend = ShardedCacheClient(
+                MSLRUConfig(num_sets=256, m=2, p=4, value_planes=1),
+                make_cache_mesh(args.sharded),
+                cap=(args.cap if args.cap > 0 else "full"))
+        pc = PrefixCache(num_sets=256, m=2, p=4,
+                         chunk_tokens=args.chunk_tokens, backend=backend)
     eng = ServeEngine(model, params, slots=4, max_len=256,
                       prefix_cache=pc, pool=pool,
                       decode_mode=args.decode_mode)
+
+    plan = None
+    if args.chaos_seed >= 0:
+        assert args.sharded, "--chaos-seed needs --sharded (fault targets)"
+        from repro.launch.elastic import FaultPlan
+        plan = FaultPlan.seeded(args.chaos_seed, ticks=args.requests,
+                                ndev=args.sharded,
+                                n_events=args.chaos_events)
+        print(f"[serve] fault plan: {plan.events}")
 
     rng = np.random.default_rng(0)
     templates = [rng.integers(1, cfg.vocab_size, args.prefix_tokens).astype(np.int32)
@@ -61,8 +92,11 @@ def main():
         suffix = rng.integers(1, cfg.vocab_size, 4 + i % 13).astype(np.int32)
         prompt = np.concatenate([templates[int(picks[i]) % args.templates], suffix])
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
-    ticks = eng.run_until_done()
+    ticks = eng.run_until_done(fault_plan=plan)
     dt = time.time() - t0
+    if plan is not None:
+        print(f"[serve] faults applied: {eng.fault_log}, "
+              f"fallbacks={eng.fallbacks}")
 
     skipped = sum(r.prefill_skipped for r in eng.finished)
     computed = sum(r.prefill_computed for r in eng.finished)

@@ -358,6 +358,8 @@ class ServeEngine:
         self.launch_rows = 0         # active rows computed across launches
         self._last_tok = np.zeros((slots, 1), np.int32)  # per-slot last token
         self._service_ticks: list[int] = []  # per-request admit latencies
+        self.fallbacks = 0           # requests that exhausted shed retries
+        self.fault_log: list[tuple[int, str]] = []  # (tick, event) applied
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
@@ -833,8 +835,16 @@ class ServeEngine:
         while self._free_slots and (self.retry_queue or self.queue):
             src = self.retry_queue if self.retry_queue else self.queue
             req = src.pop(0)
-            if req.shed_count >= self.max_shed_retries:
-                req.force_plain = True     # guaranteed progress
+            if (req.shed_count >= self.max_shed_retries
+                    and not req.force_plain):
+                # guaranteed progress: plain (cache-less) prefill.  The
+                # request keeps its ORIGINAL submit_tick, so its
+                # service_ticks sample spans the whole shed odyssey, and
+                # the fallback is counted — not disguised as a normal admit
+                req.force_plain = True
+                self.fallbacks += 1
+                if self.prefix_cache is not None:
+                    self.prefix_cache.note_fallback()
             req.slot = self._free_slots.pop()
             admits.append(req)
         pending: list = []
@@ -914,11 +924,63 @@ class ServeEngine:
             self.finished.append(r)
         self.ticks += 1
 
-    def run_until_done(self, max_ticks: int = 10000):
+    # -- elasticity / fault tolerance ---------------------------------------
+    def mark_degraded(self, shard: int) -> int:
+        """Treat a backend shard as lost (see
+        ``ShardedCacheClient.mark_degraded``).  Owner reconciliation: the
+        lost shard's published pages are ORPHANS — no table entry maps to
+        them any more — so they release back to the pool here (pinned ones
+        defer until their readers unpin; that is the pool's deferred-free
+        contract).  Orphaned chains are not errors: their next serve
+        misses and re-prefills through the normal shed/retry + plain-
+        fallback machinery.  Returns the orphan count."""
+        orphans = self.prefix_cache.mark_degraded(shard)
+        for pg in orphans:
+            self.pool.release(pg)
+        self.fault_log.append((self.ticks, f"degrade:{shard}"))
+        return len(orphans)
+
+    def reshard(self, new_ndev: int) -> int:
+        """Live D→D' reshard at a tick boundary: serving is between ticks
+        (call sites: ``run_until_done``'s fault hook, or any host driver
+        between ``step()`` calls), the backend drains and rebuilds on the
+        new mesh (``ShardedCacheClient.reshard``), and the queue / retry
+        queue / active slots carry across untouched — in-flight requests
+        keep decoding against their slot caches; only future admissions see
+        the new mesh.  Unreachable entries' pages release to the pool (same
+        deferred-free contract as ``mark_degraded``).  Returns the orphan
+        count."""
+        orphans = self.prefix_cache.reshard(new_ndev)
+        for pg in orphans:
+            self.pool.release(pg)
+        self.fault_log.append((self.ticks, f"resize:{new_ndev}"))
+        return len(orphans)
+
+    def apply_fault(self, ev) -> None:
+        """Apply one fault event (duck-typed ``launch.elastic.FaultEvent``:
+        kind/arg/frac/seed) — "degrade"/"lose" a shard, "resize" the mesh,
+        or inject transient "route_fail" sheds into the backend."""
+        if ev.kind in ("degrade", "lose"):
+            self.mark_degraded(ev.arg)
+        elif ev.kind == "resize":
+            self.reshard(ev.arg)
+        elif ev.kind == "route_fail":
+            self.prefix_cache.cache.inject_route_failures(
+                calls=ev.arg, frac=ev.frac, seed=ev.seed)
+            self.fault_log.append((self.ticks, f"route_fail:{ev.arg}"))
+        else:
+            raise ValueError(f"unknown fault kind: {ev.kind!r}")
+
+    def run_until_done(self, max_ticks: int = 10000, fault_plan=None):
         """Drive ticks until every queued/active request retires; returns
-        the tick count (the bench's ticks-to-drain)."""
+        the tick count (the bench's ticks-to-drain).  ``fault_plan``
+        (``launch.elastic.FaultPlan``) injects scheduled faults at their
+        tick boundaries — before the tick's admissions, never mid-call."""
         t = 0
         while (self.queue or self.retry_queue or self.active) and t < max_ticks:
+            if fault_plan is not None:
+                for ev in fault_plan.pop_due(self.ticks):
+                    self.apply_fault(ev)
             self.step()
             t += 1
         return t
@@ -937,6 +999,7 @@ class ServeEngine:
             "launches_per_token": (self.launch_rows / self.decode_tokens
                                    if self.decode_tokens else 0.0),
             "requests_serviced": len(self._service_ticks),
+            "fallbacks": self.fallbacks,
             "service_ticks_p50": p50,
             "service_ticks_p99": p99,
         }

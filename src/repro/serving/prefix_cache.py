@@ -145,10 +145,42 @@ class PrefixCache:
         self.device_calls = 0
         self.shed = 0      # chain-events a bounded backend dropped
         self.retried = 0   # chains re-submitted after a shed
+        self.fallbacks = 0  # requests that exhausted shed retries and fell
+        #   back to plain (cache-less) prefill — ServeEngine.note_fallback
         # per-request ticks-to-service samples (queue wait + shed retries),
         # reported by the serving tier via ``note_service_latency`` — shed
         # starvation shows up here as a long tail, not just event counts
         self.service_ticks: list[int] = []
+
+    def _note_chains(self, chains, skip=None) -> None:
+        """Register served chains with an elastic backend's chain registry
+        (``ShardedCacheClient.note_chain``) so a live ``reshard`` can drain
+        them; no-op for backends without one.  ``skip[c]`` suppresses chain
+        ``c`` (shed chains executed no rows — nothing of theirs to drain
+        beyond what earlier ticks already registered)."""
+        note = getattr(self.cache, "note_chain", None)
+        if note is None:
+            return
+        for c, chain in enumerate(chains):
+            if chain and not (skip is not None and skip[c]):
+                note(chain)
+
+    # -- elasticity passthrough (sharded backends) --------------------------
+    def reshard(self, new_ndev: int, drain_batch: int = 256) -> list[int]:
+        """Drain + rebuild the backend table on a ``new_ndev`` mesh (see
+        ``ShardedCacheClient.reshard``).  Returns orphaned page indices the
+        caller must release to its pool."""
+        return self.cache.reshard(new_ndev, drain_batch=drain_batch)
+
+    def mark_degraded(self, shard: int) -> list[int]:
+        """Treat a backend shard as lost (see
+        ``ShardedCacheClient.mark_degraded``); returns orphaned pages."""
+        return self.cache.mark_degraded(shard)
+
+    def note_fallback(self) -> None:
+        """Count one request falling back to plain prefill after
+        exhausting its shed retries (reported in ``stats()``)."""
+        self.fallbacks += 1
 
     # -- batched engine access ----------------------------------------------
     def _call(self, keys: list[int], ops, vals: list[int] | None = None,
@@ -257,6 +289,7 @@ class PrefixCache:
             chain_shed[c] |= bool(shed[i: i + m].any())
             i += m
         self.shed += int(chain_shed.sum())
+        self._note_chains(chains, skip=chain_shed)
 
         results: list[ChainServe] = []
         i = 0
@@ -303,6 +336,7 @@ class PrefixCache:
         flat = [h for c in chains for h in c]
         if not flat:
             return [[] for _ in chains]
+        self._note_chains(chains)
         out, shed = self._call(flat, OP_LOOKUP)
         hit = np.asarray(out.hit)
         val = np.asarray(out.value)[:, 0]
@@ -355,6 +389,7 @@ class PrefixCache:
         assert len(flat_k) == len(flat_p)
         if not flat_k:
             return []
+        self._note_chains(chains)
         out, shed = self._call(flat_k, OP_ACCESS, vals=flat_p)
         hit = np.asarray(out.hit)
         ev_ok = np.asarray(out.evicted_valid)
@@ -406,6 +441,7 @@ class PrefixCache:
             "occupancy": self.cache.occupancy,
             "shed": self.shed,
             "retried": self.retried,
+            "fallbacks": self.fallbacks,
             "service_ticks_p50": p50,
             "service_ticks_p99": p99,
         }

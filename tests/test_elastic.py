@@ -1,0 +1,203 @@
+"""launch/elastic unit coverage: heartbeat/watchdog edge cases (corrupt
+JSON, missing files, clock skew), straggler-tracker degenerate inputs,
+cache re-mesh planning, and the FaultPlan schedule semantics."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.elastic import (FaultEvent, FaultPlan, Heartbeater,
+                                  StragglerTracker, Watchdog,
+                                  plan_cache_remesh, plan_remesh)
+
+
+# --- Heartbeater / Watchdog -------------------------------------------------
+
+def test_heartbeat_roundtrip_alive(tmp_path):
+    for h in range(3):
+        Heartbeater(tmp_path, h).beat(step=7)
+    wd = Watchdog(tmp_path, n_hosts=3, dead_after=60.0)
+    assert wd.alive() == [0, 1, 2]
+    assert wd.dead() == []
+
+
+def test_missing_heartbeat_is_dead(tmp_path):
+    Heartbeater(tmp_path, 0).beat(step=1)
+    wd = Watchdog(tmp_path, n_hosts=3, dead_after=60.0)
+    assert wd.alive() == [0]
+    assert wd.dead() == [1, 2]
+
+
+def test_stale_heartbeat_is_dead(tmp_path):
+    (tmp_path / "host_0.hb").write_text(
+        json.dumps({"step": 1, "t": time.time() - 1000.0}))
+    wd = Watchdog(tmp_path, n_hosts=1, dead_after=60.0)
+    assert wd.alive() == []
+    assert wd.dead() == [0]
+
+
+@pytest.mark.parametrize("payload", [
+    "",                              # zero-byte (crashed mid-create)
+    '{"step": 3, "t": 17',           # truncated write
+    "not json at all",
+    "[1, 2, 3]",                     # valid JSON, wrong shape
+    '"just a string"',
+    '{"step": 3}',                   # missing t
+    '{"step": 3, "t": "soon"}',      # non-numeric t
+    '{"step": 3, "t": null}',
+])
+def test_corrupt_heartbeat_is_dead_not_raised(tmp_path, payload):
+    """A corrupt / partially-written heartbeat is indistinguishable from a
+    crashed writer: the watchdog must treat the host as dead and keep
+    scanning the rest — never raise out of the monitoring loop."""
+    (tmp_path / "host_0.hb").write_text(payload)
+    Heartbeater(tmp_path, 1).beat(step=1)
+    wd = Watchdog(tmp_path, n_hosts=2, dead_after=60.0)
+    assert wd.alive() == [1]
+    assert wd.dead() == [0]
+
+
+def test_clock_skew_future_heartbeat_is_alive(tmp_path):
+    """A beat stamped slightly in the future (writer's clock ahead of the
+    coordinator's) is fresher than fresh — it must count as alive, not
+    wrap into a huge negative age."""
+    (tmp_path / "host_0.hb").write_text(
+        json.dumps({"step": 1, "t": time.time() + 30.0}))
+    wd = Watchdog(tmp_path, n_hosts=1, dead_after=60.0)
+    assert wd.alive() == [0]
+
+
+def test_heartbeat_overwrite_is_atomic(tmp_path):
+    hb = Heartbeater(tmp_path, 0)
+    for s in range(5):
+        hb.beat(step=s)
+    rec = json.loads((tmp_path / "host_0.hb").read_text())
+    assert rec["step"] == 4
+    assert not hb.path.with_suffix(".tmp").exists()
+
+
+# --- StragglerTracker -------------------------------------------------------
+
+def test_straggler_check_with_no_samples_returns_empty():
+    st = StragglerTracker(n_hosts=4)
+    assert st.check() == []          # must not warn/nan on empty median
+
+
+def test_straggler_zero_duration_steps_flag_nobody():
+    """Zero-duration steps (mocked clocks, sub-resolution timers) give a
+    zero median; any positive time would then be "> factor × 0" — the
+    tracker must treat the degenerate median as healthy."""
+    st = StragglerTracker(n_hosts=3, patience=1)
+    for _ in range(3):
+        for h in range(3):
+            st.record(h, 0.0)
+        assert st.check() == []
+    # one host with real time against a zero median: still not flagged
+    st.record(0, 1.0)
+    assert st.check() == []
+
+
+def test_straggler_flagged_after_patience():
+    st = StragglerTracker(n_hosts=4, straggler_factor=1.5, patience=3)
+    flagged = []
+    for _ in range(4):
+        for h in range(4):
+            st.record(h, 10.0 if h == 2 else 1.0)
+        flagged = st.check()
+    assert flagged == [2]
+    # recovery resets the strikes
+    for h in range(4):
+        st.record(h, 1.0)
+    assert st.check() == []
+
+
+def test_straggler_partial_recording_ok():
+    """check() with only some hosts reporting must use the reported last
+    times only (no IndexError / nan from the silent hosts)."""
+    st = StragglerTracker(n_hosts=3, patience=1)
+    st.record(0, 1.0)
+    st.record(1, 1.1)
+    assert st.check() == []
+
+
+# --- re-mesh planning -------------------------------------------------------
+
+def test_plan_remesh_keeps_tp_degree():
+    plan = plan_remesh(n_devices=12, model_parallel=4, global_batch=16)
+    assert plan["mesh_shape"][1] == 4
+    assert plan["devices_used"] <= 12
+
+
+def test_plan_cache_remesh_even_and_uneven():
+    even = plan_cache_remesh(n_devices=8, num_sets=1024)
+    assert even == {"mesh_shape": (8,), "sets_per_shard": 128,
+                    "padded_sets": 0, "even": True}
+    odd = plan_cache_remesh(n_devices=7, num_sets=1024)
+    assert odd["sets_per_shard"] == 147          # ceil(1024/7)
+    assert odd["padded_sets"] == 7 * 147 - 1024
+    assert not odd["even"]
+    one = plan_cache_remesh(n_devices=1, num_sets=64)
+    assert one["sets_per_shard"] == 64 and one["even"]
+
+
+def test_plan_cache_remesh_matches_sets_per_shard():
+    from repro.core.sharded import sets_per_shard
+    for nd in (1, 2, 3, 7, 8, 13):
+        plan = plan_cache_remesh(nd, 256)
+        assert plan["sets_per_shard"] == sets_per_shard(256, nd)
+
+
+# --- FaultPlan --------------------------------------------------------------
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(AssertionError):
+        FaultEvent(1, "meteor", 0)
+
+
+def test_fault_plan_pops_due_events_in_tick_order():
+    plan = FaultPlan([FaultEvent(5, "resize", 2),
+                      FaultEvent(1, "degrade", 0),
+                      FaultEvent(5, "route_fail", 1)])
+    assert len(plan) == 3
+    assert [e.kind for e in plan.pop_due(0)] == []
+    assert [e.kind for e in plan.pop_due(1)] == ["degrade"]
+    assert len(plan) == 2
+    # a late poll (missed ticks) still delivers everything due
+    due = plan.pop_due(10)
+    assert sorted(e.kind for e in due) == ["resize", "route_fail"]
+    assert len(plan) == 0
+    assert len(plan.applied) == 3
+
+
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(42, ticks=20, ndev=4, n_events=5)
+    b = FaultPlan.seeded(42, ticks=20, ndev=4, n_events=5)
+    assert a.events == b.events
+    c = FaultPlan.seeded(43, ticks=20, ndev=4, n_events=5)
+    assert a.events != c.events or len(a.events) != len(c.events)
+
+
+def test_fault_plan_seeded_never_degrades_last_healthy_shard():
+    """Walking any seeded plan in tick order, the cumulative degraded set
+    (cleared by resizes, which rebuild on a fresh mesh) never swallows the
+    whole fleet — the client asserts against that."""
+    for seed in range(50):
+        plan = FaultPlan.seeded(seed, ticks=10, ndev=3, n_events=8)
+        degraded = set()
+        for ev in plan.events:       # sorted by tick
+            if ev.kind == "degrade":
+                degraded.add(ev.arg)
+                assert len(degraded) < 3
+            elif ev.kind == "resize":
+                assert 1 <= ev.arg <= 3
+                degraded.clear()
+            else:
+                assert ev.kind == "route_fail"
+                assert 0.0 < ev.frac < 1.0
+
+
+def test_fault_plan_seeded_ndev1_avoids_degrades():
+    plan = FaultPlan.seeded(7, ticks=10, ndev=1, n_events=6)
+    assert all(e.kind != "degrade" for e in plan.events)

@@ -163,6 +163,41 @@ def test_unserveable_chain_falls_back_to_plain_prefill():
 
 
 @pytest.mark.slow
+def test_retry_exhaustion_counts_fallback_and_full_latency():
+    """Accounting contract for retry exhaustion: the fallback increments
+    BOTH ``ServeEngine.stats()["fallbacks"]`` and
+    ``PrefixCache.stats()["fallbacks"]`` (they must agree), and the
+    request's ``service_ticks`` sample is measured from the ORIGINAL
+    submit tick — the whole shed odyssey lands in the latency tail, not
+    just the final re-admission."""
+    cfg, model, params = _setup_model()
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, cfg.vocab_size, 48).astype(np.int32)]
+    mcfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1)
+
+    # shed chain 0 on more calls than the engine will ever retry
+    eng, pool, pc = _drive(cfg, model, params, prompts,
+                           ForceShedBackend(mcfg, shed_cids=[0],
+                                            shed_calls=99))
+    eng_f, _, pc_f = _drive(cfg, model, params, prompts, None)
+
+    assert len(eng.finished) == 1
+    r = eng.finished[0]
+    assert r.force_plain and r.shed_count == eng.max_shed_retries
+    assert eng.fallbacks == 1
+    assert eng.stats()["fallbacks"] == 1
+    assert pc.stats()["fallbacks"] == 1              # cache-side mirror
+    # one tick burned per shed retry, all charged to the one sample
+    assert r.service_ticks >= eng.max_shed_retries
+    assert eng.stats()["service_ticks_p99"] >= eng.max_shed_retries
+    # fault-free run: no fallbacks, same tokens (plain prefill is exact)
+    assert eng_f.fallbacks == 0 and pc_f.stats()["fallbacks"] == 0
+    toks = lambda e: {q.rid: q.out_tokens for q in e.finished}
+    assert toks(eng) == toks(eng_f)
+    assert (pool.refcount == 0).all() and len(pool._reserved) == 0
+
+
+@pytest.mark.slow
 def test_shed_owner_promotes_served_borrower():
     """The gnarliest shed corner: two same-tick requests share every chunk;
     the dedupe OWNER's chain is shed but the borrower's is served, so the
