@@ -26,12 +26,22 @@ different lengths.  Metrics per decode mode:
   * hit ratio and admit-latency p50/p99 (the trace is identical, so hit
     ratios may differ only through slot-scheduling, not correctness).
 
-``run()`` merges both modes into BENCH_serve.json at the repo root;
-``--smoke`` uses the tiny CI trace (entry block ``smoke``).  ``--check``
-recomputes the smoke block and fails (exit 1) if the in-flight
-``launches_per_token`` exceeds 1.05, ticks-to-drain regresses past 1.1×
-the committed entry, or the two modes' token streams diverge (the
-differential oracle riding along in CI).
+A second sweep compares KV residency: ``kv_mode="paged"`` (decode attends
+straight into pool pages via per-slot block tables — zero ``gather_pages``
+copies) against the contiguous oracle on a prefix-dominated trace
+(4-chunk / 64-token shared templates, short tails), reporting per-mode
+peak resident KV bytes (slot-resident tokens + distinct pinned pages) and
+their ratio.  Paged keeps ONE resident copy of every hot template instead
+of one per borrowing slot, so the ratio must stay ≤ 0.5.
+
+``run()`` merges both sweeps into BENCH_serve.json at the repo root;
+``--smoke`` uses the tiny CI traces (entry blocks ``smoke`` and
+``paged_smoke``).  ``--check`` recomputes the smoke blocks and fails
+(exit 1) if the in-flight ``launches_per_token`` exceeds 1.05,
+ticks-to-drain regresses past 1.1× the committed entry, either sweep's
+token streams diverge, the paged drive made any ``gather_pages`` copy, or
+the paged/contiguous resident-KV-bytes ratio exceeds 0.5 (the
+differential oracles riding along in CI).
 """
 
 from __future__ import annotations
@@ -57,27 +67,40 @@ ZIPF_ALPHA = 1.0
 FULL = dict(requests=32, slots=8, max_tail=28, max_new_lo=4, max_new_hi=13)
 SMOKE = dict(requests=16, slots=4, max_tail=20, max_new_lo=4, max_new_hi=11)
 
+# paged-vs-contiguous residency sweep: prefix-dominated trace — most of a
+# prompt is a hot shared template and many slots borrow few templates, so
+# the single-resident-copy effect of block tables dominates the per-slot
+# tails (worst case: 8 slots x 72-token copies vs 4 distinct templates
+# resident once + 8 short tails)
+PAGED_PREFIX_CHUNKS = 4      # 64 shared tokens per template
+PAGED_FULL = dict(requests=32, slots=8, templates=2, max_tail=8,
+                  max_new_lo=3, max_new_hi=8)
+PAGED_SMOKE = dict(requests=16, slots=8, templates=2, max_tail=8,
+                   max_new_lo=3, max_new_hi=7)
+
 LAUNCHES_PER_TOKEN_BUDGET = 1.05
 TICKS_BUDGET_FACTOR = 1.1
+RESIDENT_RATIO_BUDGET = 0.5
 
 
-def _workload(cfg, shape: dict):
+def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
     """Zipf-popular templates + random tails: mixed lengths, shared
     prefixes — (prompt, max_new_tokens) per request, deterministic."""
     from repro.data.ycsb import zipfian
 
     rng = np.random.default_rng(42)
+    n_templates = shape.get("templates", N_TEMPLATES)
     templates = [rng.integers(1, cfg.vocab_size,
-                              CHUNK * PREFIX_CHUNKS).astype(np.int32)
-                 for _ in range(N_TEMPLATES)]
-    picks = zipfian(N_TEMPLATES, shape["requests"], alpha=ZIPF_ALPHA,
+                              CHUNK * prefix_chunks).astype(np.int32)
+                 for _ in range(n_templates)]
+    picks = zipfian(n_templates, shape["requests"], alpha=ZIPF_ALPHA,
                     seed=43) - 1
     out = []
     for i in range(shape["requests"]):
         tail = rng.integers(1, cfg.vocab_size,
                             1 + int(rng.integers(0, shape["max_tail"]))
                             ).astype(np.int32)
-        prompt = np.concatenate([templates[int(picks[i]) % N_TEMPLATES],
+        prompt = np.concatenate([templates[int(picks[i]) % n_templates],
                                  tail])
         max_new = shape["max_new_lo"] + i % (shape["max_new_hi"]
                                              - shape["max_new_lo"])
@@ -85,7 +108,8 @@ def _workload(cfg, shape: dict):
     return out
 
 
-def _drive(mode: str, shape: dict) -> dict:
+def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
+           prefix_chunks: int = PREFIX_CHUNKS) -> dict:
     import jax
     from repro.configs import get_config
     from repro.models.model import make_model
@@ -99,8 +123,10 @@ def _drive(mode: str, shape: dict) -> dict:
     pool = PagedKVPool(cfg, n_pages=96, page_tokens=CHUNK)
     pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=CHUNK)
     eng = ServeEngine(model, params, slots=shape["slots"], max_len=128,
-                      prefix_cache=pc, pool=pool, decode_mode=mode)
-    for i, (prompt, max_new) in enumerate(_workload(cfg, shape)):
+                      prefix_cache=pc, pool=pool, decode_mode=mode,
+                      kv_mode=kv_mode)
+    for i, (prompt, max_new) in enumerate(_workload(cfg, shape,
+                                                    prefix_chunks)):
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
     t0 = time.time()
     ticks = eng.run_until_done()
@@ -116,6 +142,9 @@ def _drive(mode: str, shape: dict) -> dict:
         "hit_ratio": pst["hit_ratio"],
         "service_ticks_p50": st["service_ticks_p50"],
         "service_ticks_p99": st["service_ticks_p99"],
+        "gather_calls": st["gather_calls"],
+        "resident_kv_tokens_peak": st["resident_kv_tokens_peak"],
+        "resident_kv_bytes_peak": st["resident_kv_bytes_peak"],
         "seconds": round(dt, 3),
         "tokens": {str(r.rid): r.out_tokens for r in eng.finished},
     }
@@ -133,16 +162,35 @@ def _sweep(shape: dict) -> dict:
     return out
 
 
+def _sweep_paged(shape: dict) -> dict:
+    """Paged vs contiguous KV on the prefix-dominated trace: tokens must be
+    bit-identical, paged must never call ``gather_pages``, and paged peak
+    resident KV (tails + ONE copy of each pinned page) must undercut the
+    contiguous per-slot materialization by ≥ 2x."""
+    out = {}
+    for kv in ("contiguous", "paged"):
+        out[kv] = _drive("inflight", shape, kv_mode=kv,
+                         prefix_chunks=PAGED_PREFIX_CHUNKS)
+    out["tokens_match"] = out["contiguous"]["tokens"] == out["paged"]["tokens"]
+    out["resident_ratio"] = round(
+        out["paged"]["resident_kv_bytes_peak"]
+        / max(1, out["contiguous"]["resident_kv_bytes_peak"]), 4)
+    for kv in ("contiguous", "paged"):
+        del out[kv]["tokens"]
+    return out
+
+
 def run(force: bool = False, smoke: bool = False):
     key = "smoke" if smoke else "entries"
     shape = SMOKE if smoke else FULL
+    pkey = "paged_smoke" if smoke else "paged"
+    pshape = PAGED_SMOKE if smoke else PAGED_FULL
 
-    def compute():
-        return _sweep(shape)
-
-    res = cached(f"serve_bench_{key}", compute, force)
+    res = cached(f"serve_bench_{key}", lambda: _sweep(shape), force)
     _emit_bench_json(res, key)
-    return res
+    pres = cached(f"serve_bench_{pkey}", lambda: _sweep_paged(pshape), force)
+    _emit_bench_json(pres, pkey)
+    return dict(res, paged=pres)
 
 
 def _emit_bench_json(res: dict, key: str) -> None:
@@ -164,9 +212,11 @@ def _emit_bench_json(res: dict, key: str) -> None:
 
 
 def check(res: dict, committed_doc: dict) -> list[str]:
-    """CI gate on the smoke block: in-flight decode stays at ~1 launch of
+    """CI gate on the smoke blocks: in-flight decode stays at ~1 launch of
     useful rows per token (≤ 1.05), drains within 1.1× the committed
-    ticks, and the two decode modes emit identical tokens."""
+    ticks, both sweeps' token streams match their oracles, paged makes
+    zero ``gather_pages`` copies, and paged resident KV bytes stay ≤ 0.5×
+    contiguous."""
     problems = []
     inf = res.get("inflight", {})
     if inf.get("launches_per_token", 99.0) > LAUNCHES_PER_TOKEN_BUDGET:
@@ -185,6 +235,18 @@ def check(res: dict, committed_doc: dict) -> list[str]:
             problems.append(
                 f"inflight ticks_to_drain {inf.get('ticks_to_drain')} > "
                 f"committed {ref['ticks_to_drain']} * {TICKS_BUDGET_FACTOR}")
+    paged = res.get("paged", {})
+    if not paged.get("tokens_match", False):
+        problems.append("paged tokens diverge from the contiguous oracle")
+    if paged.get("paged", {}).get("gather_calls", -1) != 0:
+        problems.append(
+            f"paged drive made {paged.get('paged', {}).get('gather_calls')} "
+            "gather_pages copies (block tables must make it zero)")
+    ratio = paged.get("resident_ratio", 99.0)
+    if ratio > RESIDENT_RATIO_BUDGET:
+        problems.append(
+            f"paged/contiguous resident KV bytes ratio {ratio} > "
+            f"{RESIDENT_RATIO_BUDGET}")
     return problems
 
 
@@ -207,6 +269,23 @@ def report(res: dict) -> list[str]:
             f"{r['service_ticks_p99']:.0f} ticks "
             f"({speed:.2f}x ticks vs rr)")
     lines.append(f"  tokens_match={res.get('tokens_match')}")
+    paged = res.get("paged")
+    if paged:
+        lines.append("paged vs contiguous KV (prefix-dominated trace, "
+                     f"{CHUNK * PAGED_PREFIX_CHUNKS}-token templates)")
+        for kv in ("contiguous", "paged"):
+            r = paged.get(kv)
+            if not r:
+                continue
+            lines.append(
+                f"  {kv:10s} resident_kv_peak={r['resident_kv_tokens_peak']:6d}"
+                f" tok ({r['resident_kv_bytes_peak'] / 2**20:.1f} MiB) "
+                f"gather_calls={r['gather_calls']:3d} "
+                f"ticks={r['ticks_to_drain']:4d}")
+        lines.append(
+            f"  resident_ratio={paged.get('resident_ratio')} "
+            f"(budget {RESIDENT_RATIO_BUDGET}) "
+            f"tokens_match={paged.get('tokens_match')}")
     return lines
 
 

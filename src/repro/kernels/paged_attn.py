@@ -1,0 +1,178 @@
+"""Pallas paged decode attention: block-table walk over the shared KV pool.
+
+One decode row attends over two segments without ever materializing a
+contiguous copy of its sequence:
+
+  1. the *prefix* — ``prefix_len`` tokens resident in the shared
+     ``PagedKVPool`` storage ``(n_pages, page_tokens, KVH, Dh)``, reached
+     through the row's block table (vLLM-style paged attention: the grid's
+     inner dimension walks ``block_table[b, j]`` and the scalar-prefetched
+     table drives the BlockSpec index_map, so each step DMAs exactly one
+     pool page into VMEM);
+  2. the *tail* — the tokens the row computed itself (suffix prefill +
+     decoded tokens), stored per-slot at tail position
+     ``abs_pos - prefix_len``.
+
+The kernel carries the flash-attention ``(m, l, acc)`` running triple in
+f32 VMEM scratch across the sequential inner grid dimension and writes the
+normalized context at the final step.  Numerics: identical score math to
+``models.attention.paged_attn_decode`` (scale in q dtype, f32 scores,
+optional tanh softcap, NEG_INF masking) but flash-accumulation ordering
+instead of a full-lane softmax, so outputs agree to ~1e-5 (tests gate
+argmax equality + allclose against the jnp mirror, which in turn is
+bit-identical to the contiguous oracle).
+
+Masked lanes use a *finite* NEG_INF (-1e30), so a block with no valid lane
+must not pollute the accumulator: probabilities are explicitly zeroed by
+the validity mask rather than relying on ``exp(NEG_INF - m)`` underflow
+(which is exp(0)=1 while ``m`` itself still sits at NEG_INF).
+
+Like the msl_cache kernels this runs in interpret mode on CPU so the body
+is exercised everywhere; on TPU the same code compiles with the pool in
+HBM/ANY and pages streamed per grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(n_prefix_blocks, n_tail_blocks, page_tokens, softcap,
+                       # scalar prefetch
+                       bt_ref, plen_ref, cur_ref, wnd_ref,
+                       # blocked operands
+                       q_ref, pk_ref, pv_ref, tk_ref, tv_ref, out_ref,
+                       # scratch
+                       m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    pt = page_tokens
+    h, dh = q_ref.shape[1], q_ref.shape[2]
+    kvh = pk_ref.shape[2]
+    rep = h // kvh
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    is_tail = j >= n_prefix_blocks
+    plen = plen_ref[b]
+    cur = cur_ref[b]
+    wnd = wnd_ref[0]
+
+    # both candidate blocks are in VMEM (the pipeline fetched them); pick one
+    k_blk = jnp.where(is_tail, tk_ref[0], pk_ref[0])      # (pt, KVH, Dh)
+    v_blk = jnp.where(is_tail, tv_ref[0], pv_ref[0])
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, pt), 1)[0]
+    base = jnp.where(is_tail, plen + (j - n_prefix_blocks) * pt, j * pt)
+    pos = base + lane                                      # absolute positions
+    valid = jnp.where(is_tail, pos <= cur, pos < plen)
+    valid &= jnp.where(wnd > 0, cur - pos < wnd, True)
+
+    q = q_ref[0]                                           # (H, Dh), pre-scaled
+    qg = q.reshape(kvh, rep, dh)
+    s = jnp.einsum("grd,tgd->grt", qg.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)).reshape(h, pt)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # NEG_INF is finite: zero masked lanes explicitly (see module docstring)
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    pg = p.reshape(kvh, rep, pt)
+    delta = jnp.einsum("grt,tgd->grd", pg,
+                       v_blk.astype(jnp.float32)).reshape(h, dh)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] + delta
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == n_prefix_blocks + n_tail_blocks - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)                    # dead rows -> 0 out
+        out_ref[...] = (acc_ref[...] / l[:, None]).astype(out_ref.dtype)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "interpret"))
+def paged_attn_decode_call(q, pool_k, pool_v, block_table, tail_k, tail_v,
+                           prefix_len, cur_len, *, window=None,
+                           softcap: float = 0.0,
+                           interpret: bool | None = None):
+    """q (B,H,Dh) *unscaled*; pool_k/v (n_pages, pt, KVH, Dh) one layer's
+    plane; block_table (B, NP) i32; tail_k/v (B, Tmax, KVH, Dh) with the
+    new token already written at ``cur_len - prefix_len``; prefix_len,
+    cur_len (B,).  Returns the attention context (B, H, Dh) in q's dtype.
+
+    ``window`` may be None, a python int, or a traced scalar (the per-layer
+    sliding window carried through the layer scan); <= 0 means global.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, dh = q.shape
+    n_pages, pt, kvh, _ = pool_k.shape
+    npb = block_table.shape[1]
+    tmax = tail_k.shape[1]
+    ntb = -(-tmax // pt)
+    if ntb * pt != tmax:                   # pad tail to page granularity;
+        padw = ((0, 0), (0, ntb * pt - tmax), (0, 0), (0, 0))
+        tail_k, tail_v = jnp.pad(tail_k, padw), jnp.pad(tail_v, padw)
+    scale = jnp.asarray(dh ** -0.5, q.dtype)
+    qs = q * scale
+
+    bt = jnp.asarray(block_table, jnp.int32)
+    plen = jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32), (b,))
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    wnd = (jnp.zeros((1,), jnp.int32) if window is None
+           else jnp.asarray(window, jnp.int32).reshape(1))
+
+    def q_map(i, j, bt_s, pl_s, cu_s, wd_s):
+        return (i, 0, 0)
+
+    def pool_map(i, j, bt_s, pl_s, cu_s, wd_s):
+        # prefix steps walk the block table; tail steps park on an
+        # arbitrary in-range page (block unused, mask kills its lanes)
+        jj = jnp.minimum(j, npb - 1)
+        return (bt_s[i, jj], 0, 0, 0)
+
+    def tail_map(i, j, bt_s, pl_s, cu_s, wd_s):
+        return (i, jnp.clip(j - npb, 0, ntb - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, npb + ntb),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), q_map),
+            pl.BlockSpec((1, pt, kvh, dh), pool_map),
+            pl.BlockSpec((1, pt, kvh, dh), pool_map),
+            pl.BlockSpec((1, pt, kvh, dh), tail_map),
+            pl.BlockSpec((1, pt, kvh, dh), tail_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((h, 128), jnp.float32),   # running max m
+            pltpu.VMEM((h, 128), jnp.float32),   # running denom l
+            pltpu.VMEM((h, dh), jnp.float32),    # unnormalized context
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, npb, ntb, pt, softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(bt, plen, cur, wnd, qs, pool_k, pool_v, tail_k, tail_v)

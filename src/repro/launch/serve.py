@@ -37,6 +37,15 @@ def main():
                     help="inflight: one decode launch/tick advances every "
                          "slot at its own length; roundrobin: legacy "
                          "min-length schedule (equivalence oracle)")
+    ap.add_argument("--kv-mode", choices=["contiguous", "paged"],
+                    default="contiguous",
+                    help="contiguous: gather cached prefix pages into each "
+                         "slot's private KV (a device copy per borrower; "
+                         "the bit-exactness oracle); paged: decode walks a "
+                         "per-slot block table straight over the shared "
+                         "pool — zero gather copies, one resident copy of "
+                         "a hot prefix however many slots borrow it "
+                         "(requires the prefix cache)")
     ap.add_argument("--sharded", type=int, default=0, metavar="D",
                     help="back the prefix cache with a D-device "
                          "ShardedCacheClient (needs XLA_FLAGS="
@@ -69,9 +78,12 @@ def main():
                 cap=(args.cap if args.cap > 0 else "full"))
         pc = PrefixCache(num_sets=256, m=2, p=4,
                          chunk_tokens=args.chunk_tokens, backend=backend)
+    if args.kv_mode == "paged" and args.no_prefix_cache:
+        ap.error("--kv-mode paged requires the prefix cache (the pool is "
+                 "the resident prefix store)")
     eng = ServeEngine(model, params, slots=4, max_len=256,
                       prefix_cache=pc, pool=pool,
-                      decode_mode=args.decode_mode)
+                      decode_mode=args.decode_mode, kv_mode=args.kv_mode)
 
     plan = None
     if args.chaos_seed >= 0:
@@ -109,6 +121,10 @@ def main():
           f"{st['launches_per_token']:.3f} rows/token, admit wait "
           f"p50/p99 {st['service_ticks_p50']:.0f}/"
           f"{st['service_ticks_p99']:.0f} ticks")
+    print(f"[serve] kv: mode={st['kv_mode']} "
+          f"gather_calls={st['gather_calls']} "
+          f"resident_kv_peak={st['resident_kv_tokens_peak']} tok "
+          f"({st['resident_kv_bytes_peak'] / 2**20:.1f} MiB)")
     if pc:
         print(f"[serve] prefix cache: {pc.stats()}")
 

@@ -232,3 +232,99 @@ def attn_decode(params, x, cache_k, cache_v, cur_len, *, n_heads, n_kv_heads,
     ctx = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), cache_v.astype(q.dtype))
     out = jnp.einsum("bh,hd->bd", ctx.reshape(b, n_heads * d_head), params["wo"])
     return out[:, None, :], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block-table walk over the shared pool + slot-local tail)
+# ---------------------------------------------------------------------------
+
+def paged_attn_decode(params, x, pool_k, pool_v, block_table, tail_k, tail_v,
+                      prefix_len, cur_len, *, smax, n_heads, n_kv_heads,
+                      d_head, rope_kind="rope", theta=1e4, window=None,
+                      softcap=0.0, use_kernel=False, interpret=None):
+    """Decode one token per row straight from the paged pool (zero-copy
+    prefix sharing): row b's first ``prefix_len[b]`` positions live in the
+    shared pool pages named by ``block_table[b]`` (``page_tokens`` apiece,
+    RoPE already applied — the prefix property), and everything the row
+    computed itself (suffix prefill + decoded tokens) lives in its private
+    tail at tail position ``abs_pos - prefix_len[b]``.  N slots borrowing
+    one hot template therefore share ONE resident copy of its KV.
+
+    x (B,1,D); pool_k/v (n_pages, page_tokens, KVH, Dh) — one layer's pool
+    plane; block_table (B, NP) int32; tail_k/v (B, Tmax, KVH, Dh);
+    prefix_len, cur_len (B,) int32.  The new KV is written into the tail at
+    ``cur_len - prefix_len``; the row attends over absolute [0, cur_len].
+    Returns (out (B,1,D), tail_k, tail_v).
+
+    The jnp path is the oracle-equivalence rendering: it reassembles each
+    row's contiguous (smax, KVH, Dh) view by gathering the block-table walk
+    and scattering the tail at ``prefix_len + t`` (a transient, per-launch
+    buffer — nothing resident is duplicated), then runs *exactly* the
+    ``attn_decode`` score/mask/softmax lines over the same ``smax`` lanes,
+    so its logits are bit-identical to the contiguous oracle fed the same
+    bits.  ``use_kernel=True`` instead streams the two segments (pool
+    pages, then tail) through the Pallas flash kernel in
+    ``repro.kernels.paged_attn`` without ever materializing the gather —
+    same math, flash-accumulation rounding (tests gate argmax + allclose).
+    """
+    b = x.shape[0]
+    pt = pool_k.shape[1]
+    tmax = tail_k.shape[1]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    plen = jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32), (b,))
+    pos = cur[:, None]
+    if rope_kind == "mrope":
+        pos = jnp.broadcast_to(cur[:, None, None], (b, 3, 1))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head, pos,
+                           rope_kind, theta)
+    rows = jnp.arange(b)
+    t_new = cur - plen                       # engine guarantees t_new < Tmax
+    tail_k = tail_k.at[rows, t_new].set(k[:, 0].astype(tail_k.dtype))
+    tail_v = tail_v.at[rows, t_new].set(v[:, 0].astype(tail_v.dtype))
+
+    if use_kernel:
+        from repro.kernels.paged_attn import paged_attn_decode_call
+        ctx = paged_attn_decode_call(
+            q[:, 0], pool_k, pool_v, block_table, tail_k, tail_v, plen, cur,
+            window=window, softcap=softcap, interpret=interpret)
+        out = jnp.einsum("bh,hd->bd", ctx.reshape(b, n_heads * d_head),
+                         params["wo"])
+        return out[:, None, :], tail_k, tail_v
+
+    # Reassemble the contiguous per-row view (transient): pages first ...
+    gk = jnp.take(pool_k, block_table.reshape(-1), axis=0)
+    gv = jnp.take(pool_v, block_table.reshape(-1), axis=0)
+    npg = block_table.shape[1]
+    gk = gk.reshape(b, npg * pt, *gk.shape[2:])
+    gv = gv.reshape(b, npg * pt, *gv.shape[2:])
+    if npg * pt < smax:
+        padw = ((0, 0), (0, smax - npg * pt), (0, 0), (0, 0))
+        gk, gv = jnp.pad(gk, padw), jnp.pad(gv, padw)
+    # ... then the tail scattered at prefix_len + t.  Tail lanes never land
+    # below prefix_len, indices are strictly increasing per row, and lanes
+    # past cur_len are masked below; "drop" guards the clamp-scatter of
+    # garbage lanes that would otherwise wrap onto lane smax-1.
+    tidx = plen[:, None] + jnp.arange(tmax)[None, :]
+    cache_k = gk[:, :smax].at[rows[:, None], tidx].set(
+        tail_k, mode="drop").astype(tail_k.dtype)
+    cache_v = gv[:, :smax].at[rows[:, None], tidx].set(
+        tail_v, mode="drop").astype(tail_v.dtype)
+
+    kvh = cache_k.shape[2]
+    rep = n_heads // kvh
+    scale = d_head ** -0.5
+    k_pos = jnp.arange(smax)
+    qf = (q * jnp.asarray(scale, q.dtype))[:, 0]
+    qg = qf.reshape(b, kvh, rep, d_head)
+    s_ = jnp.einsum("bgrd,bkgd->bgrk", qg, cache_k.astype(q.dtype)).astype(jnp.float32)
+    if softcap > 0.0:
+        s_ = jnp.tanh(s_ / softcap) * softcap
+    mask = k_pos[None, :] <= cur[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        mask &= jnp.where(w > 0, cur[:, None] - k_pos[None, :] < w, True)
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    ctx = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), cache_v.astype(q.dtype))
+    out = jnp.einsum("bh,hd->bd", ctx.reshape(b, n_heads * d_head), params["wo"])
+    return out[:, None, :], tail_k, tail_v

@@ -124,6 +124,30 @@ def attn_block_decode(cfg, p, h, cache_k, cache_v, cur_len, window, theta):
     return h, ck, cv
 
 
+def attn_block_decode_paged(cfg, p, h, pool_k, pool_v, block_table,
+                            tail_k, tail_v, prefix_len, cur_len, window,
+                            theta, *, smax, use_kernel=False):
+    """``attn_block_decode`` with the KV read through a block-table walk
+    over the shared pool plus the slot-local tail (zero-copy prefix
+    sharing) instead of a per-slot contiguous cache.  pool_k/v are ONE
+    layer's pool plane (n_pages, page_tokens, KVH, Dh); tail_k/v
+    (B, Tmax, KVH, Dh) are the updated-and-returned cache leaves."""
+    x = _norm(cfg, p["ln1"], h)
+    a_out, tk, tv = attn.paged_attn_decode(
+        p["attn"], x, pool_k, pool_v, block_table, tail_k, tail_v,
+        prefix_len, cur_len, smax=smax, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+        rope_kind=cfg.rope_kind, theta=theta, window=window,
+        softcap=cfg.softcap, use_kernel=use_kernel)
+    if cfg.parallel_block:
+        h = h + a_out + _ffn_decode(cfg, p, x)
+    else:
+        h = h + a_out
+        if cfg.ffn != "none":
+            h = h + _ffn_decode(cfg, p, _norm(cfg, p["ln2"], h))
+    return h, tk, tv
+
+
 # -- hymba: parallel attention + mamba heads, learned fusion gates ----------
 
 def hymba_block_init(key, cfg):

@@ -3,19 +3,39 @@
 Flow per request (attention-family archs):
   1. chunk-hash the prompt; probe the PrefixCache for the longest cached
      prefix chain;
-  2. gather those pages from the PagedKVPool straight into the request
-     slot's contiguous KV cache (a device-side copy — skips that many
-     tokens of prefill compute);
+  2. make the cached pages the request's prefix KV — ``kv_mode``:
+     * ``"contiguous"`` (oracle): gather the pages from the PagedKVPool
+       into the request slot's contiguous KV cache (a device-side copy);
+     * ``"paged"``: pin the pages and record a per-slot BLOCK TABLE —
+       zero copies; the pool stays the single resident store and N slots
+       share one copy of a hot template;
   3. run *continuation prefill* on the remaining tokens (chunked attention
      with absolute positions, RoPE applied — cached pages are position-
-     consistent by the prefix property);
+     consistent by the prefix property; paged mode reads the prefix out of
+     the pool inside the launch);
   4. write the new chunks' KV into freshly allocated pages and insert them
      into the prefix cache (evicted pages recycle to the pool);
   5. decode with the jit'd serve step, one token per engine tick for every
      active slot (continuous batching: retired slots refill immediately).
+     Paged decode walks the block table over the pool for the prefix and a
+     slot-local tail for self-computed tokens (``paged_decode_step``).
 
 SSM/hybrid archs skip prefix reuse (their state is not prefix-separable);
 the engine still serves them via model.prefill + decode_step.
+
+Paged KV (``kv_mode="paged"``)
+------------------------------
+The capacity lever: contiguous mode is O(slots × max_len) HBM with every
+hot prefix physically duplicated per borrowing slot; paged mode is
+O(distinct pages + slots × tail).  The contiguous mode is kept as the
+bit-exactness oracle (same discipline as rounds/round-robin/split): the
+paged jnp decode reassembles each row's contiguous view *transiently*
+inside the launch and runs the identical score/softmax lines, so token
+streams are bit-identical — asserted continuously by tests and the serve
+bench, together with ``pool.gather_calls == 0``.  Page lifetime: a slot's
+block-table reference is backed by the pin taken at admission; a page the
+policy evicts mid-request defers its free until the last reader unpins
+(the pool's deferred-free contract), so block tables never dangle.
 
 In-flight decode (default)
 --------------------------
@@ -291,6 +311,72 @@ def batched_continuation_prefill(cfg: ArchConfig, params, tokens, tok_lens,
     return logits, kv[0], kv[1]
 
 
+def paged_batched_continuation_prefill(cfg: ArchConfig, params, tokens,
+                                       tok_lens, pool_k, pool_v, page_idx,
+                                       prefix_lens):
+    """``batched_continuation_prefill`` with the per-row KV prefix read out
+    of the paged pool INSIDE the launch.
+
+    page_idx (B, NPb) int32 names each row's prefix pages (right-padded —
+    lanes at or past ``prefix_lens`` are masked by ``k_valid``, so padded
+    entries may point anywhere in range).  pool_k/v are the pool planes
+    (L, n_pages, page_tokens, KVH, Dh).  The gather is transient: it lives
+    and dies inside the XLA launch (on TPU, DMA straight from the resident
+    pool pages), so admission never materializes a host-visible pk/pv copy
+    for borrowers — ``PagedKVPool.gather_calls`` stays 0 in paged mode.
+    Prefix lane count is NPb·page_tokens; when the caller sizes NPb to the
+    contiguous path's pow2 prefix bucket the lane layout (and therefore
+    every reduction tree) matches the contiguous launch bit-for-bit.
+    """
+    l = cfg.n_layers
+    b, npb = page_idx.shape
+    pt = pool_k.shape[2]
+    flat = jnp.asarray(page_idx, jnp.int32).reshape(-1)
+    gk = jnp.take(pool_k, flat, axis=1)
+    gv = jnp.take(pool_v, flat, axis=1)
+    gk = gk.reshape(l, b, npb * pt, *gk.shape[3:])
+    gv = gv.reshape(l, b, npb * pt, *gv.shape[3:])
+    return batched_continuation_prefill(cfg, params, tokens, tok_lens,
+                                        (gk, gv), prefix_lens)
+
+
+def paged_decode_step(cfg: ArchConfig, params, tokens, tail_cache, pool_k,
+                      pool_v, block_tables, prefix_lens, cur_lens, *,
+                      smax: int, use_kernel: bool = False):
+    """One in-flight decode launch straight from the paged pool.
+
+    The paged analogue of ``model.decode_step``: same layer scan, but each
+    layer's attention walks the slot's block table over the pool plane for
+    its prefix and reads/writes the slot-local tail for everything the row
+    computed itself (``transformer.attn_block_decode_paged``).  tokens
+    (B, 1); tail_cache {"k","v"} (L, B, Tmax, KVH, Dh); pool_k/v
+    (L, n_pages, page_tokens, KVH, Dh); block_tables (B, NP);
+    prefix_lens/cur_lens (B,).  Returns (logits (B, V), updated tail).
+    Row outputs stay launch-membership independent (the engine's per-slot
+    merge contract) — the block table only adds per-row *reads*.
+    """
+    from repro.models.model import _embed, _final, _logits_fn
+
+    h = _embed(cfg, params, tokens)
+    windows = jnp.asarray(cfg.windows(), jnp.int32)
+    thetas = jnp.asarray(cfg.thetas(), jnp.float32)
+
+    def body(hh, xs):
+        p_l, tk_l, tv_l, pk_l, pv_l, w_l, t_l = xs
+        hh, tk_l, tv_l = tfm.attn_block_decode_paged(
+            cfg, p_l, hh, pk_l, pv_l, block_tables, tk_l, tv_l,
+            prefix_lens, cur_lens, w_l, t_l, smax=smax,
+            use_kernel=use_kernel)
+        return hh, (tk_l, tv_l)
+
+    h, (tk, tv) = jax.lax.scan(
+        body, h, (params["blocks"], tail_cache["k"], tail_cache["v"],
+                  pool_k, pool_v, windows, thetas))
+    h = _final(cfg, params, h)
+    logits = _logits_fn(cfg, params)(h[:, -1])
+    return logits, {"k": tk, "v": tv}
+
+
 def _pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length() if n > 0 else 0
 
@@ -303,7 +389,8 @@ class ServeEngine:
                  pool: PagedKVPool | None = None, eos_token: int = -1,
                  admit_batching: bool = True, admit_mode: str | None = None,
                  overlap_decode: bool = True, max_shed_retries: int = 3,
-                 decode_mode: str = "inflight"):
+                 decode_mode: str = "inflight", kv_mode: str = "contiguous",
+                 tail_tokens: int | None = None, paged_kernel: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -315,7 +402,33 @@ class ServeEngine:
         self.use_prefix = (prefix_cache is not None and pool is not None
                            and self.cfg.mixer == "attn" and not self.cfg.enc_dec
                            and self.cfg.meta_tokens == 0)
-        self.cache = model.init_cache(slots, max_len)
+        # "contiguous" (default): every slot owns a (max_len, KVH, Dh) KV
+        # strip and admission COPIES cached prefix pages into it — kept as
+        # the bit-exactness oracle.  "paged": the pool is the single
+        # resident store; slots hold only a tail (suffix prefill + decoded
+        # tokens) and decode walks per-slot block tables over the pool, so
+        # N borrowers share ONE resident copy of a hot prefix and
+        # ``gather_pages`` is never called.
+        assert kv_mode in ("contiguous", "paged"), kv_mode
+        self.kv_mode = kv_mode
+        self.paged = kv_mode == "paged"
+        if self.paged:
+            assert self.use_prefix, (
+                "kv_mode='paged' needs a prefix cache + pool on an "
+                "attention decoder arch (the pool is the resident KV store)")
+            self.cache = pool.attach_slots(slots, max_len, tail_tokens)
+            self.tail_cap = pool.tail_tokens
+            smax = max_len + self.cfg.meta_tokens
+            self._decode_paged = jax.jit(
+                lambda p, t, tc, pk, pv, bt, plens, curs: paged_decode_step(
+                    self.cfg, p, t, tc, pk, pv, bt, plens, curs, smax=smax,
+                    use_kernel=paged_kernel))
+            self._prefill_bpp = jax.jit(
+                lambda p, toks, lens, pk, pv, pidx, plens:
+                    paged_batched_continuation_prefill(
+                        self.cfg, p, toks, lens, pk, pv, pidx, plens))
+        else:
+            self.cache = model.init_cache(slots, max_len)
         self.cur_len = np.zeros(slots, np.int32)
         self.active: dict[int, Request] = {}
         self._free_slots = list(range(slots))
@@ -360,9 +473,31 @@ class ServeEngine:
         self._service_ticks: list[int] = []  # per-request admit latencies
         self.fallbacks = 0           # requests that exhausted shed retries
         self.fault_log: list[tuple[int, str]] = []  # (tick, event) applied
+        self.pool_exhausted = 0      # chunks that ended a tick unfunded
+        # resident-KV accounting (tokens that must stay in HBM for the
+        # active set: per-slot KV + distinct pinned pool pages), sampled
+        # once per decode tick — the capacity curve paged mode exists for
+        self.resident_kv_tokens_peak = 0
+        self._resident_tok_sum = 0
+        self._resident_ticks = 0
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        # Capacity bound, enforced HERE rather than discovered at the cache
+        # edge: a request needs prompt+max_new_tokens sequence positions,
+        # and the decode scatter (`cache.at[rows, cur].set`) CLAMPS an
+        # out-of-bounds write onto the last KV row instead of failing —
+        # prompt+max_new == max_len is the last admissible boundary (its
+        # final KV write lands at max_len-2 and its last token needs no
+        # write).  Oversized requests used to be silently truncated by the
+        # retire guard; now they are rejected up front.
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) = {need} exceeds "
+                f"max_len={self.max_len}; the KV scatter would clamp at the "
+                "cache edge and silently overwrite the last row")
         if req.submit_tick < 0:
             req.submit_tick = self.ticks
         self.queue.append(req)
@@ -384,6 +519,20 @@ class ServeEngine:
         req.out_tokens.append(tok)
         if req.slot >= 0:
             self._last_tok[req.slot, 0] = tok
+
+    def _check_tail(self, req: Request, rest: int):
+        """Paged-mode tail bound: a slot's tail must hold its computed
+        suffix plus every decoded token's KV (the last emitted token needs
+        no write — see ``submit``).  Always satisfied when ``tail_tokens``
+        is the default ``max_len``; a shrunk tail that cannot hold this
+        request is a configuration error, caught before any state moves."""
+        need = rest + req.max_new_tokens - 1
+        if need > self.tail_cap:
+            raise RuntimeError(
+                f"request {req.rid}: computed suffix ({rest}) + "
+                f"max_new_tokens-1 ({req.max_new_tokens - 1}) = {need} "
+                f"exceeds tail_tokens={self.tail_cap}; raise tail_tokens "
+                "(default max_len is always safe)")
 
     def _admit_split(self, reqs: list[Request]):
         """PR-2 batched admission (≤ 3 cache-engine device calls total):
@@ -414,26 +563,46 @@ class ServeEngine:
                 pages = pages[:-1]
             plen = len(pages) * ct
             req.prefill_skipped = plen
+            pk = pv = None
             if pages:
                 for pg in pages:
                     self.pool.pin(pg)
                     req.pinned_pages.append(pg)
-                pk, pv = self.pool.gather_pages(np.array(pages))
-                pk, pv = pk[:, None], pv[:, None]              # (L,1,plen,..)
-            else:
-                pk = pv = None
+                if not self.paged:
+                    pk, pv = self.pool.gather_pages(np.array(pages))
+                    pk, pv = pk[:, None], pv[:, None]          # (L,1,plen,..)
             rest = jnp.asarray(req.prompt[plen:][None], jnp.int32)
             req.prefill_computed = rest.shape[1]
-            if pk is not None:
+            if self.paged and pages:
+                # zero-copy: the prefix is read from the pool inside the
+                # launch; the slot records only a block table
+                self._check_tail(req, req.prefill_computed)
+                logits, nk, nv = self._prefill_bpp(
+                    self.params, rest,
+                    jnp.asarray([req.prefill_computed], jnp.int32),
+                    self.pool.k, self.pool.v,
+                    jnp.asarray(np.array(pages, np.int32)[None]),
+                    jnp.asarray([plen], jnp.int32))
+                logits = logits[0]
+            elif pk is not None:
                 logits, nk, nv = self._prefill1(self.params, rest, pk, pv, plen)
             else:
+                if self.paged:
+                    self._check_tail(req, req.prefill_computed)
                 logits, nk, nv = self._prefill0(self.params, rest)
-            # write slot cache: prefix pages + fresh kv
-            k_all = jnp.concatenate([pk, nk], axis=2) if pk is not None else nk
-            v_all = jnp.concatenate([pv, nv], axis=2) if pv is not None else nv
-            total = k_all.shape[2]
-            self.cache["k"] = self.cache["k"].at[:, slot, :total].set(k_all[:, 0])
-            self.cache["v"] = self.cache["v"].at[:, slot, :total].set(v_all[:, 0])
+            if self.paged:
+                # slot holds only the tail; the prefix stays pool-resident
+                rl = req.prefill_computed
+                self.cache["k"] = self.cache["k"].at[:, slot, :rl].set(nk[:, 0])
+                self.cache["v"] = self.cache["v"].at[:, slot, :rl].set(nv[:, 0])
+                self.pool.set_block_table(slot, pages)
+            else:
+                # write slot cache: prefix pages + fresh kv
+                k_all = jnp.concatenate([pk, nk], axis=2) if pk is not None else nk
+                v_all = jnp.concatenate([pv, nv], axis=2) if pv is not None else nv
+                total = k_all.shape[2]
+                self.cache["k"] = self.cache["k"].at[:, slot, :total].set(k_all[:, 0])
+                self.cache["v"] = self.cache["v"].at[:, slot, :total].set(v_all[:, 0])
             # stage the new chunks' pages; published in one batch below
             new_full_chunks = (plen + req.prefill_computed) // ct - len(pages)
             if new_full_chunks > 0:
@@ -441,6 +610,11 @@ class ServeEngine:
                 for _ in range(new_full_chunks):
                     pg = self.pool.alloc()
                     if pg is None:
+                        # near-full pool: the rest of this chain's chunks go
+                        # unpublished this tick (the fused path's reserve/
+                        # recycle protocol has no analogue here) — count it
+                        # instead of silently publishing fewer chunks
+                        self.pool_exhausted += 1
                         break
                     new_pages.append(pg)
                 if new_pages:
@@ -465,6 +639,10 @@ class ServeEngine:
 
     def _admit_plain(self, reqs: list[Request]):
         for req in reqs:
+            if self.paged:
+                # no prefix: the whole prompt lives in the slot tail
+                self._check_tail(req, len(req.prompt))
+                self.pool.clear_slot(req.slot)
             batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
             logits, pc = self._prefill_plain(self.params, batch)
             self._install_prefill(req.slot, pc)
@@ -609,6 +787,10 @@ class ServeEngine:
                     break                  # another chain owns this chunk
                 pg = self.pool.alloc()
                 if pg is None:
+                    # terminal: staging broke AND this tick's eviction
+                    # recycling could not re-fund the chunk — it ends the
+                    # tick unpublished (same event the split path counts)
+                    self.pool_exhausted += 1
                     break
                 sub_h.append(chain[t])
                 sub_p.append(pg)
@@ -704,11 +886,16 @@ class ServeEngine:
             plen = len(pages) * ct
             plens.append(plen)
             rests.append(len(req.prompt) - plen)
+            if self.paged:
+                self._check_tail(req, len(req.prompt) - plen)
             for pg in pages:
                 self.pool.pin(pg)
                 req.pinned_pages.append(pg)
+            # paged mode never materializes the prefix copy: the launch
+            # reads pool pages directly (borrowers included — zero
+            # gather_pages calls)
             gathered.append(self.pool.gather_pages(np.asarray(pages))
-                            if pages else None)
+                            if pages and not self.paged else None)
         bp = _pow2(len(jobs))
         sb = _pow2(max(rests))
         pb = _pow2(max(plens)) if any(plens) else 0
@@ -719,7 +906,19 @@ class ServeEngine:
             toks[i, : rests[i]] = j["req"].prompt[plens[i]:]
             lens[i] = rests[i]
             pl[i] = plens[i]
-        if pb:
+        if pb and self.paged:
+            # pow2 page-count bucket sized so the prefix lane count equals
+            # the contiguous path's pb bucket (ct is a power of two in
+            # every config we serve), keeping the launches bit-comparable
+            npb = max(1, -(-pb // ct))
+            pidx = np.zeros((bp, npb), np.int32)
+            for i, j in enumerate(jobs):
+                pidx[i, : len(j["pages"])] = j["pages"]
+            logits, nk, nv = self._prefill_bpp(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                self.pool.k, self.pool.v, jnp.asarray(pidx),
+                jnp.asarray(pl))
+        elif pb:
             pk = jnp.zeros((L, bp, pb, kvh, dh), self.pool.k.dtype)
             pv = jnp.zeros((L, bp, pb, kvh, dh), self.pool.v.dtype)
             for i, g in enumerate(gathered):
@@ -740,15 +939,24 @@ class ServeEngine:
             plen, rest = plens[i], rests[i]
             req.prefill_skipped = plen
             req.prefill_computed = rest
-            if gathered[i] is not None:
-                self.cache["k"] = self.cache["k"].at[:, slot, :plen].set(
-                    gathered[i][0])
-                self.cache["v"] = self.cache["v"].at[:, slot, :plen].set(
-                    gathered[i][1])
-            self.cache["k"] = self.cache["k"].at[
-                :, slot, plen: plen + rest].set(nk[:, i, :rest])
-            self.cache["v"] = self.cache["v"].at[
-                :, slot, plen: plen + rest].set(nv[:, i, :rest])
+            if self.paged:
+                # slot holds only the tail; the prefix stays pool-resident
+                # behind the block table
+                self.cache["k"] = self.cache["k"].at[
+                    :, slot, :rest].set(nk[:, i, :rest])
+                self.cache["v"] = self.cache["v"].at[
+                    :, slot, :rest].set(nv[:, i, :rest])
+                self.pool.set_block_table(slot, j["pages"])
+            else:
+                if gathered[i] is not None:
+                    self.cache["k"] = self.cache["k"].at[:, slot, :plen].set(
+                        gathered[i][0])
+                    self.cache["v"] = self.cache["v"].at[:, slot, :plen].set(
+                        gathered[i][1])
+                self.cache["k"] = self.cache["k"].at[
+                    :, slot, plen: plen + rest].set(nk[:, i, :rest])
+                self.cache["v"] = self.cache["v"].at[
+                    :, slot, plen: plen + rest].set(nv[:, i, :rest])
             writes = [(t, pg) for t, pg in to_write[c]]
             if writes:
                 kc = jnp.stack([nk[:, i, t * ct - plen: (t + 1) * ct - plen]
@@ -801,10 +1009,18 @@ class ServeEngine:
 
     def _launch_decode(self, curs: np.ndarray):
         """ONE decode launch over the persistent token buffer, every row at
-        its ``curs`` position; counts the launch and its active rows."""
-        logits, cache = self._decode(
-            self.params, jnp.asarray(self._last_tok), self.cache,
-            jnp.asarray(curs))
+        its ``curs`` position; counts the launch and its active rows.
+        Paged mode reads the pool planes + block tables at launch time, so
+        pages a borrower wave published earlier this tick are visible."""
+        if self.paged:
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(self._last_tok), self.cache,
+                self.pool.k, self.pool.v, self.pool.device_block_tables(),
+                jnp.asarray(self.pool.prefix_lens), jnp.asarray(curs))
+        else:
+            logits, cache = self._decode(
+                self.params, jnp.asarray(self._last_tok), self.cache,
+                jnp.asarray(curs))
         self.decode_launches += 1
         self.launch_rows += len(self.active)
         return np.asarray(jnp.argmax(logits, -1)), cache
@@ -916,10 +1132,30 @@ class ServeEngine:
                         or self.cur_len[r.slot] >= self.max_len - 1):
                     done.append(r.rid)
         self.decode_tokens += int(accept.sum())
+        if self.pool is not None and self.active:
+            # resident-KV sample at the tick's high-water point (before
+            # retirements): per-slot KV tokens (full sequence in contiguous
+            # mode, only the tail in paged mode) plus every distinct pinned
+            # pool page — pinned pages are HBM-resident in both modes, but
+            # contiguous mode ADDITIONALLY duplicates their content into
+            # each borrowing slot
+            slot_tok, pinned = 0, set()
+            for r in self.active.values():
+                slot_tok += int(self.cur_len[r.slot])
+                if self.paged:
+                    slot_tok -= int(self.pool.prefix_lens[r.slot])
+                pinned.update(r.pinned_pages)
+            resident = slot_tok + len(pinned) * self.pool.page_tokens
+            self.resident_kv_tokens_peak = max(self.resident_kv_tokens_peak,
+                                               resident)
+            self._resident_tok_sum += resident
+            self._resident_ticks += 1
         for rid in done:
             r = self.active.pop(rid)
             for pg in r.pinned_pages:
                 self.pool.unpin(pg)
+            if self.paged:
+                self.pool.clear_slot(r.slot)
             self._free_slots.append(r.slot)
             self.finished.append(r)
         self.ticks += 1
@@ -1002,4 +1238,25 @@ class ServeEngine:
             "fallbacks": self.fallbacks,
             "service_ticks_p50": p50,
             "service_ticks_p99": p99,
+            "kv_mode": self.kv_mode,
+            # chunks that ended a tick unfunded because the pool ran dry
+            # (split: mid-chain alloc failure; fused: post-recycle retry
+            # failure) — pressure signal, not an error
+            "pool_exhausted": self.pool_exhausted,
+            # prefix copies admission made (0 in paged mode by contract)
+            "gather_calls": (self.pool.gather_calls
+                             if self.pool is not None else 0),
+            "resident_kv_tokens_peak": self.resident_kv_tokens_peak,
+            "resident_kv_tokens_mean": (
+                self._resident_tok_sum / self._resident_ticks
+                if self._resident_ticks else 0.0),
+            "resident_kv_bytes_peak": (self.resident_kv_tokens_peak
+                                       * self._kv_bytes_per_token()),
         }
+
+    def _kv_bytes_per_token(self) -> int:
+        """HBM bytes one token's K+V occupies across all layers."""
+        itemsize = jnp.dtype(self.cache["k"].dtype).itemsize if "k" in \
+            self.cache else 2
+        return (2 * self.cfg.n_layers * self.cfg.n_kv_heads
+                * self.cfg.head_dim * itemsize)

@@ -9,6 +9,15 @@ real engines (vLLM) split device storage from host bookkeeping.
 Eviction policy is NOT here: the pool only allocs/frees.  The multi-step
 LRU prefix cache (prefix_cache.py) decides which page to reuse or evict —
 with zero per-page recency metadata, which is the paper's point.
+
+Paged serving (``ServeEngine(kv_mode="paged")``) additionally keeps a
+block-table plane here: per-slot page lists (host side, mirrored to a
+device array on demand) plus slot-local *tail* storage for the tokens a
+request computes itself (suffix prefill + decoded tokens).  In that mode
+the pool is the single resident copy of every shared prefix — decode
+attends straight into pool pages via the block table and ``gather_pages``
+is never called (``gather_calls`` counts the copies the contiguous mode
+still makes).
 """
 
 from __future__ import annotations
@@ -33,6 +42,14 @@ class PagedKVPool:
         self.refcount = np.zeros(n_pages, np.int32)
         self._deferred_free: set = set()
         self._reserved: set = set()
+        self.gather_calls = 0          # contiguous-mode prefix copies made
+        # paged-mode plane (allocated by attach_slots)
+        self.block_tables: np.ndarray | None = None   # (slots, max_pages) i32
+        self.prefix_lens: np.ndarray | None = None    # (slots,) i32
+        self.tail_k = None
+        self.tail_v = None
+        self.tail_tokens = 0
+        self._bt_device = None         # cached device mirror of block_tables
 
     # -- host bookkeeping ----------------------------------------------------
     def alloc(self) -> int | None:
@@ -62,6 +79,9 @@ class PagedKVPool:
 
     def abort(self, page: int) -> None:
         assert page in self._reserved, f"abort of unreserved page {page}"
+        assert self.refcount[page] == 1, (
+            f"abort of page {page} with refcount {self.refcount[page]}: "
+            "reserved pages are unpublished and must not be pinned")
         self._reserved.discard(page)
         self.refcount[page] = 0
         self._free.append(page)
@@ -70,8 +90,17 @@ class PagedKVPool:
         self.refcount[page] += 1
 
     def unpin(self, page: int) -> None:
+        if self.refcount[page] <= 1 and page not in self._deferred_free:
+            # An unpin beyond the pin count would consume the cache's own
+            # alloc reference: the page would end up neither free, nor
+            # reserved, nor reachable from the table — stranded forever.
+            # Fail loud (and mutate nothing) instead of leaking capacity.
+            raise AssertionError(
+                f"unbalanced unpin of page {page}: refcount "
+                f"{int(self.refcount[page])} with no deferred release")
         self.refcount[page] -= 1
         if self.refcount[page] <= 0 and page in self._deferred_free:
+            # policy already evicted it; last reader gone -> really free
             self._deferred_free.discard(page)
             self.refcount[page] = 0
             self._free.append(page)
@@ -89,6 +118,44 @@ class PagedKVPool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    # -- paged-mode plane: per-slot block tables + tail storage --------------
+    # The tail holds the tokens a slot computes itself (suffix prefill +
+    # decoded tokens) at tail position (abs_pos - prefix_len); everything
+    # before prefix_len lives in pool pages named by the slot's block table.
+    def attach_slots(self, slots: int, max_len: int,
+                     tail_tokens: int | None = None):
+        """Allocate block tables + slot tails; returns the tail {"k","v"}."""
+        pt = self.page_tokens
+        max_pages = -(-max_len // pt)
+        self.tail_tokens = max_len if tail_tokens is None else tail_tokens
+        self.block_tables = np.zeros((slots, max_pages), np.int32)
+        self.prefix_lens = np.zeros(slots, np.int32)
+        self._bt_device = None
+        cfg = self.cfg
+        shape = (cfg.n_layers, slots, self.tail_tokens,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.tail_k = jnp.zeros(shape, self.k.dtype)
+        self.tail_v = jnp.zeros(shape, self.v.dtype)
+        return {"k": self.tail_k, "v": self.tail_v}
+
+    def set_block_table(self, slot: int, pages) -> None:
+        """Record slot's prefix as a page walk (prefix_len = len·page_tokens)."""
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :len(pages)] = pages
+        self.prefix_lens[slot] = len(pages) * self.page_tokens
+        self._bt_device = None
+
+    def clear_slot(self, slot: int) -> None:
+        self.block_tables[slot] = 0
+        self.prefix_lens[slot] = 0
+        self._bt_device = None
+
+    def device_block_tables(self):
+        """(slots, max_pages) i32 device mirror, refreshed only when dirty."""
+        if self._bt_device is None:
+            self._bt_device = jnp.asarray(self.block_tables)
+        return self._bt_device
+
     # -- device ops ------------------------------------------------------------
     def write_pages(self, pages: np.ndarray, k_chunks, v_chunks) -> None:
         """k/v_chunks (L, n, page_tokens, KVH, Dh) -> pool rows ``pages``."""
@@ -98,6 +165,7 @@ class PagedKVPool:
 
     def gather_pages(self, pages: np.ndarray):
         """pages (n,) -> (L, n*page_tokens, KVH, Dh) contiguous K and V."""
+        self.gather_calls += 1
         idx = jnp.asarray(pages, jnp.int32)
         l = self.cfg.n_layers
         k = jnp.take(self.k, idx, axis=1)

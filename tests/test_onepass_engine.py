@@ -80,6 +80,7 @@ def test_onepass_bitexact_vs_sequential_duplicate_heavy(policy, value_planes,
     np.testing.assert_array_equal(np.asarray(tbl), np.asarray(seq.table))
 
 
+@pytest.mark.slow
 def test_onepass_bitexact_100k_zipfian():
     """Acceptance: bit-exact vs the sequential engine on a 100k-query
     Zipfian stream (α=0.99, realistic geometry)."""

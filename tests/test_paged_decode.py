@@ -1,0 +1,258 @@
+"""Paged decode attention: block-table walk vs the contiguous oracle.
+
+Layers under test, bottom-up:
+  * ``attention.paged_attn_decode`` (jnp mirror) vs ``attention.attn_decode``
+    on an explicitly-assembled contiguous cache — BIT-identical by
+    construction (same lane count, same bits, same ops);
+  * the Pallas kernel (``kernels.paged_attn``, interpret mode) vs the jnp
+    mirror — flash-accumulation rounding only (allclose gate);
+  * ``ServeEngine(kv_mode="paged")`` vs the contiguous engine on shared-
+    prefix traces — token streams bit-identical, ZERO ``gather_pages``
+    copies, balanced pool refcounts; both fused and split admission;
+  * the capacity-bound fixes that ride along: submit-time rejection at
+    prompt+max_new > max_len, the boundary case AT max_len, the shrunk-tail
+    configuration guard, and the ``pool_exhausted`` counter parity.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn_mod
+from repro.models.model import make_model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n=10, prefix=32, n_templates=4, seed=0):
+    rng = np.random.default_rng(seed)
+    tmpl = [rng.integers(1, cfg.vocab_size, prefix).astype(np.int32)
+            for _ in range(n_templates)]
+    out = []
+    for i in range(n):
+        sfx = rng.integers(1, cfg.vocab_size, 5 + i % 9).astype(np.int32)
+        out.append(np.concatenate([tmpl[i % n_templates], sfx]))
+    return out
+
+
+def _drive(cfg, model, params, prompts, *, kv_mode, n_pages=48, slots=3,
+           max_len=128, max_new=6, **kw):
+    pool = PagedKVPool(cfg, n_pages=n_pages, page_tokens=16)
+    pc = PrefixCache(num_sets=32, m=2, p=4, chunk_tokens=16)
+    eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                      prefix_cache=pc, pool=pool, kv_mode=kv_mode, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    eng.run_until_done()
+    toks = {r.rid: list(r.out_tokens) for r in eng.finished}
+    return toks, eng, pool
+
+
+# ---------------------------------------------------------------------------
+# unit level: mirror vs contiguous attn_decode
+# ---------------------------------------------------------------------------
+
+def _paged_fixture(cfg, seed=0, b=3, smax=64, pt=8, n_pages=10, tmax=32):
+    """Random pool/tails + the equivalent explicitly-assembled contiguous
+    cache.  Row layouts: prefix_len full pages, then `used` tail tokens;
+    the decode position is prefix+used (the next token)."""
+    rng = np.random.default_rng(seed)
+    kvh, dh, h = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    d = cfg.d_model
+    f = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.bfloat16)
+    pool_k, pool_v = f(n_pages, pt, kvh, dh), f(n_pages, pt, kvh, dh)
+    tail_k, tail_v = f(b, tmax, kvh, dh), f(b, tmax, kvh, dh)
+    bt = jnp.asarray(rng.integers(0, n_pages, (b, smax // pt)), jnp.int32)
+    plens = np.array([16, 8, 0], np.int32)[:b]
+    used = np.array([5, 11, 7], np.int32)[:b]          # tail tokens so far
+    curs = jnp.asarray(plens + used)
+    ck = jnp.zeros((b, smax, kvh, dh), jnp.bfloat16)
+    cv = jnp.zeros((b, smax, kvh, dh), jnp.bfloat16)
+    for i in range(b):
+        for j in range(plens[i] // pt):
+            pg = int(bt[i, j])
+            ck = ck.at[i, j * pt:(j + 1) * pt].set(pool_k[pg])
+            cv = cv.at[i, j * pt:(j + 1) * pt].set(pool_v[pg])
+        ck = ck.at[i, plens[i]:plens[i] + tmax].set(tail_k[i][: smax - plens[i]])
+        cv = cv.at[i, plens[i]:plens[i] + tmax].set(tail_v[i][: smax - plens[i]])
+    x = f(b, 1, d)
+    params = attn_mod.attn_init(jax.random.PRNGKey(seed), d, h, kvh, dh)
+    return dict(params=params, x=x, pool_k=pool_k, pool_v=pool_v, bt=bt,
+                tail_k=tail_k, tail_v=tail_v, plens=jnp.asarray(plens),
+                curs=curs, ck=ck, cv=cv, smax=smax)
+
+
+@pytest.mark.parametrize("window,softcap", [(None, 0.0), (24, 0.0),
+                                            (None, 30.0)])
+def test_paged_mirror_bit_identical_to_contiguous(model_and_params, window,
+                                                  softcap):
+    cfg, _, _ = model_and_params
+    fx = _paged_fixture(cfg)
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              d_head=cfg.head_dim, rope_kind=cfg.rope_kind, theta=1e4,
+              window=window, softcap=softcap)
+    out_c, ck2, cv2 = attn_mod.attn_decode(
+        fx["params"], fx["x"], fx["ck"], fx["cv"], fx["curs"], **kw)
+    out_p, tk2, tv2 = attn_mod.paged_attn_decode(
+        fx["params"], fx["x"], fx["pool_k"], fx["pool_v"], fx["bt"],
+        fx["tail_k"], fx["tail_v"], fx["plens"], fx["curs"],
+        smax=fx["smax"], **kw)
+    np.testing.assert_array_equal(np.asarray(out_c, np.float32),
+                                  np.asarray(out_p, np.float32))
+    # the new KV row lands at cur in the contiguous cache and cur-plen in
+    # the tail — same bits
+    for i in range(fx["x"].shape[0]):
+        cur, plen = int(fx["curs"][i]), int(fx["plens"][i])
+        np.testing.assert_array_equal(
+            np.asarray(ck2[i, cur], np.float32),
+            np.asarray(tk2[i, cur - plen], np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(cv2[i, cur], np.float32),
+            np.asarray(tv2[i, cur - plen], np.float32))
+
+
+@pytest.mark.parametrize("window,softcap", [(None, 0.0), (24, 30.0)])
+def test_paged_kernel_matches_mirror(model_and_params, window, softcap):
+    """Pallas kernel (interpret mode) vs the jnp mirror: identical score
+    math, flash-accumulation ordering — allclose at bf16 resolution."""
+    cfg, _, _ = model_and_params
+    fx = _paged_fixture(cfg, seed=3)
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              d_head=cfg.head_dim, rope_kind=cfg.rope_kind, theta=1e4,
+              window=window, softcap=softcap, smax=fx["smax"])
+    args = (fx["params"], fx["x"], fx["pool_k"], fx["pool_v"], fx["bt"],
+            fx["tail_k"], fx["tail_v"], fx["plens"], fx["curs"])
+    out_m, tkm, tvm = attn_mod.paged_attn_decode(*args, **kw)
+    out_k, tkk, tvk = attn_mod.paged_attn_decode(*args, use_kernel=True,
+                                                 interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(tkm, np.float32),
+                                  np.asarray(tkk, np.float32))
+    np.testing.assert_allclose(np.asarray(out_m, np.float32),
+                               np.asarray(out_k, np.float32),
+                               rtol=0.05, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# engine level: paged serving vs the contiguous oracle
+# ---------------------------------------------------------------------------
+
+def test_serve_paged_tokens_bit_identical_fused(model_and_params):
+    cfg, model, params = model_and_params
+    prompts = _prompts(cfg)
+    tc, ec, pool_c = _drive(cfg, model, params, prompts, kv_mode="contiguous")
+    tp, ep, pool_p = _drive(cfg, model, params, prompts, kv_mode="paged")
+    assert tc == tp                                    # bit-identical tokens
+    assert pool_p.gather_calls == 0                    # zero-copy admission
+    assert pool_c.gather_calls > 0                     # oracle really copies
+    np.testing.assert_array_equal(pool_c.refcount, pool_p.refcount)
+    assert pool_c.free_pages == pool_p.free_pages
+    sc, sp = ec.stats(), ep.stats()
+    # shared prefixes resident once instead of per-slot: strictly less HBM
+    assert sp["resident_kv_tokens_peak"] < sc["resident_kv_tokens_peak"]
+    assert sp["gather_calls"] == 0
+
+
+@pytest.mark.slow
+def test_serve_paged_tokens_bit_identical_split(model_and_params):
+    """Split admission in paged mode also reads the pool in-launch (no
+    per-borrower copies) and stays token-identical to the contiguous
+    split oracle."""
+    cfg, model, params = model_and_params
+    prompts = _prompts(cfg, n=8)
+    tc, _, pool_c = _drive(cfg, model, params, prompts,
+                           kv_mode="contiguous", admit_mode="split")
+    tp, _, pool_p = _drive(cfg, model, params, prompts, kv_mode="paged",
+                           admit_mode="split")
+    assert tc == tp
+    assert pool_p.gather_calls == 0
+    np.testing.assert_array_equal(pool_c.refcount, pool_p.refcount)
+
+
+@pytest.mark.slow
+def test_serve_paged_kernel_plumbing(model_and_params):
+    """End-to-end drive with the Pallas kernel in the decode scan
+    (interpret mode).  Flash rounding may differ from the mirror in the
+    last bf16 bit, so the gate is per-request token-stream equality with
+    the mirror engine — which holds on this trace — plus drain health."""
+    cfg, model, params = model_and_params
+    prompts = _prompts(cfg, n=6)
+    tm, _, _ = _drive(cfg, model, params, prompts, kv_mode="paged")
+    tk, ek, pool_k = _drive(cfg, model, params, prompts, kv_mode="paged",
+                            paged_kernel=True)
+    assert len(tk) == len(prompts) and pool_k.gather_calls == 0
+    assert tm == tk
+
+
+# ---------------------------------------------------------------------------
+# capacity bounds (the attn_decode clamp bugfix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_mode", ["contiguous", "paged"])
+def test_boundary_prompt_plus_max_new_equals_max_len(model_and_params,
+                                                     kv_mode):
+    """prompt+max_new == max_len is the last admissible request: all
+    max_new tokens come out (no silent truncation) and its final KV write
+    lands inside the cache.  One past it is rejected at submit — before
+    the fix it silently truncated and, at larger overshoot, the clamped
+    scatter overwrote the last KV row."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, 40).astype(np.int32)
+    max_len = 48
+    pool = PagedKVPool(cfg, n_pages=16, page_tokens=16)
+    pc = PrefixCache(num_sets=16, m=2, p=4, chunk_tokens=16)
+    eng = ServeEngine(model, params, slots=2, max_len=max_len,
+                      prefix_cache=pc, pool=pool, kv_mode=kv_mode)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))  # == 48
+    eng.run_until_done()
+    assert len(eng.finished) == 1
+    assert len(eng.finished[0].out_tokens) == 8        # nothing truncated
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=9))
+
+
+def test_paged_tail_capacity_guard(model_and_params):
+    """A tail too small for a request's computed suffix is a configuration
+    error caught before any engine state moves (default tail_tokens ==
+    max_len can never trip it)."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(8)
+    pool = PagedKVPool(cfg, n_pages=16, page_tokens=16)
+    pc = PrefixCache(num_sets=16, m=2, p=4, chunk_tokens=16)
+    eng = ServeEngine(model, params, slots=2, max_len=128, prefix_cache=pc,
+                      pool=pool, kv_mode="paged", tail_tokens=8)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(1, cfg.vocab_size, 20).astype(np.int32),
+                       max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="tail_tokens"):
+        eng.run_until_done()
+
+
+# ---------------------------------------------------------------------------
+# pool_exhausted: near-full-pool split-vs-fused parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pool_exhausted_counted_split_vs_fused(model_and_params):
+    """Under a near-full pool the split path's mid-chain alloc failure used
+    to ``break`` silently; it must now be counted — and the token streams
+    must stay identical to the fused path, which recycles same-tick."""
+    cfg, model, params = model_and_params
+    prompts = _prompts(cfg, n=8, prefix=48, n_templates=6, seed=11)
+    tf, ef, _ = _drive(cfg, model, params, prompts, kv_mode="contiguous",
+                       n_pages=6, admit_mode="fused")
+    ts, es, _ = _drive(cfg, model, params, prompts, kv_mode="contiguous",
+                       n_pages=6, admit_mode="split")
+    assert tf == ts                                    # parity under pressure
+    assert es.stats()["pool_exhausted"] > 0            # counted, not silent

@@ -1,0 +1,217 @@
+"""State-machine invariants for ``PagedKVPool`` bookkeeping.
+
+Drives random legal interleavings of the pool's host-side lifecycle ops —
+``alloc`` / ``reserve`` / ``commit`` / ``abort`` / ``pin`` / ``unpin`` /
+``release`` — against a shadow model, checking after every step that
+
+  * refcounts are never negative,
+  * every page is in exactly ONE state: free, reserved, held (published in
+    a table), or deferred (evicted while readers still hold pins),
+  * ``refcount == (held-or-reserved ? 1 : 0) + pins`` exactly,
+  * a deferred page always has at least one pin (else it must have freed),
+
+and at drain time that force-draining (release all, abort all, unpin all)
+returns every page to the free list — deferred frees really drain, nothing
+is stranded.  "Legal" mirrors the engine contract: only reserved pages are
+aborted/committed, only table-held pages are released (exactly once) or
+freshly pinned, and unpins never exceed pins (the leak-guard's own
+assertion has a dedicated unit test in test_serving.py).
+
+Two drivers share the shadow model: a hypothesis ``RuleBasedStateMachine``
+(shrinking + the scheduled high-example profile; skipped where hypothesis
+is absent) and a seeded numpy random walk that always runs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedKVPool
+
+N_PAGES = 6
+
+
+class _TinyCfg:
+    n_layers = 1
+    n_kv_heads = 1
+    head_dim = 2
+
+
+class PoolShadow:
+    """Shadow model + legal-op drivers + per-step invariant checks."""
+
+    def __init__(self):
+        self.pool = PagedKVPool(_TinyCfg(), n_pages=N_PAGES, page_tokens=4)
+        self.free = set(range(N_PAGES))
+        self.held = set()          # alloc'd/committed: the table's live ref
+        self.reserved = set()
+        self.deferred = set()      # released while readers still pinned
+        self.pins = {p: 0 for p in range(N_PAGES)}
+
+    # -- lifecycle ops (engine-legal transitions only) ----------------------
+    def alloc(self):
+        p = self.pool.alloc()
+        if not self.free:
+            assert p is None
+        else:
+            assert p in self.free
+            self.free.discard(p)
+            self.held.add(p)
+
+    def reserve(self):
+        p = self.pool.reserve()
+        if not self.free:
+            assert p is None
+        else:
+            assert p in self.free
+            self.free.discard(p)
+            self.reserved.add(p)
+
+    def commit(self, p):
+        self.pool.commit(p)
+        self.reserved.discard(p)
+        self.held.add(p)
+
+    def abort(self, p):
+        self.pool.abort(p)
+        self.reserved.discard(p)
+        self.free.add(p)
+
+    def pin(self, p):
+        self.pool.pin(p)
+        self.pins[p] += 1
+
+    def unpin(self, p):
+        self.pool.unpin(p)
+        self.pins[p] -= 1
+        if p in self.deferred and self.pins[p] == 0:
+            self.deferred.discard(p)      # last reader gone -> really free
+            self.free.add(p)
+
+    def release(self, p):
+        self.pool.release(p)
+        self.held.discard(p)
+        if self.pins[p] > 0:
+            self.deferred.add(p)
+        else:
+            self.free.add(p)
+
+    def pinned(self):
+        return sorted(q for q, n in self.pins.items() if n > 0)
+
+    # -- invariants ----------------------------------------------------------
+    def check(self):
+        assert (self.pool.refcount >= 0).all(), self.pool.refcount
+        pool_free = set(self.pool._free)
+        assert len(self.pool._free) == len(pool_free)       # no duplicates
+        assert pool_free == self.free
+        assert self.pool._reserved == self.reserved
+        assert self.pool._deferred_free == self.deferred
+        groups = [self.free, self.held, self.reserved, self.deferred]
+        assert sum(len(g) for g in groups) == N_PAGES
+        assert set().union(*groups) == set(range(N_PAGES))
+        for p in range(N_PAGES):
+            table = 1 if (p in self.held or p in self.reserved) else 0
+            assert self.pool.refcount[p] == table + self.pins[p], (
+                p, self.pool.refcount[p], table, self.pins[p])
+        for p in self.deferred:
+            assert self.pins[p] > 0, f"page {p} deferred with no readers"
+
+    def drain(self):
+        """Nothing may be stranded once every owner lets go."""
+        for p in sorted(self.reserved):
+            self.abort(p)
+        for p in sorted(self.held):
+            self.release(p)
+        for p, n in list(self.pins.items()):
+            for _ in range(n):
+                self.unpin(p)
+        assert not self.pool._deferred_free
+        assert (self.pool.refcount == 0).all()
+        assert self.pool.free_pages == N_PAGES
+
+
+def test_pool_random_walk_invariants():
+    """Seeded random walk over the same legal-op space (no hypothesis
+    dependency): 5 walks x 400 steps, invariants checked every step."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        m = PoolShadow()
+        for _ in range(400):
+            ops = ["alloc", "reserve"]
+            if m.reserved:
+                ops += ["commit", "abort"]
+            if m.held:
+                ops += ["pin", "release"]
+            if any(m.pins.values()):
+                ops += ["unpin"]
+            op = ops[rng.integers(len(ops))]
+            if op in ("alloc", "reserve"):
+                getattr(m, op)()
+            elif op in ("commit", "abort"):
+                getattr(m, op)(sorted(m.reserved)[rng.integers(len(m.reserved))])
+            elif op in ("pin", "release"):
+                getattr(m, op)(sorted(m.held)[rng.integers(len(m.held))])
+            else:
+                pp = m.pinned()
+                m.unpin(pp[rng.integers(len(pp))])
+            m.check()
+        m.drain()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis driver: shrinking + the scheduled high-example CI profile
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                     precondition, rule)
+except ImportError:
+    pass
+else:
+    class PoolMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.m = PoolShadow()
+
+        @rule()
+        def alloc(self):
+            self.m.alloc()
+
+        @rule()
+        def reserve(self):
+            self.m.reserve()
+
+        @precondition(lambda self: self.m.reserved)
+        @rule(data=st.data())
+        def commit(self, data):
+            self.m.commit(data.draw(st.sampled_from(sorted(self.m.reserved))))
+
+        @precondition(lambda self: self.m.reserved)
+        @rule(data=st.data())
+        def abort(self, data):
+            self.m.abort(data.draw(st.sampled_from(sorted(self.m.reserved))))
+
+        @precondition(lambda self: self.m.held)
+        @rule(data=st.data())
+        def pin(self, data):
+            self.m.pin(data.draw(st.sampled_from(sorted(self.m.held))))
+
+        @precondition(lambda self: any(self.m.pins.values()))
+        @rule(data=st.data())
+        def unpin(self, data):
+            self.m.unpin(data.draw(st.sampled_from(self.m.pinned())))
+
+        @precondition(lambda self: self.m.held)
+        @rule(data=st.data())
+        def release(self, data):
+            self.m.release(data.draw(st.sampled_from(sorted(self.m.held))))
+
+        @invariant()
+        def invariants_hold(self):
+            self.m.check()
+
+        def teardown(self):
+            self.m.drain()
+
+    TestPoolMachine = PoolMachine.TestCase

@@ -32,9 +32,31 @@ def test_pool_alloc_refcount():
     pool.pin(pages[0])
     pool.release(pages[0])       # still pinned -> deferred
     assert pool.free_pages == 0
-    pool.unpin(pages[0])
-    pool.unpin(pages[0])
+    pool.unpin(pages[0])         # last reader gone -> really freed
     assert pool.free_pages == 1
+    # an unpin beyond the pin count used to drive the refcount negative and
+    # strand the page (neither free nor referenced); it must now fail loud
+    with pytest.raises(AssertionError, match="unbalanced unpin"):
+        pool.unpin(pages[0])
+
+
+def test_pool_unpin_leak_guard():
+    """A page whose refcount reaches 0 by unpin WITHOUT a deferred release
+    must not silently leak: the pool either frees it (deferred) or raises
+    (unbalanced unpin consumed the table's own reference)."""
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    pool = PagedKVPool(cfg, n_pages=2, page_tokens=8)
+    pg = pool.alloc()            # table holds rc=1
+    pool.pin(pg)                 # a reader
+    pool.unpin(pg)               # balanced: rc back to the table's 1
+    assert pool.free_pages == 1 and pool.refcount[pg] == 1
+    before = pool.free_pages
+    with pytest.raises(AssertionError, match="unbalanced unpin"):
+        pool.unpin(pg)           # would strand the page forever
+    # the failed unpin must not have freed or corrupted anything
+    assert pool.free_pages == before
+    pool.release(pg)             # the table's own release still works
+    assert pool.free_pages == 2
 
 
 def test_prefix_cache_evicts_to_pool():
