@@ -16,7 +16,7 @@ from pathlib import Path
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import MSLRUConfig, init_table, make_sequential_engine
+from repro.core import MSLRUConfig, OP_ACCESS, init_table, make_sequential_engine
 from repro.core.policies import ARC, FIFO, ExactLRU, GClock, ReuseDistanceLRU
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
@@ -35,28 +35,47 @@ def cached(name: str, fn, force: bool = False):
     return out
 
 
-def msl_cfg(capacity: int, m: int = 2, p: int = 4, policy: str = "multistep"):
+def msl_cfg(capacity: int, m: int = 2, p: int = 4, policy: str = "multistep",
+            cost_planes: int = 0):
     """Cache geometry for a given item capacity (sets = capacity / (m*p))."""
     num_sets = max(1, capacity // (m * p))
     assert num_sets & (num_sets - 1) == 0, f"capacity {capacity} not pow2-compatible"
-    return MSLRUConfig(num_sets=num_sets, m=m, p=p, value_planes=0, policy=policy)
+    return MSLRUConfig(num_sets=num_sets, m=m, p=p, value_planes=0,
+                       policy=policy, cost_planes=cost_planes)
 
 
 def run_msl(trace: np.ndarray, capacity: int, m: int = 2, p: int = 4,
             policy: str = "multistep", return_pos: bool = False,
-            table=None):
-    """Sequential-engine run; returns dict with hit ratio (+ hit positions)."""
-    cfg = msl_cfg(capacity, m, p, policy)
-    engine = make_sequential_engine(cfg)
+            table=None, costs: np.ndarray | None = None,
+            cost_aware: bool = False):
+    """Sequential-engine run; returns dict with hit ratio (+ hit positions).
+
+    ``costs`` is an optional per-query int32 re-fill cost vector.  When
+    given, the record gains ``miss_cost`` — the summed cost of every missed
+    query (the FLOPs view next to the hit-ratio view).  ``cost_aware=True``
+    additionally stores the costs in a cost plane (cost_planes=1) so the
+    in-vector victim choice keeps expensive rows and evicts cheap ones;
+    without it the costs are accounting-only and eviction is plain LRU.
+    """
+    cfg = msl_cfg(capacity, m, p, policy, cost_planes=1 if cost_aware else 0)
+    engine = make_sequential_engine(cfg, with_ops=cost_aware)
     tbl = init_table(cfg) if table is None else table
     qk = jnp.asarray(trace[:, None], jnp.int32)
     qv = jnp.zeros((len(trace), 0), jnp.int32)
     t0 = time.time()
-    tbl, out = engine(tbl, qk, qv)
-    hits = np.asarray(out.hit)
+    if cost_aware:
+        assert costs is not None, "cost_aware run needs a costs vector"
+        ops = jnp.full(len(trace), OP_ACCESS, jnp.int32)
+        tbl, out = engine(tbl, qk, qv, ops,
+                          costs=jnp.asarray(costs, jnp.int32))
+    else:
+        tbl, out = engine(tbl, qk, qv)
+    hits = np.asarray(out.hit).astype(bool)
     dt = time.time() - t0
     rec = {"hit_ratio": float(hits.mean()), "seconds": dt,
            "us_per_query": dt / len(trace) * 1e6}
+    if costs is not None:
+        rec["miss_cost"] = int(np.asarray(costs, np.int64)[~hits].sum())
     if return_pos:
         rec["pos"] = np.asarray(out.pos)
     return rec

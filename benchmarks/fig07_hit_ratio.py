@@ -5,6 +5,13 @@ Paper claims validated here (at 1/100 scale):
   * GCLOCK below multi-step (except latest at large sizes);
   * exact LRU below GCLOCK/multi-step/ARC;
   * in-vector LRU (M=1 set-associative) worst.
+
+Beyond the paper, the ``cost`` row runs multi-step LRU with a cost plane
+(cost_planes=1): each key carries a deterministic synthetic re-fill cost in
+1..8 and the in-vector victim choice evicts the cheapest row of the last
+step segment instead of the positional tail.  Two views are reported: the
+usual hit ratio, and ``miss_cost`` — total re-fill cost of the misses — for
+cost-blind multistep vs the cost policy on the same trace.
 """
 
 from __future__ import annotations
@@ -25,12 +32,19 @@ def run(force: bool = False):
         out = {}
         for dist in DISTS:
             trace = make_workload(dist, N_KEYS, N_QUERIES, ALPHA, seed=7)
+            # Deterministic per-key re-fill cost, 1..8 (same key -> same cost).
+            kcost = (1 + trace % 8).astype(np.int32)
             row = {}
             row["lru"] = lru_curve(trace, CAPACITIES)
             for cap in CAPACITIES:
                 c = str(cap)
                 row.setdefault("invector", {})[c] = run_msl(trace, cap, m=1)["hit_ratio"]
-                row.setdefault("multistep", {})[c] = run_msl(trace, cap, m=2)["hit_ratio"]
+                r_base = run_msl(trace, cap, m=2, costs=kcost)
+                r_cost = run_msl(trace, cap, m=2, costs=kcost, cost_aware=True)
+                row.setdefault("multistep", {})[c] = r_base["hit_ratio"]
+                row.setdefault("cost", {})[c] = r_cost["hit_ratio"]
+                row.setdefault("miss_cost", {})[c] = {
+                    "multistep": r_base["miss_cost"], "cost": r_cost["miss_cost"]}
                 row.setdefault("set_lru", {})[c] = run_msl(
                     trace, cap, m=2, policy="set_lru")["hit_ratio"]
                 row.setdefault("gclock", {})[c] = run_python_algo(
@@ -47,9 +61,19 @@ def report(res: dict) -> list[str]:
     lines = ["fig07: hit ratio vs cache size (1M keys, 2M queries, a=0.99)"]
     for dist, row in res.items():
         lines.append(f"  [{dist}]  size: " + "  ".join(f"{c:>7}" for c in map(str, CAPACITIES)))
-        for algo in ("invector", "set_lru", "lru", "gclock", "multistep", "arc"):
-            vals = [row[algo][str(c)] for c in CAPACITIES]
+        for algo in ("invector", "set_lru", "lru", "gclock", "multistep",
+                     "cost", "arc"):
+            sub = row.get(algo)
+            if not sub:  # tolerate cached results from before the cost plane
+                continue
+            vals = [sub[str(c)] for c in CAPACITIES]
             lines.append(f"    {algo:10s} " + "  ".join(f"{v:7.4f}" for v in vals))
+        mc = row.get("miss_cost")
+        if mc:
+            for name in ("multistep", "cost"):
+                vals = [mc[str(c)][name] for c in CAPACITIES]
+                lines.append(f"    {'mc_' + name:10s} "
+                             + "  ".join(f"{v:7d}" for v in vals))
     return lines
 
 

@@ -34,14 +34,26 @@ peak resident KV bytes (slot-resident tokens + distinct pinned pages) and
 their ratio.  Paged keeps ONE resident copy of every hot template instead
 of one per borrowing slot, so the ratio must stay ≤ 0.5.
 
-``run()`` merges both sweeps into BENCH_serve.json at the repo root;
-``--smoke`` uses the tiny CI traces (entry blocks ``smoke`` and
-``paged_smoke``).  ``--check`` recomputes the smoke blocks and fails
-(exit 1) if the in-flight ``launches_per_token`` exceeds 1.05,
-ticks-to-drain regresses past 1.1× the committed entry, either sweep's
-token streams diverge, the paged drive made any ``gather_pages`` copy, or
-the paged/contiguous resident-KV-bytes ratio exceeds 0.5 (the
-differential oracles riding along in CI).
+A third sweep A/Bs the eviction policy on an UNDERSIZED cache under deep
+shared templates (``--policy {uniform,cost}`` drives one half ad hoc):
+``cost`` builds the prefix cache with ``cost_aware=True``, so each chunk's
+depth-weighted re-prefill cost rides the engine's cost plane and the
+in-vector victim choice spends evictions on leaf chunks instead of the
+shallow chunks whose loss orphans a whole chain.  Reported per policy:
+``reprefill_flops`` (FLOPs re-spent re-prefilling previously-evicted
+chunks), ``evicted_cost``, hit ratio, and goodput (decode tokens per
+tick); the token streams must be identical — the policy changes what
+prefill recomputes, never what the model emits.
+
+``run()`` merges all three sweeps into BENCH_serve.json at the repo root;
+``--smoke`` uses the tiny CI traces (entry blocks ``smoke``,
+``paged_smoke``, and ``cost_smoke``).  ``--check`` recomputes the smoke
+blocks and fails (exit 1) if the in-flight ``launches_per_token`` exceeds
+1.05, ticks-to-drain regresses past 1.1× the committed entry, any sweep's
+token streams diverge, the paged drive made any ``gather_pages`` copy,
+the paged/contiguous resident-KV-bytes ratio exceeds 0.5, the cost
+policy's ``reprefill_flops`` exceeds 0.9× uniform, or its drain slows
+beyond 1.05× (the differential oracles riding along in CI).
 """
 
 from __future__ import annotations
@@ -78,9 +90,23 @@ PAGED_FULL = dict(requests=32, slots=8, templates=2, max_tail=8,
 PAGED_SMOKE = dict(requests=16, slots=8, templates=2, max_tail=8,
                    max_new_lo=3, max_new_hi=7)
 
+# cost-aware eviction sweep: an UNDERSIZED cache (4 sets x 8 = 32 entries)
+# under deep shared templates, so eviction pressure is constant and the
+# victim choice matters — uniform LRU evicts whatever sits in lane A-1,
+# the cost policy spends the same slot on the cheapest re-prefill (leaf
+# chunks) and keeps the expensive shallow chunks resident
+COST_PREFIX_CHUNKS = 4       # 64 shared tokens per template
+COST_NUM_SETS = 2            # 16 entries vs 24+ live template chunks
+COST_FULL = dict(requests=32, slots=4, templates=6, max_tail=8,
+                 max_new_lo=3, max_new_hi=8, cycle=True)
+COST_SMOKE = dict(requests=20, slots=4, templates=6, max_tail=8,
+                  max_new_lo=3, max_new_hi=7, cycle=True)
+
 LAUNCHES_PER_TOKEN_BUDGET = 1.05
 TICKS_BUDGET_FACTOR = 1.1
 RESIDENT_RATIO_BUDGET = 0.5
+REPREFILL_RATIO_BUDGET = 0.9   # cost policy must cut re-prefill FLOPs >=10%
+GOODPUT_FACTOR = 1.05          # ...without slowing the drain beyond 5%
 
 
 def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
@@ -93,8 +119,15 @@ def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
     templates = [rng.integers(1, cfg.vocab_size,
                               CHUNK * prefix_chunks).astype(np.int32)
                  for _ in range(n_templates)]
-    picks = zipfian(n_templates, shape["requests"], alpha=ZIPF_ALPHA,
-                    seed=43) - 1
+    if shape.get("cycle"):
+        # round-robin template revisits — the classic LRU-adversarial scan
+        # (every revisit arrives after maximal reuse distance), used by the
+        # cost sweep so the victim CHOICE, not popularity skew, decides
+        # which chunks survive the undersized cache
+        picks = np.arange(shape["requests"], dtype=np.int64) % n_templates
+    else:
+        picks = zipfian(n_templates, shape["requests"], alpha=ZIPF_ALPHA,
+                        seed=43) - 1
     out = []
     for i in range(shape["requests"]):
         tail = rng.integers(1, cfg.vocab_size,
@@ -109,7 +142,8 @@ def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
 
 
 def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
-           prefix_chunks: int = PREFIX_CHUNKS) -> dict:
+           prefix_chunks: int = PREFIX_CHUNKS, cost_aware: bool = False,
+           num_sets: int = 64) -> dict:
     import jax
     from repro.configs import get_config
     from repro.models.model import make_model
@@ -121,7 +155,8 @@ def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     pool = PagedKVPool(cfg, n_pages=96, page_tokens=CHUNK)
-    pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=CHUNK)
+    pc = PrefixCache(num_sets=num_sets, m=2, p=4, chunk_tokens=CHUNK,
+                     cost_aware=cost_aware)
     eng = ServeEngine(model, params, slots=shape["slots"], max_len=128,
                       prefix_cache=pc, pool=pool, decode_mode=mode,
                       kv_mode=kv_mode)
@@ -145,6 +180,9 @@ def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
         "gather_calls": st["gather_calls"],
         "resident_kv_tokens_peak": st["resident_kv_tokens_peak"],
         "resident_kv_bytes_peak": st["resident_kv_bytes_peak"],
+        "reprefill_flops": st["reprefill_flops"],
+        "evicted_cost": st["evicted_cost"],
+        "goodput": round(st["decode_tokens"] / max(1, ticks), 4),
         "seconds": round(dt, 3),
         "tokens": {str(r.rid): r.out_tokens for r in eng.finished},
     }
@@ -180,17 +218,40 @@ def _sweep_paged(shape: dict) -> dict:
     return out
 
 
+def _sweep_cost(shape: dict) -> dict:
+    """Uniform vs cost-aware eviction on the undersized-cache trace: the
+    tokens must be identical (the policy changes WHAT prefill recomputes,
+    never what the model emits), and the cost policy must cut re-prefill
+    FLOPs without hurting drain goodput."""
+    out = {}
+    for pol, aware in (("uniform", False), ("cost", True)):
+        out[pol] = _drive("inflight", shape,
+                          prefix_chunks=COST_PREFIX_CHUNKS,
+                          cost_aware=aware, num_sets=COST_NUM_SETS)
+    out["tokens_match"] = out["uniform"]["tokens"] == out["cost"]["tokens"]
+    out["reprefill_ratio"] = round(
+        out["cost"]["reprefill_flops"]
+        / max(1, out["uniform"]["reprefill_flops"]), 4)
+    for pol in ("uniform", "cost"):
+        del out[pol]["tokens"]
+    return out
+
+
 def run(force: bool = False, smoke: bool = False):
     key = "smoke" if smoke else "entries"
     shape = SMOKE if smoke else FULL
     pkey = "paged_smoke" if smoke else "paged"
     pshape = PAGED_SMOKE if smoke else PAGED_FULL
+    ckey = "cost_smoke" if smoke else "cost"
+    cshape = COST_SMOKE if smoke else COST_FULL
 
     res = cached(f"serve_bench_{key}", lambda: _sweep(shape), force)
     _emit_bench_json(res, key)
     pres = cached(f"serve_bench_{pkey}", lambda: _sweep_paged(pshape), force)
     _emit_bench_json(pres, pkey)
-    return dict(res, paged=pres)
+    cres = cached(f"serve_bench_{ckey}", lambda: _sweep_cost(cshape), force)
+    _emit_bench_json(cres, ckey)
+    return dict(res, paged=pres, cost=cres)
 
 
 def _emit_bench_json(res: dict, key: str) -> None:
@@ -247,6 +308,21 @@ def check(res: dict, committed_doc: dict) -> list[str]:
         problems.append(
             f"paged/contiguous resident KV bytes ratio {ratio} > "
             f"{RESIDENT_RATIO_BUDGET}")
+    cost = res.get("cost", {})
+    if not cost.get("tokens_match", False):
+        problems.append("cost-policy tokens diverge from the uniform "
+                        "oracle")
+    cratio = cost.get("reprefill_ratio", 99.0)
+    if cratio > REPREFILL_RATIO_BUDGET:
+        problems.append(
+            f"cost/uniform reprefill_flops ratio {cratio} > "
+            f"{REPREFILL_RATIO_BUDGET}")
+    cu, cc = cost.get("uniform", {}), cost.get("cost", {})
+    budget = cu.get("ticks_to_drain", 0) * GOODPUT_FACTOR + 1e-9
+    if cc.get("ticks_to_drain", 10**9) > budget:
+        problems.append(
+            f"cost-policy ticks_to_drain {cc.get('ticks_to_drain')} > "
+            f"uniform {cu.get('ticks_to_drain')} * {GOODPUT_FACTOR}")
     return problems
 
 
@@ -286,6 +362,24 @@ def report(res: dict) -> list[str]:
             f"  resident_ratio={paged.get('resident_ratio')} "
             f"(budget {RESIDENT_RATIO_BUDGET}) "
             f"tokens_match={paged.get('tokens_match')}")
+    cost = res.get("cost")
+    if cost:
+        lines.append("uniform vs cost-aware eviction (undersized cache, "
+                     f"{CHUNK * COST_PREFIX_CHUNKS}-token templates)")
+        for pol in ("uniform", "cost"):
+            r = cost.get(pol)
+            if not r:
+                continue
+            lines.append(
+                f"  {pol:10s} reprefill_flops={r['reprefill_flops']:10d} "
+                f"evicted_cost={r['evicted_cost']:6d} "
+                f"hit_ratio={r['hit_ratio']:.3f} "
+                f"goodput={r['goodput']:.2f} tok/tick "
+                f"ticks={r['ticks_to_drain']:4d}")
+        lines.append(
+            f"  reprefill_ratio={cost.get('reprefill_ratio')} "
+            f"(budget {REPREFILL_RATIO_BUDGET}) "
+            f"tokens_match={cost.get('tokens_match')}")
     return lines
 
 
@@ -297,7 +391,21 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="recompute the smoke block and fail on launch or "
                          "ticks regressions vs BENCH_serve.json")
+    ap.add_argument("--policy", choices=("uniform", "cost"), default=None,
+                    help="drive ONE eviction policy on the cost-sweep "
+                         "trace and print its metrics (ad-hoc A/B half; "
+                         "no cache, no JSON merge)")
     args = ap.parse_args()
+    if args.policy is not None:
+        shape = COST_SMOKE if args.smoke else COST_FULL
+        r = _drive("inflight", shape, prefix_chunks=COST_PREFIX_CHUNKS,
+                   cost_aware=(args.policy == "cost"),
+                   num_sets=COST_NUM_SETS)
+        del r["tokens"]
+        print(f"policy={args.policy}")
+        for k2, v2 in r.items():
+            print(f"  {k2}={v2}")
+        return
     committed_doc = (json.loads(BENCH_JSON.read_text())
                      if BENCH_JSON.exists() else {})
     res = run(force=args.force or args.check, smoke=args.smoke or args.check)

@@ -73,33 +73,40 @@ class MultiStepLRUCache:
     # -- batched high-throughput path ----------------------------------------
     def access(self, keys: np.ndarray, vals: np.ndarray | None = None,
                ops: np.ndarray | None = None,
-               chain_ids: np.ndarray | None = None):
+               chain_ids: np.ndarray | None = None,
+               costs: np.ndarray | None = None):
         """Batched mixed-op call. keys (B,) or (B, KP); vals (B, V); ops (B,)
         per-query opcodes (OP_* in this module; None = all OP_ACCESS);
         chain_ids (B,) segment ids for CHAIN_GET/CHAIN_PUT rows (the fused
-        serving tick — see the chain contract in engine.py)."""
+        serving tick — see the chain contract in engine.py); costs (B,)
+        per-query insert costs (needs ``cfg.cost_planes`` — see the cost
+        plane contract in engine.py)."""
         keys = self._canon_keys(keys)
         if vals is None:
             vals = np.zeros((keys.shape[0], self.cfg.value_planes), np.int32)
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
         self.table, res = self._batched(self.table, keys,
                                         jnp.asarray(vals, jnp.int32), ops,
-                                        chain_ids)
+                                        chain_ids, costs)
         return res
 
     # -- exact sequential path -------------------------------------------------
     def access_seq(self, keys: np.ndarray, vals: np.ndarray | None = None,
-                   ops=None, chain_ids=None):
+                   ops=None, chain_ids=None, costs=None):
         keys = self._canon_keys(keys)
         n = keys.shape[0]
         if vals is None:
             vals = np.zeros((n, self.cfg.value_planes), np.int32)
         if ops is None:
             ops = np.full((n,), OP_ACCESS, np.int32)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
         self.table, out = self._seq(
             self.table, keys, jnp.asarray(vals, jnp.int32),
-            jnp.asarray(ops, jnp.int32), chain_ids)
+            jnp.asarray(ops, jnp.int32), chain_ids, costs)
         return out
 
     def _canon_keys(self, keys):

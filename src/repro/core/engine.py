@@ -80,6 +80,41 @@ sentinel whenever nothing was evicted; queries dropped by a ``max_rounds``
 cap (``served`` False) report all-zero evicted fields — test
 ``evicted_valid``, which is authoritative in both cases.
 
+Cost plane and victim choice
+----------------------------
+With ``cfg.cost_planes = 1`` the table carries one extra int32 plane — the
+item's re-prefill *cost* — and every engine accepts one extra per-query
+operand:
+
+    operand   shape  dtype  semantics
+    --------  -----  -----  ------------------------------------------------
+    costs     (B,)   int32  cost stored with the item if this query inserts
+                            (OP_ACCESS / live CHAIN_PUT miss).  Ignored by
+                            every other op; ``None`` inserts cost 0.
+
+The cost plane rides the same rotate_insert as the key/value planes (a hit
+promotes the item with its stored cost; nothing is recomputed in-table), so
+the SIMD shuffle-only structure and the paper's zero-LRU-metadata property
+are preserved — recency is still pure lane order.  The ONLY behavioural
+change is the full-set victim choice in the put path: instead of blindly
+evicting lane A-1, the engines evict the minimum-cost lane of the
+eviction-candidate segment — the last vector, lanes [(M-1)*P, A-1] (the
+whole set under ``set_lru``).  Tie-break rule: among equal-minimum lanes
+the DEEPEST (highest) lane wins, which yields two guarantees relied on by
+the differential tests:
+
+* **Uniform-cost degeneration**: an all-equal cost plane (including the
+  all-zero plane produced by ``costs=None``) picks exactly lane A-1 — the
+  hit/pos/value/evicted streams are bit-identical to a ``cost_planes=0``
+  run of the same queries, and the tables agree on every key/value plane.
+* ``cfg.cost_planes = 0`` (the default) compiles literally the pre-cost
+  code: no extra plane, no extra operand, no victim scan.
+
+Eviction-candidate scope note: restricting the scan to the last vector (not
+the whole set) keeps the paper's promotion ladder intact — an expensive item
+only survives eviction pressure while its recency keeps it out of the last
+vector, bounding how long a stale-but-expensive item can squat.
+
 Sheds and canonical ordering (the sharded engine)
 -------------------------------------------------
 The sharded engine (core/sharded.py) adds two refinements to this
@@ -200,47 +235,53 @@ def make_sequential_engine(cfg: MSLRUConfig, with_ops: bool = False):
     """
     a, c = cfg.assoc, cfg.planes
 
-    def one(table, qkey, qval, op, live):
+    def one(table, qkey, qval, op, live, cost):
         sid = set_index_for(cfg, qkey[None])[0]
         rows = jax.lax.dynamic_slice(table, (sid, 0, 0), (1, a, c))
         # row_apply is the single op-dispatch used by every engine, so the
         # sequential oracle and the batched paths cannot drift per-op.
         new_rows, res = row_apply(cfg, rows, qkey[None], qval[None], op[None],
-                                  chain_live=live[None])
+                                  chain_live=live[None], costs=cost[None])
         table = jax.lax.dynamic_update_slice(table, new_rows, (sid, 0, 0))
         return table, (res.hit[0], res.pos[0], res.value[0],
                        res.evicted_key[0], res.evicted_val[0],
                        res.evicted_valid[0])
 
-    def scan(table, qkeys, qvals, opcodes, live):
+    def scan(table, qkeys, qvals, opcodes, live, costs):
+        if costs is None:
+            costs = jnp.zeros(qkeys.shape[0], jnp.int32)
+
         def step(tbl, xs):
-            k, v, op, lv = xs
-            return one(tbl, k, v, op, lv)
-        table, outs = jax.lax.scan(step, table, (qkeys, qvals, opcodes, live))
+            k, v, op, lv, cc = xs
+            return one(tbl, k, v, op, lv, cc)
+        table, outs = jax.lax.scan(
+            step, table, (qkeys, qvals, opcodes, live, costs))
         return table, SeqOutputs(*outs)
 
     if with_ops:
         @jax.jit
-        def run_ops(table, qkeys, qvals, opcodes):
+        def run_ops(table, qkeys, qvals, opcodes, costs):
             live = jnp.ones(opcodes.shape, bool)
-            return scan(table, qkeys, qvals, opcodes, live)
+            return scan(table, qkeys, qvals, opcodes, live, costs)
 
         @jax.jit
-        def run_chain(table, qkeys, qvals, opcodes, chain_ids):
+        def run_chain(table, qkeys, qvals, opcodes, chain_ids, costs):
             live = chain_live_mask(cfg, table, qkeys, opcodes, chain_ids)
-            return scan(table, qkeys, qvals, opcodes, live)
+            return scan(table, qkeys, qvals, opcodes, live, costs)
 
-        def run(table, qkeys, qvals, opcodes, chain_ids=None):
+        def run(table, qkeys, qvals, opcodes, chain_ids=None, costs=None):
+            if costs is not None:
+                costs = jnp.asarray(costs, jnp.int32)
             if chain_ids is not None:
                 return run_chain(table, qkeys, qvals, opcodes,
-                                 jnp.asarray(chain_ids, jnp.int32))
-            return run_ops(table, qkeys, qvals, opcodes)
+                                 jnp.asarray(chain_ids, jnp.int32), costs)
+            return run_ops(table, qkeys, qvals, opcodes, costs)
     else:
         @jax.jit
         def run(table, qkeys, qvals):
             ones = jnp.ones(qkeys.shape[0], bool)
             ops0 = jnp.full(qkeys.shape[0], OP_ACCESS, jnp.int32)
-            return scan(table, qkeys, qvals, ops0, ones)
+            return scan(table, qkeys, qvals, ops0, ones, None)
 
     return run
 
@@ -331,7 +372,7 @@ def chain_live_mask(cfg: MSLRUConfig, table, qkeys, ops, chain_ids,
 
 def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                           max_rounds: int | None = None, row_op=None,
-                          ops=None, chain_live=None):
+                          ops=None, chain_live=None, costs=None):
     """Exact multi-query update: serialize same-set queries across rounds.
 
     table: (S, A, C); gsid: (B,) set id per query (entries with ``valid`` False
@@ -344,19 +385,22 @@ def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     ``max_rounds`` bounds latency; excess queries are dropped (reported via
     res.hit=False and the served mask = offset < rounds).
 
-    ``row_op(rows, qkeys, qvals, ops, chain_live) -> (new_rows,
+    ``row_op(rows, qkeys, qvals, ops, chain_live, costs) -> (new_rows,
     AccessResult)`` is the batch row transition; defaults to ``row_apply``
     (``row_access`` when ``ops`` is None — the ACCESS-only fast path
     compiles no op selects).  kernels/ops.py passes the Pallas kernel here
-    so both backends share this serialization loop.
+    so both backends share this serialization loop.  ``costs`` (B,) is the
+    optional per-query insert-cost operand (see "Cost plane and victim
+    choice" in the module docstring).
     """
     if row_op is None:
         if ops is None:
-            def row_op(rows, qk, qv, _ops, _live):
-                return row_access(cfg, rows, qk, qv)
+            def row_op(rows, qk, qv, _ops, _live, qc):
+                return row_access(cfg, rows, qk, qv, costs=qc)
         else:
-            def row_op(rows, qk, qv, row_ops, live):
-                return row_apply(cfg, rows, qk, qv, row_ops, chain_live=live)
+            def row_op(rows, qk, qv, row_ops, live, qc):
+                return row_apply(cfg, rows, qk, qv, row_ops, chain_live=live,
+                                 costs=qc)
     s = cfg.num_sets if table.shape[0] == cfg.num_sets else table.shape[0]
     b = gsid.shape[0]
     gsid = jnp.where(valid, gsid, s)                  # sentinel group
@@ -376,7 +420,7 @@ def batched_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     def body(carry):
         r, padded, acc = carry
         rows = jnp.take(padded, gsid, axis=0)
-        new_rows, res = row_op(rows, qkeys, qvals, ops, chain_live)
+        new_rows, res = row_op(rows, qkeys, qvals, ops, chain_live, costs)
         sel = (offset == r) & valid
         scatter_id = jnp.where(sel, gsid, s)          # losers pile onto dummy row
         padded = padded.at[scatter_id].set(new_rows)
@@ -407,8 +451,8 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
                          use_kernel: bool = False, block_b: int = 2048,
                          interpret: bool | None = None):
     """Bind the chosen conflict scheme to ``update(table, gsid, valid,
-    qkeys, qvals, ops=None, chain_live=None) -> (table, AccessResult,
-    served)``.
+    qkeys, qvals, ops=None, chain_live=None, costs=None) -> (table,
+    AccessResult, served)``.
 
     The single dispatch point for the ``engine`` switch — the batched and
     sharded engines both resolve through here so the option set, the
@@ -419,20 +463,20 @@ def make_conflict_update(cfg: MSLRUConfig, engine: str = "rounds",
         from repro.kernels.ops import onepass_update  # deferred: kernels -> core
 
         def update(table, gsid, valid, qkeys, qvals, ops=None,
-                   chain_live=None):
+                   chain_live=None, costs=None):
             return onepass_update(cfg, table, gsid, valid, qkeys, qvals,
                                   max_rounds, use_kernel, block_b, interpret,
-                                  ops=ops, chain_live=chain_live)
+                                  ops=ops, chain_live=chain_live, costs=costs)
     else:
         assert not use_kernel, (
             "engine='rounds' here is XLA-only; the kernel-backed rounds path "
             "lives in repro.kernels.ops.make_kernel_batched_engine")
 
         def update(table, gsid, valid, qkeys, qvals, ops=None,
-                   chain_live=None):
+                   chain_live=None, costs=None):
             return batched_rounds_update(cfg, table, gsid, valid, qkeys,
                                          qvals, max_rounds, ops=ops,
-                                         chain_live=chain_live)
+                                         chain_live=chain_live, costs=costs)
     return update
 
 
@@ -456,31 +500,35 @@ def make_batched_engine(cfg: MSLRUConfig, max_rounds: int | None = None,
                                   block_b, interpret)
 
     @jax.jit
-    def run_ops(table, qkeys, qvals, ops):
+    def run_ops(table, qkeys, qvals, ops, costs):
         # ops=None is a distinct (static) pytree structure: the ACCESS-only
-        # specialization compiles with no opcode operand at all.
+        # specialization compiles with no opcode operand at all (likewise
+        # costs=None compiles no cost operand).
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
-        table, res, _served = update(table, sids, valid, qkeys, qvals, ops)
+        table, res, _served = update(table, sids, valid, qkeys, qvals, ops,
+                                     costs=costs)
         return table, res
 
     @jax.jit
-    def run_chain(table, qkeys, qvals, ops, chain_ids):
+    def run_chain(table, qkeys, qvals, ops, chain_ids, costs):
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
         live = chain_live_mask(cfg, table, qkeys, ops, chain_ids)
         table, res, _served = update(table, sids, valid, qkeys, qvals, ops,
-                                     chain_live=live)
+                                     chain_live=live, costs=costs)
         return table, res
 
-    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+    def run(table, qkeys, qvals, ops=None, chain_ids=None, costs=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
         if chain_ids is not None:
             assert ops is not None, "chain_ids requires an ops vector"
             return run_chain(table, qkeys, qvals, ops,
-                             jnp.asarray(chain_ids, jnp.int32))
-        return run_ops(table, qkeys, qvals, ops)
+                             jnp.asarray(chain_ids, jnp.int32), costs)
+        return run_ops(table, qkeys, qvals, ops, costs)
 
     return run
 
@@ -491,24 +539,27 @@ def make_chunked_stream_runner(cfg: MSLRUConfig, batch: int,
     run_batch = make_batched_engine(cfg, engine=engine, **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_stream(table, qkeys, qvals, ops):
+    def run_stream(table, qkeys, qvals, ops, costs):
         # ops=None (a static pytree structure) scans the ACCESS-only path
         n = qkeys.shape[0] // batch * batch
         qk = qkeys[:n].reshape(-1, batch, qkeys.shape[-1])
         qv = qvals[:n].reshape(-1, batch, qvals.shape[-1])
         qo = None if ops is None else ops[:n].reshape(-1, batch)
+        qc = None if costs is None else costs[:n].reshape(-1, batch)
 
         def step(tbl, xs):
-            k, v, o = xs
-            tbl, res = run_batch(tbl, k, v, o)
+            k, v, o, cc = xs
+            tbl, res = run_batch(tbl, k, v, o, costs=cc)
             return tbl, jnp.sum(res.hit)
 
-        table, hits = jax.lax.scan(step, table, (qk, qv, qo))
+        table, hits = jax.lax.scan(step, table, (qk, qv, qo, qc))
         return table, jnp.sum(hits)
 
-    def run(table, qkeys, qvals, ops=None):
+    def run(table, qkeys, qvals, ops=None, costs=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
-        return run_stream(table, qkeys, qvals, ops)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
+        return run_stream(table, qkeys, qvals, ops, costs)
 
     return run

@@ -8,10 +8,12 @@ One int32 array ``table`` of shape (S, A, C):
   * A = M*P lanes per set, ordered hot->cold: lane a = m*P + p where m is the
     vector index (0 = hottest vector) and p the in-vector position (0 = MRU).
     The set's global LRU victim is always lane A-1 — eviction needs no scan.
-  * C = key_planes + value_planes "planes": plane 0..KP-1 hold the key
-    (KP=1 for 32-bit keys — the TPU-native lane width — or KP=2 for the
-    paper's 64-bit keys as (hi, lo) int32 planes), the rest hold the value
-    (e.g. 2 planes = a 64-bit pointer, or 1 plane = a KV-page index).
+  * C = key_planes + value_planes + cost_planes "planes": plane 0..KP-1 hold
+    the key (KP=1 for 32-bit keys — the TPU-native lane width — or KP=2 for
+    the paper's 64-bit keys as (hi, lo) int32 planes), the next hold the
+    value (e.g. 2 planes = a 64-bit pointer, or 1 plane = a KV-page index),
+    and an optional final plane holds the item's re-prefill *cost* — see
+    "Cost plane and victim choice" in core/engine.py.
 
 Because recency/frequency are encoded purely in lane *order*, there is no
 per-item LRU metadata — the paper's core property.  Every mutation is one
@@ -45,8 +47,10 @@ __all__ = [
     "row_get",
     "row_put",
     "row_access",
+    "row_access_ev",
     "row_delete",
     "row_apply",
+    "row_apply_ev",
     "set_index_for",
 ]
 
@@ -85,6 +89,7 @@ class MSLRUConfig:
     p: int = 4                  # lanes per vector (P); AVX2/64-bit analogue
     key_planes: int = 1         # 1 => 32-bit keys, 2 => 64-bit (hi,lo)
     value_planes: int = 2       # 2 => 64-bit values (pointers)
+    cost_planes: int = 0        # 1 => cost-aware victim choice (one int32 plane)
     policy: str = POLICY_MULTISTEP
 
     def __post_init__(self):
@@ -93,6 +98,7 @@ class MSLRUConfig:
         assert self.m >= 1 and self.p >= 1
         assert self.key_planes in (1, 2)
         assert self.value_planes >= 0
+        assert self.cost_planes in (0, 1)
         assert self.policy in (POLICY_MULTISTEP, POLICY_SET_LRU)
 
     @property
@@ -101,7 +107,7 @@ class MSLRUConfig:
 
     @property
     def planes(self) -> int:  # C
-        return self.key_planes + self.value_planes
+        return self.key_planes + self.value_planes + self.cost_planes
 
     @property
     def capacity(self) -> int:
@@ -186,7 +192,7 @@ def row_lookup(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
     item = jnp.take_along_axis(
         rows, jnp.broadcast_to(pos_c[..., None, None], rows.shape[:-2] + (1, rows.shape[-1])), axis=-2
     )[..., 0, :]
-    return hit, item[..., cfg.key_planes:], pos
+    return hit, item[..., cfg.key_planes:cfg.key_planes + cfg.value_planes], pos
 
 
 def row_get(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
@@ -206,50 +212,91 @@ def row_get(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
     else:
         lo = get_update_lo(pos_c, cfg.p)
     new_rows, _ = _rotate_insert_planes(rows, lo, pos_c, item)
-    return new_rows, hit, item[..., cfg.key_planes:], pos
+    return new_rows, hit, item[..., cfg.key_planes:cfg.key_planes + cfg.value_planes], pos
 
 
-def row_put(cfg: MSLRUConfig, rows: jnp.ndarray, new_key: jnp.ndarray, new_val: jnp.ndarray):
-    """put: insert a (known-absent) item; fill deepest hole or evict set-LRU.
+def _empty_ev_planes(cfg: MSLRUConfig, like: jnp.ndarray) -> jnp.ndarray:
+    """Sentinel eviction record: key planes EMPTY_KEY, all other planes 0."""
+    col = jax.lax.broadcasted_iota(jnp.int32, like.shape, like.ndim - 1)
+    return jnp.where(col < cfg.key_planes, EMPTY_KEY, 0)
 
-    new_key (B, KP), new_val (B, V).  Returns
-    (new_rows, evicted_key, evicted_val, evicted_valid).
+
+def row_put(cfg: MSLRUConfig, rows: jnp.ndarray, new_key: jnp.ndarray,
+            new_val: jnp.ndarray, new_cost: jnp.ndarray | None = None):
+    """put: insert a (known-absent) item; fill deepest hole or evict.
+
+    new_key (B, KP), new_val (B, V), new_cost (B,) int32 (ignored unless
+    cfg.cost_planes; None inserts cost 0).  The victim for a full set is lane
+    A-1 (the paper's zero-scan global LRU) unless the config carries a cost
+    plane, in which case it is the cheapest lane of the eviction-candidate
+    segment — the last vector (the whole set under set_lru) — with ties
+    broken toward the deepest lane, so a uniform cost plane degenerates to
+    exactly lane A-1.  Returns (new_rows, displaced (B, C), evicted_valid).
     """
     e = _find_deepest_empty_planes(rows)
     a = cfg.assoc
-    pos_ins = jnp.where(e >= 0, e, a - 1)
+    if cfg.cost_planes:
+        lane = _lane(rows)
+        ccol = rows[..., cfg.key_planes + cfg.value_planes]
+        seg_lo = 0 if cfg.policy == POLICY_SET_LRU else (cfg.m - 1) * cfg.p
+        cand = jnp.where(lane >= seg_lo, ccol, jnp.int32(2**31 - 1))
+        cmin = jnp.min(cand, axis=-1)
+        victim = jnp.max(jnp.where(cand == cmin[..., None], lane, -1), axis=-1)
+    else:
+        victim = jnp.full_like(e, a - 1)
+    pos_ins = jnp.where(e >= 0, e, victim)
     if cfg.policy == POLICY_SET_LRU:
         lo = jnp.zeros_like(pos_ins)
     else:
         # MRU slot of the vector holding the insertion lane; for a full set
-        # pos_ins = A-1 so lo = (M-1)*P — the last vector, per the paper.
+        # the victim lies in the last vector so lo = (M-1)*P, per the paper.
         lo = (pos_ins // cfg.p) * cfg.p
-    item = jnp.concatenate([new_key, new_val], axis=-1) if cfg.value_planes else new_key
+    parts = [new_key]
+    if cfg.value_planes:
+        parts.append(new_val)
+    if cfg.cost_planes:
+        qc = jnp.zeros(new_key.shape[:-1], jnp.int32) if new_cost is None else new_cost
+        parts.append(qc[..., None].astype(jnp.int32))
+    item = jnp.concatenate(parts, axis=-1) if len(parts) > 1 else new_key
     new_rows, displaced = _rotate_insert_planes(rows, lo, pos_ins, item)
-    ev_key = displaced[..., : cfg.key_planes]
-    ev_val = displaced[..., cfg.key_planes:]
     ev_valid = displaced[..., 0] != EMPTY_KEY
-    return new_rows, ev_key, ev_val, ev_valid
+    return new_rows, displaced, ev_valid
 
 
-def row_access(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray):
+def row_access_ev(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
+                  qvals: jnp.ndarray, costs: jnp.ndarray | None = None):
+    """row_access that also returns the full (B, C) eviction record.
+
+    ``ev`` carries the displaced planes of an evicting put and the EMPTY
+    sentinel row everywhere else — the same contract as the Pallas kernels'
+    C-wide ev output, so ref.msl_access_ref can stay bit-comparable to the
+    kernels when a cost plane widens C past key+value.
+    """
+    got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
+    put_rows, displaced, ev_ok = row_put(cfg, rows, qkeys, qvals, costs)
+    new_rows = jnp.where(hit[..., None, None], got_rows, put_rows)
+    ev_ok = ev_ok & ~hit
+    ev = jnp.where(hit[..., None], _empty_ev_planes(cfg, displaced), displaced)
+    kp, v = cfg.key_planes, cfg.value_planes
+    res = AccessResult(
+        hit=hit,
+        value=value,
+        pos=pos,
+        evicted_key=ev[..., :kp],
+        evicted_val=ev[..., kp:kp + v],
+        evicted_valid=ev_ok,
+    )
+    return new_rows, res, ev
+
+
+def row_access(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
+               qvals: jnp.ndarray, costs: jnp.ndarray | None = None):
     """The paper's benchmark op: get, and on miss put (key, val).
 
     Fuses row_get and row_put with per-row selection so a (B, A, C) batch with
     mixed hits/misses stays branch-free.  Returns (new_rows, AccessResult).
     """
-    got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
-    put_rows, ev_k, ev_v, ev_ok = row_put(cfg, rows, qkeys, qvals)
-    new_rows = jnp.where(hit[..., None, None], got_rows, put_rows)
-    ev_ok = ev_ok & ~hit
-    res = AccessResult(
-        hit=hit,
-        value=value,
-        pos=pos,
-        evicted_key=jnp.where(hit[..., None], EMPTY_KEY, ev_k),
-        evicted_val=jnp.where(hit[..., None], 0, ev_v),
-        evicted_valid=ev_ok,
-    )
+    new_rows, res, _ = row_access_ev(cfg, rows, qkeys, qvals, costs)
     return new_rows, res
 
 
@@ -264,15 +311,17 @@ def row_delete(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray):
     return new_rows, hit
 
 
-def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
-              qvals: jnp.ndarray, ops: jnp.ndarray,
-              chain_live: jnp.ndarray | None = None):
+def row_apply_ev(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
+                 qvals: jnp.ndarray, ops: jnp.ndarray,
+                 chain_live: jnp.ndarray | None = None,
+                 costs: jnp.ndarray | None = None):
     """Branch-free mixed-op transition: per-row opcode selects the op.
 
     rows (B, A, C); qkeys (B, KP); qvals (B, V); ops (B,) int32 OP_* codes;
     chain_live (B,) bool execute mask for CHAIN_GET/CHAIN_PUT rows (derived
     by engine.chain_exec_from_hits; ignored for the four plain ops; ``None``
-    treats every chain row as live — CHAIN_GET ≡ GET, CHAIN_PUT ≡ ACCESS).
+    treats every chain row as live — CHAIN_GET ≡ GET, CHAIN_PUT ≡ ACCESS);
+    costs (B,) int32 insert costs (only read when cfg.cost_planes).
     All transitions are computed once over the whole batch and the opcode
     picks per row — the batch stays SPMD regardless of the op mix.  Returns
     (new_rows, AccessResult) with one normalized result contract for every
@@ -284,6 +333,9 @@ def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
       * evicted_* fire only for an evicting ACCESS / live-CHAIN_PUT insert;
         everywhere else evicted_key carries the EMPTY_KEY sentinel (never
         query garbage).
+
+    Returns (new_rows, AccessResult, ev) where ev is the full (B, C)
+    eviction record (see row_access_ev).
     """
     is_acc = ops == OP_ACCESS
     is_del = ops == OP_DELETE
@@ -296,7 +348,7 @@ def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
     is_putop = is_acc | ((ops == OP_CHAIN_PUT) & ~dead)
 
     got_rows, hit, value, pos = row_get(cfg, rows, qkeys)
-    put_rows, ev_k, ev_v, ev_ok = row_put(cfg, rows, qkeys, qvals)
+    put_rows, displaced, ev_ok = row_put(cfg, rows, qkeys, qvals, costs)
     del_rows, _ = row_delete(cfg, rows, qkeys)
 
     # GET (and a live CHAIN_GET) falls back to got_rows, which is a provable
@@ -308,13 +360,23 @@ def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
 
     evicting = is_putop & ~hit
     zero_out = is_del | dead
+    ev = jnp.where(evicting[..., None], displaced, _empty_ev_planes(cfg, displaced))
+    kp, v = cfg.key_planes, cfg.value_planes
     res = AccessResult(
         hit=hit & ~dead,
         value=jnp.where(zero_out[..., None], 0, value),
         pos=jnp.where(zero_out, -1, pos),
-        evicted_key=jnp.where(evicting[..., None], ev_k,
-                              jnp.full_like(ev_k, EMPTY_KEY)),
-        evicted_val=jnp.where(evicting[..., None], ev_v, 0),
+        evicted_key=ev[..., :kp],
+        evicted_val=ev[..., kp:kp + v],
         evicted_valid=evicting & ev_ok,
     )
+    return new_rows, res, ev
+
+
+def row_apply(cfg: MSLRUConfig, rows: jnp.ndarray, qkeys: jnp.ndarray,
+              qvals: jnp.ndarray, ops: jnp.ndarray,
+              chain_live: jnp.ndarray | None = None,
+              costs: jnp.ndarray | None = None):
+    """row_apply_ev without the kernel-parity ev record (the engine API)."""
+    new_rows, res, _ = row_apply_ev(cfg, rows, qkeys, qvals, ops, chain_live, costs)
     return new_rows, res

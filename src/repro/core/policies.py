@@ -122,12 +122,17 @@ class MultiStepLRUOracle:
     """
 
     def __init__(self, num_sets: int, m: int = 2, p: int = 4,
-                 policy: str = "multistep", key_planes: int = 1):
+                 policy: str = "multistep", key_planes: int = 1,
+                 cost_planes: int = 0):
         assert num_sets & (num_sets - 1) == 0
         self.s, self.m, self.p = num_sets, m, p
         self.a = m * p
         self.policy = policy
         self.key_planes = key_planes
+        self.cost_planes = cost_planes
+        # Slots are (key, val, cost) triples; cost is carried (and read by
+        # the put victim choice) only when cost_planes, but always stored so
+        # rotations stay shape-oblivious like the plane rotation on device.
         self.sets = [[None] * self.a for _ in range(num_sets)]
 
     # -- internals ----------------------------------------------------------
@@ -172,25 +177,44 @@ class MultiStepLRUOracle:
         self._rotate_insert(row, lo, pos, row[pos])
         return True, val, pos
 
-    def put(self, key: int, val):
-        """Insert known-absent key. Returns (evicted_key, evicted_val) or None."""
+    def put(self, key: int, val, cost: int = 0):
+        """Insert known-absent key. Returns (evicted_key, evicted_val) or
+        None; with cost_planes the triple (key, val, cost) is returned.
+
+        Victim for a full set: lane A-1, unless cost_planes — then the
+        cheapest lane of the eviction-candidate segment (last vector; whole
+        set under set_lru), ties broken toward the deepest lane so uniform
+        costs degenerate to lane A-1 (mirrors multistep.row_put).
+        """
         row = self.sets[self.set_index(key)]
         e = -1
         for i in range(self.a - 1, -1, -1):  # deepest empty slot
             if row[i] is None:
                 e = i
                 break
-        pos_ins = e if e >= 0 else self.a - 1
+        if e >= 0:
+            pos_ins = e
+        elif self.cost_planes:
+            seg_lo = 0 if self.policy == "set_lru" else (self.m - 1) * self.p
+            best, pos_ins = None, self.a - 1
+            for i in range(seg_lo, self.a):
+                c = row[i][2]
+                if best is None or c <= best:  # <=: deepest lane wins ties
+                    best, pos_ins = c, i
+        else:
+            pos_ins = self.a - 1
         lo = 0 if self.policy == "set_lru" else (pos_ins // self.p) * self.p
-        displaced = self._rotate_insert(row, lo, pos_ins, (key, val))
-        return displaced  # None when a hole absorbed the insert
+        displaced = self._rotate_insert(row, lo, pos_ins, (key, val, cost))
+        if displaced is None:
+            return None  # a hole absorbed the insert
+        return displaced if self.cost_planes else displaced[:2]
 
-    def access(self, key: int, val=0):
+    def access(self, key: int, val=0, cost: int = 0):
         """get; on miss put. Returns (hit, pos, evicted)."""
         hit, _, pos = self.get(key)
         if hit:
             return True, pos, None
-        return False, -1, self.put(key, val)
+        return False, -1, self.put(key, val, cost)
 
     def delete(self, key: int) -> bool:
         row = self.sets[self.set_index(key)]
@@ -200,7 +224,7 @@ class MultiStepLRUOracle:
         row[pos] = None
         return True
 
-    def apply(self, op: int, key, val=0) -> dict:
+    def apply(self, op: int, key, val=0, cost: int = 0) -> dict:
         """Opcode dispatch with the engines' normalized result contract
         (see the table in core/engine.py): returns a dict with ``hit``,
         ``pos`` (-1 for DELETE and misses), ``value`` (None unless a
@@ -220,9 +244,9 @@ class MultiStepLRUOracle:
         if hit:
             return {"hit": True, "pos": pos, "value": value, "evicted": None}
         return {"hit": False, "pos": -1, "value": None,
-                "evicted": self.put(key, val)}
+                "evicted": self.put(key, val, cost)}
 
-    def apply_batch(self, ops, keys, vals=None, chain_ids=None):
+    def apply_batch(self, ops, keys, vals=None, chain_ids=None, costs=None):
         """Apply one batch with the engines' chain semantics (list of
         ``apply`` result dicts).  Chain rows probe membership against the
         *batch-start* table, the segmented longest-prefix scan derives each
@@ -232,6 +256,8 @@ class MultiStepLRUOracle:
         n = len(ops)
         if vals is None:
             vals = [0] * n
+        if costs is None:
+            costs = [0] * n
         if chain_ids is None:
             ex = [True] * n
         else:
@@ -245,10 +271,10 @@ class MultiStepLRUOracle:
                 out.append(self.apply(OP_GET, keys[i], vals[i])
                            if ex[i] else dict(miss))
             elif op == OP_CHAIN_PUT:
-                out.append(self.apply(OP_ACCESS, keys[i], vals[i])
+                out.append(self.apply(OP_ACCESS, keys[i], vals[i], costs[i])
                            if ex[i] else dict(miss))
             else:
-                out.append(self.apply(op, keys[i], vals[i]))
+                out.append(self.apply(op, keys[i], vals[i], costs[i]))
         return out
 
     def dump_keys(self) -> np.ndarray:

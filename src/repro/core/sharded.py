@@ -156,6 +156,12 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
            packed them into slabs.  ``None`` keeps the natural
            (source-device, slot) arrival order — already canonical when
            slabs are contiguous caller-order blocks.
+    costs: (Q,) optional int32 per-query insert costs (requires
+           ``cfg.cost_planes``); one extra int32 all_to_all plane riding
+           between the execute mask and the order rank.  Stored into the
+           cost plane when the query inserts and read back by the
+           cost-aware victim choice (see core/engine.py, "Cost plane and
+           victim choice").  ``None`` inserts cost 0.
     cap:   per-peer send-buffer depth (see ``per_peer_cap``): ``"full"``
            sizes it to the whole local slab (no shed possible), a float is
            a multiplier over the expected per-peer load ``Q/ndev²``, an int
@@ -224,7 +230,8 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
         # back[d, j] = result of the query I sent to shard d in slot j
         return back[didx, sidx]
 
-    def local_fn(table, qkeys, qvals, ops=None, chain_ids=None, order=None):
+    def local_fn(table, qkeys, qvals, ops=None, chain_ids=None, order=None,
+                 costs=None):
         # table (s_local, A, C); qkeys (q_local, KP); qvals (q_local, V)
         q_local = qkeys.shape[0]
         k = _k_for(q_local)
@@ -254,6 +261,7 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
 
         planes = ([qvals] + ([] if ops is None else [ops[:, None]])
                   + live_planes
+                  + ([] if costs is None else [costs[:, None]])
                   + ([] if order is None else [order[:, None]]))
         rq, didx, sidx, served = _route(qkeys, planes, k)
         r_keys, r_vals = rq[:, :kp], rq[:, kp: kp + v]
@@ -262,6 +270,10 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
                  else jnp.where(valid, rq[:, kp + v], OP_ACCESS))
         r_live = (jnp.where(valid, rq[:, kp + v + 1], 0)
                   if chain_mode else None)
+        cost_col = (kp + v + (0 if ops is None else 1)
+                    + (1 if chain_mode else 0))
+        r_cost = (None if costs is None
+                  else jnp.where(valid, rq[:, cost_col], 0))
 
         lsid = set_index_for(cfg, r_keys) % s_local
         if order is not None:
@@ -270,22 +282,23 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
             # chains resolve exactly as the sequential engine would no
             # matter which source device each row came from; unsort the
             # results so the route-back addressing stays (didx, sidx).
-            ord_col = (kp + v + (0 if ops is None else 1)
-                       + (1 if chain_mode else 0))
+            ord_col = cost_col + (0 if costs is None else 1)
             r_ord = jnp.where(valid, rq[:, ord_col], _INT32_MAX)
             perm = jnp.argsort(r_ord, stable=True)
             inv = jnp.argsort(perm)
             table, res, _served = update(
                 table, lsid[perm], valid[perm], r_keys[perm], r_vals[perm],
                 None if r_ops is None else r_ops[perm],
-                chain_live=None if r_live is None else r_live[perm])
+                chain_live=None if r_live is None else r_live[perm],
+                costs=None if r_cost is None else r_cost[perm])
             res = jax.tree.map(lambda a: a[inv], res)
         else:
             # exact local update (same conflict schemes as the batched
             # engine); arrival order (source-device, slot) is already the
             # caller's slab-major order
             table, res, _served = update(table, lsid, valid, r_keys, r_vals,
-                                         r_ops, chain_live=r_live)
+                                         r_ops, chain_live=r_live,
+                                         costs=r_cost)
 
         hit_back = (res.hit & valid).astype(jnp.int32)[:, None]
         val_back = (res.value if v else
@@ -311,38 +324,41 @@ def make_sharded_engine(cfg: MSLRUConfig, mesh, axis: str = "cache", cap: int | 
     out_specs = (P(axis, None, None), P(axis), P(axis, None), P(axis))
     out_specs_chain = out_specs + (P(axis, None), P(axis))
     base_in = (P(axis, None, None), P(axis, None), P(axis, None))
-    fn_noops = jax.jit(_shard_map(
-        local_fn, mesh=mesh, in_specs=base_in, out_specs=out_specs))
-    fn_ops = jax.jit(_shard_map(
-        local_fn, mesh=mesh, in_specs=base_in + (P(axis),),
-        out_specs=out_specs))
-    fn_chain = jax.jit(_shard_map(
-        local_fn, mesh=mesh, in_specs=base_in + (P(axis), P(axis)),
-        out_specs=out_specs_chain))
-    fn_ops_ord = jax.jit(_shard_map(
-        lambda t, qk, qv, o, r: local_fn(t, qk, qv, ops=o, order=r),
-        mesh=mesh, in_specs=base_in + (P(axis), P(axis)),
-        out_specs=out_specs))
-    fn_chain_ord = jax.jit(_shard_map(
-        lambda t, qk, qv, o, c, r: local_fn(t, qk, qv, ops=o, chain_ids=c,
-                                            order=r),
-        mesh=mesh, in_specs=base_in + (P(axis), P(axis), P(axis)),
-        out_specs=out_specs_chain))
+    # jit'd shard_map variants built lazily, keyed by which optional
+    # operands (ops / chain_ids / order / costs) are present — each key is
+    # its own compiled specialization with exactly those all_to_all planes
+    variants: dict = {}
 
-    def run(table, qkeys, qvals, ops=None, chain_ids=None, order=None):
+    def _variant(has_ops, has_chain, has_order, has_cost):
+        key = (has_ops, has_chain, has_order, has_cost)
+        fn = variants.get(key)
+        if fn is None:
+            names = (["ops"] if has_ops else []) \
+                + (["chain_ids"] if has_chain else []) \
+                + (["costs"] if has_cost else []) \
+                + (["order"] if has_order else [])
+
+            def wrapped(t, qk, qv, *extra, _names=tuple(names)):
+                return local_fn(t, qk, qv, **dict(zip(_names, extra)))
+
+            fn = jax.jit(_shard_map(
+                wrapped, mesh=mesh,
+                in_specs=base_in + (P(axis),) * len(names),
+                out_specs=out_specs_chain if has_chain else out_specs))
+            variants[key] = fn
+        return fn
+
+    def run(table, qkeys, qvals, ops=None, chain_ids=None, order=None,
+            costs=None):
         if order is not None:
             assert ops is not None, "order requires an ops vector"
-            order = jnp.asarray(order, jnp.int32)
         if chain_ids is not None:
             assert ops is not None, "chain_ids requires an ops vector"
-            args = (table, qkeys, qvals, jnp.asarray(ops, jnp.int32),
-                    jnp.asarray(chain_ids, jnp.int32))
-            return (fn_chain(*args) if order is None
-                    else fn_chain_ord(*args, order))
-        if ops is None:
-            return fn_noops(table, qkeys, qvals)
-        args = (table, qkeys, qvals, jnp.asarray(ops, jnp.int32))
-        return fn_ops(*args) if order is None else fn_ops_ord(*args, order)
+        fn = _variant(ops is not None, chain_ids is not None,
+                      order is not None, costs is not None)
+        extra = [jnp.asarray(x, jnp.int32)
+                 for x in (ops, chain_ids, costs, order) if x is not None]
+        return fn(table, qkeys, qvals, *extra)
 
     return run
 
@@ -439,7 +455,7 @@ class ShardedCacheClient:
         # full-cap engine for control-plane sweeps (drain); built lazily
         self._full_run = self._run if self.cap == "full" else None
 
-    def access(self, keys, vals=None, ops=None, chain_ids=None):
+    def access(self, keys, vals=None, ops=None, chain_ids=None, costs=None):
         keys = np.asarray(keys, np.int32).reshape(-1)
         n = keys.shape[0]
         v = self.cfg.value_planes
@@ -451,6 +467,8 @@ class ShardedCacheClient:
         ops = np.asarray(ops, np.int32)
         chain_ids = (np.zeros(n, np.int32) if chain_ids is None
                      else np.asarray(chain_ids, np.int32))
+        if costs is not None:
+            costs = np.asarray(costs, np.int32).reshape(-1)
 
         # deal whole chains (contiguous runs of one chain id among chain
         # rows; plain rows are singleton groups) round-robin onto slabs
@@ -578,6 +596,7 @@ class ShardedCacheClient:
         vv = np.zeros((bp, v), np.int32)
         oo = np.full(bp, OP_LOOKUP, np.int32)          # padding: no-op probe
         cc = np.zeros(bp, np.int32)
+        cst = None if costs is None else np.zeros(bp, np.int32)
         od = n + np.arange(bp, dtype=np.int32)         # padding ranks: last
         src = np.full(bp, -1, np.int64)                # row -> caller index
         for d, slab in enumerate(slabs):
@@ -590,15 +609,20 @@ class ShardedCacheClient:
                 oo[row] = ops[i]
                 od[row] = i                            # caller-order rank
                 src[row] = i
+                if cst is not None:
+                    cst[row] = costs[i]
                 if is_chain[i]:
                     cid = int(chain_ids[i])
                     local_first.setdefault(cid, r)
                     cc[row] = local_first[cid]
-        self.route_shape = (q, k_depth, 1 + v + 3)     # key+val+op+live+order
+        # key+val+op+live[+cost]+order
+        self.route_shape = (q, k_depth,
+                            1 + v + 3 + (0 if costs is None else 1))
 
         self.table, hit, val, served, ev_val, ev_ok = self._run(
             self.table, jnp.asarray(k[:, None]), jnp.asarray(vv),
-            jnp.asarray(oo), jnp.asarray(cc), order=jnp.asarray(od))
+            jnp.asarray(oo), jnp.asarray(cc), order=jnp.asarray(od),
+            costs=None if cst is None else jnp.asarray(cst))
         # the pre-check guarantees every admitted row fits its per-peer
         # buffer; a violation means the host mirror and device ranks drifted
         assert bool(np.asarray(served)[src >= 0].all()), "client overflow"
@@ -687,7 +711,7 @@ class ShardedCacheClient:
                 **self._engine_kwargs)
         return self._full_run
 
-    def _sweep_access(self, keys, vals, ops, chain_ids):
+    def _sweep_access(self, keys, vals, ops, chain_ids, costs=None):
         """access() with sheds disabled: full cap, degraded and injected
         faults bypassed.  Used by reshard()'s drain/re-insert sweeps."""
         run, cap = self._run, self.cap
@@ -695,7 +719,7 @@ class ShardedCacheClient:
         self._run, self.cap = self._full_engine(), "full"
         self.degraded, self._transient_fail = set(), None
         try:
-            return self.access(keys, vals, ops, chain_ids)
+            return self.access(keys, vals, ops, chain_ids, costs=costs)
         finally:
             self._run, self.cap = run, cap
             self.degraded, self._transient_fail = degraded, tf
@@ -790,15 +814,21 @@ class ShardedCacheClient:
                 return
             keys = np.concatenate(
                 [np.asarray(c, np.int32) for c in batch2])
-            vals = np.concatenate(
+            planes = np.concatenate(
                 [np.stack([live_map[k] for k in c]) for c in batch2])
+            # live_map rows pack [value planes | cost plane]; split so the
+            # re-insert restores each entry's stored cost on the new mesh
+            v = self.cfg.value_planes
+            vals = planes[:, :v]
+            costs = planes[:, v] if self.cfg.cost_planes else None
             ops = np.full(keys.size, OP_CHAIN_PUT, np.int32)
             cids = np.concatenate(
                 [np.full(len(c), j, np.int32)
                  for j, c in enumerate(batch2)])
             self.last_drain_stream.append(dict(
-                keys=keys, vals=vals, ops=ops, chain_ids=cids))
-            self._sweep_access(keys, vals, ops, cids)
+                keys=keys, vals=vals, ops=ops, chain_ids=cids,
+                costs=costs))
+            self._sweep_access(keys, vals, ops, cids, costs=costs)
             batch2.clear()
             rows = 0
 
@@ -823,7 +853,8 @@ def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",
     """Scan the sharded engine over a long stream (throughput/scaling bench).
 
     Parity with every other engine entry point: ``run(table, qkeys, qvals,
-    ops=None, chain_ids=None)`` — ``ops`` (N,) per-query opcodes and
+    ops=None, chain_ids=None, costs=None)`` — ``ops`` (N,) per-query
+    opcodes and
     ``chain_ids`` (N,) per-query chain segment ids (device-local per batch,
     requires ``ops``) reshape alongside the query stream, one (batch,)
     slice per scan step.  ``ops=None`` stays the separately-compiled
@@ -835,30 +866,35 @@ def make_sharded_stream_runner(cfg: MSLRUConfig, mesh, axis: str = "cache",
                               **engine_kwargs)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def run_stream(table, qkeys, qvals, ops, chain_ids):
-        # ops/chain_ids=None are distinct (static) pytree structures: the
-        # ACCESS-only and no-chain paths compile without those planes
+    def run_stream(table, qkeys, qvals, ops, chain_ids, costs):
+        # ops/chain_ids/costs=None are distinct (static) pytree structures:
+        # the ACCESS-only / no-chain / no-cost paths compile without those
+        # planes
         n = qkeys.shape[0] // batch * batch
         qk = qkeys[:n].reshape(-1, batch, qkeys.shape[-1])
         qv = qvals[:n].reshape(-1, batch, qvals.shape[-1])
         qo = None if ops is None else ops[:n].reshape(-1, batch)
         qc = None if chain_ids is None else chain_ids[:n].reshape(-1, batch)
+        qcost = None if costs is None else costs[:n].reshape(-1, batch)
 
         def step(tbl, xs):
-            k, q, o, c = xs
-            out = eng(tbl, k, q, o, c)
+            k, q, o, c, cst = xs
+            out = eng(tbl, k, q, o, c, costs=cst)
             tbl, hit, _val, served = out[:4]   # chain mode appends evicted
             return tbl, (jnp.sum(hit), jnp.sum(served))
 
-        table, (hits, served) = jax.lax.scan(step, table, (qk, qv, qo, qc))
+        table, (hits, served) = jax.lax.scan(
+            step, table, (qk, qv, qo, qc, qcost))
         return table, jnp.sum(hits), jnp.sum(served)
 
-    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+    def run(table, qkeys, qvals, ops=None, chain_ids=None, costs=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
         if chain_ids is not None:
             assert ops is not None, "chain_ids requires an ops vector"
             chain_ids = jnp.asarray(chain_ids, jnp.int32)
-        return run_stream(table, qkeys, qvals, ops, chain_ids)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
+        return run_stream(table, qkeys, qvals, ops, chain_ids, costs)
 
     return run

@@ -67,7 +67,8 @@ from repro.core.multistep import (MSLRUConfig, OP_ACCESS, OP_CHAIN_GET,
 __all__ = ["msl_access_kernel_call", "msl_onepass_kernel_call"]
 
 
-def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
+def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None,
+                qc=None):
     """Mixed-op transition on (BB, A, C) rows; pure lane select/reduce math.
 
     ``ops`` (BB,) int32 opcode per row (OP_ACCESS/OP_GET/OP_DELETE/
@@ -77,7 +78,11 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
     by the engine's segmented longest-prefix scan; ``None`` treats chain
     rows as live): a live CHAIN_GET runs the GET path, a live CHAIN_PUT
     the ACCESS path, and a dead chain row passes its row through and
-    reports a plain miss.  Returns (new_rows, hit (BB,) bool, pos (BB,)
+    reports a plain miss.  ``qc`` (BB,) int32 insert cost per row (only
+    read when cfg.cost_planes; ``None`` inserts cost 0) — with a cost
+    plane the full-set victim is the cheapest lane of the last vector
+    instead of blind lane A-1 (ties to the deepest lane; see
+    core.multistep.row_put).  Returns (new_rows, hit (BB,) bool, pos (BB,)
     int32, val (BB, C), ev (BB, C) with key plane 0 == EMPTY_KEY when
     nothing was evicted); pos/val/ev follow the normalized per-op contract
     of ``core.multistep.row_apply`` (DELETE: pos = -1, val = 0; only an
@@ -108,9 +113,18 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
     hi_get = pos_c
 
     # --- put path: deepest empty slot, else evict the set's LRU tail ------
+    # (cheapest last-vector lane instead, when a cost plane is configured)
     empty = rows[..., 0] == EMPTY_KEY
     e = jnp.max(jnp.where(empty, lane, -1), axis=1)
-    pos_ins = jnp.where(e >= 0, e, a - 1)
+    if cfg.cost_planes:
+        ccol = rows[..., kp + v]
+        seg_lo = 0 if cfg.policy == "set_lru" else (cfg.m - 1) * p
+        cand = jnp.where(lane >= seg_lo, ccol, jnp.int32(2**31 - 1))
+        cmin = jnp.min(cand, axis=1)
+        victim = jnp.max(jnp.where(cand == cmin[:, None], lane, -1), axis=1)
+    else:
+        victim = a - 1
+    pos_ins = jnp.where(e >= 0, e, victim)
     lo_put = (pos_ins // p) * p
     if cfg.policy == "set_lru":
         lo_put = jnp.zeros_like(pos_ins)
@@ -134,7 +148,13 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
         use_put = is_putop & ~hit
     lo = jnp.where(use_put, lo_put, lo_get)
     hi = jnp.where(use_put, hi_put, hi_get)
-    new_item = jnp.concatenate([qk, qv], axis=-1) if v else qk      # (BB, C)
+    parts = [qk]
+    if v:
+        parts.append(qv)
+    if cfg.cost_planes:
+        qc_e = jnp.zeros((rows.shape[0],), jnp.int32) if qc is None else qc
+        parts.append(qc_e[:, None])
+    new_item = jnp.concatenate(parts, axis=-1) if len(parts) > 1 else qk
     item = jnp.where(use_put[:, None], new_item, at_pos)
 
     shifted = jnp.roll(rows, 1, axis=1)
@@ -147,10 +167,11 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
     # a hit "displaces" the item itself — normalize to the EMPTY sentinel so
     # callers can test ev[:, 0] != EMPTY_KEY (identical to the jnp oracle)
     displaced = jnp.sum(jnp.where((lane == hi[:, None])[..., None], rows, 0), axis=1)
+    extra_planes = v + cfg.cost_planes
     empty_ev = jnp.concatenate(
         [jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32),
-         jnp.zeros((rows.shape[0], v), jnp.int32)], axis=-1
-    ) if v else jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32)
+         jnp.zeros((rows.shape[0], extra_planes), jnp.int32)], axis=-1
+    ) if extra_planes else jnp.full((rows.shape[0], kp), EMPTY_KEY, jnp.int32)
 
     if ops is None:
         return out, hit, pos, at_pos, jnp.where(hit[:, None], empty_ev, displaced)
@@ -174,7 +195,7 @@ def _transition(cfg: MSLRUConfig, rows, qk, qv, ops=None, chain_live=None):
 
 
 def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served,
-                chain_live=None):
+                chain_live=None, qc=None):
     """fori_loop body resolving one duplicate-chain step (shared verbatim by
     the Pallas one-pass kernel and its jnp mirror in ops.py).
 
@@ -190,7 +211,7 @@ def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served,
     def body(r, state):
         cur, after, h, po, va, ev = state
         new_rows, hitv, posv, valv, evv = _transition(cfg, cur, qk, qv, ops,
-                                                      chain_live)
+                                                      chain_live, qc)
         active = lrank == r
         act = active & served                 # dropped queries: identity
         eff = jnp.where(act[:, None, None], new_rows, cur)
@@ -198,7 +219,7 @@ def _chain_body(cfg: MSLRUConfig, qk, qv, ops, lrank, served,
         h = jnp.where(act, hitv.astype(jnp.int32), h)
         po = jnp.where(act, posv, po)
         if v:
-            va = jnp.where(act[:, None], valv[:, kp:], va)
+            va = jnp.where(act[:, None], valv[:, kp:kp + v], va)
         ev = jnp.where(act[:, None], evv, ev)
         nxt = jnp.roll(after, 1, axis=0)
         cur = jnp.where((lrank == r + 1)[:, None, None], nxt, cur)
@@ -218,40 +239,45 @@ def _chain_state0(cfg: MSLRUConfig, rows):
             jnp.zeros((b, rows.shape[-1]), jnp.int32))
 
 
-def _kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool, *refs):
-    chain_live = None
+def _kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool, has_cost: bool,
+            *refs):
+    # Optional operands arrive positionally in a fixed order (ops,
+    # chain_live, costs) keyed on the static has_* flags.
+    refs = list(refs)
+    krows_ref, qkey_ref, qval_ref = refs[:3]
+    i = 3
+    ops = chain_live = qc = None
     if has_ops:
-        if has_chain:
-            (krows_ref, qkey_ref, qval_ref, ops_ref, live_ref,
-             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
-            chain_live = live_ref[...]        # (BB,) chain execute mask
-        else:
-            (krows_ref, qkey_ref, qval_ref, ops_ref,
-             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
-        ops = ops_ref[...]                    # (BB,) opcodes
-    else:  # ACCESS-only specialization: no opcode operand, no op selects
-        (krows_ref, qkey_ref, qval_ref,
-         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref) = refs
-        ops = None
+        ops = refs[i][...]                    # (BB,) opcodes
+        i += 1
+    if has_chain:
+        chain_live = refs[i][...]             # (BB,) chain execute mask
+        i += 1
+    if has_cost:
+        qc = refs[i][...]                     # (BB,) insert costs
+        i += 1
+    out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref = refs[i:]
     kp, v = cfg.key_planes, cfg.value_planes
     rows = krows_ref[...]                     # (BB, A, C) int32
     qk = qkey_ref[...]                        # (BB, KP)
     qv = qval_ref[...]                        # (BB, V)
 
-    out, hit, pos, val, ev = _transition(cfg, rows, qk, qv, ops, chain_live)
+    out, hit, pos, val, ev = _transition(cfg, rows, qk, qv, ops, chain_live,
+                                         qc)
 
     out_rows_ref[...] = out
     hit_ref[...] = hit.astype(jnp.int32)
     pos_ref[...] = pos
     if v:
-        val_ref[...] = val[:, kp:]
+        val_ref[...] = val[:, kp:kp + v]
     else:  # dummy 1-plane output (sliced off by the wrapper)
         val_ref[...] = jnp.zeros(val_ref.shape, jnp.int32)
     ev_ref[...] = ev
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
-def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
+def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None,
+                           costs=None, *,
                            cfg: MSLRUConfig, block_b: int = 2048,
                            interpret: bool = True):
     """Fused multi-step LRU op over pre-gathered rows.
@@ -259,7 +285,9 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
     rows (B, A, C) int32; qkeys (B, KP); qvals (B, V); ops (B,) optional
     opcode vector — ``None`` compiles the ACCESS-only kernel with no opcode
     operand (the legacy hot path, zero overhead); chain_live (B,) optional
-    int32 execute mask for CHAIN_GET/CHAIN_PUT rows (requires ``ops``).
+    int32 execute mask for CHAIN_GET/CHAIN_PUT rows (requires ``ops``);
+    costs (B,) optional int32 insert costs (only meaningful when
+    cfg.cost_planes — ``None`` inserts cost 0).
     B is padded to a multiple of block_b with EMPTY queries (their outputs
     are sliced away).  Returns the same tuple as ref.msl_access_ref.
     """
@@ -268,6 +296,7 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
     ve = max(v, 1)  # BlockSpec needs >= 1 plane; dummy sliced off below
     has_ops = ops is not None
     has_chain = chain_live is not None
+    has_cost = costs is not None
     assert not (has_chain and not has_ops), "chain_live requires ops"
     bb = min(block_b, b)
     pad = (-b) % bb
@@ -282,6 +311,8 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
         if has_chain:
             chain_live = jnp.concatenate(
                 [chain_live, jnp.zeros((pad,), jnp.int32)])
+        if has_cost:
+            costs = jnp.concatenate([costs, jnp.zeros((pad,), jnp.int32)])
     bp = b + pad
     qvals_e = qvals if v else jnp.zeros((bp, 1), jnp.int32)
 
@@ -295,9 +326,11 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
     )
     row_spec = pl.BlockSpec((bb, a, c), lambda i: (i, 0, 0))
     flat_spec = pl.BlockSpec((bb,), lambda i: (i,))
-    extra = ([ops] if has_ops else []) + ([chain_live] if has_chain else [])
+    extra = (([ops] if has_ops else [])
+             + ([chain_live] if has_chain else [])
+             + ([costs] if has_cost else []))
     out = pl.pallas_call(
-        functools.partial(_kernel, cfg, has_ops, has_chain),
+        functools.partial(_kernel, cfg, has_ops, has_chain, has_cost),
         grid=grid,
         in_specs=[
             row_spec,
@@ -319,24 +352,25 @@ def msl_access_kernel_call(rows, qkeys, qvals, ops=None, chain_live=None, *,
 
 
 def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool,
+                    has_cost: bool,
                     nrounds_ref, krows_ref, qkey_ref, qval_ref, *refs):
-    chain_live = None
+    # Optional operands arrive positionally in a fixed order (ops,
+    # chain_live, costs) keyed on the static has_* flags.
+    refs = list(refs)
+    i = 0
+    ops = chain_live = qc = None
     if has_ops:
-        if has_chain:
-            (ops_ref, live_ref, sid_ref, lrank_ref, served_ref,
-             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
-             carry_row_ref, carry_sid_ref) = refs
-            chain_live = live_ref[...]        # (BB,) sorted chain exec mask
-        else:
-            (ops_ref, sid_ref, lrank_ref, served_ref,
-             out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
-             carry_row_ref, carry_sid_ref) = refs
-        ops = ops_ref[...]                    # (BB,) sorted opcodes
-    else:  # ACCESS-only specialization: no opcode operand, no op selects
-        (sid_ref, lrank_ref, served_ref,
-         out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
-         carry_row_ref, carry_sid_ref) = refs
-        ops = None
+        ops = refs[i][...]                    # (BB,) sorted opcodes
+        i += 1
+    if has_chain:
+        chain_live = refs[i][...]             # (BB,) sorted chain exec mask
+        i += 1
+    if has_cost:
+        qc = refs[i][...]                     # (BB,) sorted insert costs
+        i += 1
+    sid_ref, lrank_ref, served_ref = refs[i:i + 3]
+    (out_rows_ref, hit_ref, pos_ref, val_ref, ev_ref,
+     carry_row_ref, carry_sid_ref) = refs[i + 3:]
     pid = pl.program_id(0)
 
     @pl.when(pid == 0)
@@ -362,7 +396,8 @@ def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool,
     bb = rows.shape[0]
     n_rounds = nrounds_ref[pid]               # scalar-prefetched trip count
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served, chain_live),
+        0, n_rounds,
+        _chain_body(cfg, qk, qv, ops, lrank, served, chain_live, qc),
         _chain_state0(cfg, rows))
 
     out_rows_ref[...] = after
@@ -376,7 +411,8 @@ def _onepass_kernel(cfg: MSLRUConfig, has_ops: bool, has_chain: bool,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_b", "interpret"))
 def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
-                            nrounds, chain_live=None, *, cfg: MSLRUConfig,
+                            nrounds, chain_live=None, costs=None, *,
+                            cfg: MSLRUConfig,
                             block_b: int = 2048, interpret: bool = True):
     """Conflict-aware single-pass mixed-op batch over *sorted-by-set-id* queries.
 
@@ -391,7 +427,9 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
     (ceil(B/block_b),) int32 per-block chain depth (scalar-prefetched);
     chain_live (B,) optional int32 execute mask for CHAIN_GET/CHAIN_PUT
     rows, sorted alongside the queries (the fused serving tick — computed
-    by the prologue's segmented longest-prefix scan; requires ``ops``).
+    by the prologue's segmented longest-prefix scan; requires ``ops``);
+    costs (B,) optional int32 insert costs sorted alongside the queries
+    (only meaningful when cfg.cost_planes).
 
     B must already be a multiple of block_b (the one-pass prologue pads with
     unserved sentinel queries).  Returns (rows_after, hit, pos, value, ev)
@@ -403,6 +441,7 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
     ve = max(v, 1)
     has_ops = ops is not None
     has_chain = chain_live is not None
+    has_cost = costs is not None
     assert not (has_chain and not has_ops), "chain_live requires ops"
     bb = min(block_b, b)
     assert b % bb == 0, "one-pass kernel expects pre-padded batch"
@@ -411,7 +450,8 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
     row_spec = pl.BlockSpec((bb, a, c), lambda i, nr: (i, 0, 0))
     flat_spec = pl.BlockSpec((bb,), lambda i, nr: (i,))
     extra = (((ops,) if has_ops else ())
-             + ((chain_live,) if has_chain else ()))
+             + ((chain_live,) if has_chain else ())
+             + ((costs,) if has_cost else ()))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b // bb,),
@@ -440,7 +480,7 @@ def msl_onepass_kernel_call(rows, qkeys, qvals, ops, sids, lrank, served,
         jax.ShapeDtypeStruct((b, c), jnp.int32),
     )
     out = pl.pallas_call(
-        functools.partial(_onepass_kernel, cfg, has_ops, has_chain),
+        functools.partial(_onepass_kernel, cfg, has_ops, has_chain, has_cost),
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,

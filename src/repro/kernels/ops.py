@@ -59,15 +59,15 @@ def _on_cpu() -> bool:
 
 
 def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, ops=None,
-               chain_live=None, use_kernel: bool = True, block_b: int = 2048,
-               interpret: bool | None = None):
+               chain_live=None, costs=None, use_kernel: bool = True,
+               block_b: int = 2048, interpret: bool | None = None):
     """Mixed-op transition on pre-gathered rows; kernel or oracle backend."""
     if not use_kernel:
-        return msl_access_ref(rows, qkeys, qvals, cfg, ops, chain_live)
+        return msl_access_ref(rows, qkeys, qvals, cfg, ops, chain_live, costs)
     if interpret is None:
         interpret = _on_cpu()
     return msl_access_kernel_call(
-        rows, qkeys, qvals, ops, chain_live, cfg=cfg, block_b=block_b,
+        rows, qkeys, qvals, ops, chain_live, costs, cfg=cfg, block_b=block_b,
         interpret=interpret)
 
 
@@ -76,18 +76,19 @@ def msl_access(rows, qkeys, qvals, *, cfg: MSLRUConfig, ops=None,
 # ---------------------------------------------------------------------------
 
 def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, ops, lrank, served,
-                       n_rounds, chain_live=None):
+                       n_rounds, chain_live=None, costs=None):
     """jnp mirror of the one-pass kernel: the same ``_chain_body`` loop, run
     in XLA over the whole sorted batch (no blocks, so no carry needed).
 
     rows (B, A, C) sorted-by-set gathered rows; ops (B,) sorted opcodes;
     lrank (B,) chain rank; served (B,) bool; n_rounds: dynamic trip count
     (max chain length); chain_live (B,) optional sorted execute mask for
-    the CHAIN_GET/CHAIN_PUT rows.  Returns (rows_after, hit_i32, pos,
-    value, ev) like the kernel.
+    the CHAIN_GET/CHAIN_PUT rows; costs (B,) optional sorted insert costs.
+    Returns (rows_after, hit_i32, pos, value, ev) like the kernel.
     """
     _, after, h, po, va, ev = jax.lax.fori_loop(
-        0, n_rounds, _chain_body(cfg, qk, qv, ops, lrank, served, chain_live),
+        0, n_rounds,
+        _chain_body(cfg, qk, qv, ops, lrank, served, chain_live, costs),
         _chain_state0(cfg, rows))
     return after, h, po, va[:, : cfg.value_planes], ev
 
@@ -95,7 +96,7 @@ def _chain_resolve_xla(cfg: MSLRUConfig, rows, qk, qv, ops, lrank, served,
 def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                    max_rounds: int | None = None, use_kernel: bool = True,
                    block_b: int = 2048, interpret: bool | None = None,
-                   ops=None, chain_live=None):
+                   ops=None, chain_live=None, costs=None):
     """Single-pass exact multi-query update (one HBM gather + one scatter).
 
     Same contract as ``engine.batched_rounds_update``: table (S, A, C);
@@ -118,6 +119,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         ops = jnp.asarray(ops, jnp.int32)
     if chain_live is not None:
         chain_live = jnp.asarray(chain_live, jnp.int32)
+    if costs is not None:
+        costs = jnp.asarray(costs, jnp.int32)
 
     # --- prologue: pad, sort by set id, derive duplicate-chain metadata ---
     bb = min(block_b, b) if use_kernel else b
@@ -133,6 +136,8 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         if chain_live is not None:
             chain_live = jnp.concatenate(
                 [chain_live, jnp.zeros((pad,), jnp.int32)])
+        if costs is not None:
+            costs = jnp.concatenate([costs, jnp.zeros((pad,), jnp.int32)])
 
     i = jnp.arange(bp, dtype=jnp.int32)
     sid_key = jnp.where(valid, gsid, s).astype(jnp.int32)  # invalid -> dummy
@@ -143,6 +148,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     sqv = qvals[order]
     sops = None if ops is None else ops[order]
     slive = None if chain_live is None else chain_live[order]
+    sqc = None if costs is None else costs[order]
 
     firsts, offset = sorted_group_ranks(ssid)   # chain heads + chain ranks
     n_valid_rounds = jnp.max(jnp.where(svalid, offset, -1)) + 1
@@ -165,12 +171,12 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         nrounds_blocks = lrank.reshape(bp // bb, bb).max(axis=1).astype(jnp.int32) + 1
         rows_after, hit, pos, val, ev = msl_onepass_kernel_call(
             rows_in, sqk, sqv, sops, ssid, lrank.astype(jnp.int32),
-            served_s.astype(jnp.int32), nrounds_blocks, slive,
+            served_s.astype(jnp.int32), nrounds_blocks, slive, sqc,
             cfg=cfg, block_b=bb, interpret=interpret)
     else:
         rows_after, hit, pos, val, ev = _chain_resolve_xla(
             cfg, rows_in, sqk, sqv, sops, lrank, served_s, n_valid_rounds,
-            slive)
+            slive, sqc)
 
     # --- one scatter: each chain's tail commits its set's final row -------
     lasts = jnp.concatenate([ssid[:-1] != ssid[1:], jnp.ones((1,), bool)])
@@ -191,7 +197,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
         value=jnp.where(served[:, None], val_u, 0) if v else val_u,
         pos=jnp.where(served, pos_u, -1),
         evicted_key=jnp.where(served[:, None], ev_u[:, :kp], 0),
-        evicted_val=jnp.where(served[:, None], ev_u[:, kp:], 0),
+        evicted_val=jnp.where(served[:, None], ev_u[:, kp:kp + v], 0),
         evicted_valid=served & (ev_u[:, 0] != EMPTY_KEY),
     )
     return table, res, served
@@ -204,7 +210,7 @@ def onepass_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
 def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
                          max_rounds: int | None = None, use_kernel: bool = True,
                          block_b: int = 2048, interpret: bool | None = None,
-                         ops=None, chain_live=None):
+                         ops=None, chain_live=None, costs=None):
     """``engine.batched_rounds_update`` with ``msl_access`` as the row op.
 
     Re-gathers/scatters all B rows from HBM once per conflict round — the
@@ -213,22 +219,24 @@ def kernel_rounds_update(cfg: MSLRUConfig, table, gsid, valid, qkeys, qvals,
     row scatter) is the one in core/engine.py — only the row transition
     differs, so the two rounds engines cannot drift.
     """
-    def row_op(rows, qk, qv, row_ops, live):
+    kp, v = cfg.key_planes, cfg.value_planes
+
+    def row_op(rows, qk, qv, row_ops, live, qc):
         live = None if live is None else jnp.asarray(live, jnp.int32)
         new_rows, hit, pos, val, ev = msl_access(
-            rows, qk, qv, cfg=cfg, ops=row_ops, chain_live=live,
+            rows, qk, qv, cfg=cfg, ops=row_ops, chain_live=live, costs=qc,
             use_kernel=use_kernel, block_b=block_b, interpret=interpret)
         res = AccessResult(
             hit=hit.astype(bool), value=val, pos=pos,
-            evicted_key=ev[:, : cfg.key_planes],
-            evicted_val=ev[:, cfg.key_planes:],
+            evicted_key=ev[:, :kp],
+            evicted_val=ev[:, kp:kp + v],
             evicted_valid=(ev[:, 0] != EMPTY_KEY),
         )
         return new_rows, res
 
     return batched_rounds_update(cfg, table, gsid, valid, qkeys, qvals,
                                  max_rounds, row_op=row_op, ops=ops,
-                                 chain_live=chain_live)
+                                 chain_live=chain_live, costs=costs)
 
 
 def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
@@ -250,16 +258,16 @@ def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
                                    interpret=interpret)
 
     @jax.jit
-    def run_ops(table, qkeys, qvals, ops):
+    def run_ops(table, qkeys, qvals, ops, costs):
         sids = set_index_for(cfg, qkeys)
         valid = jnp.ones(sids.shape, bool)
         table, res, _served = kernel_rounds_update(
             cfg, table, sids, valid, qkeys, qvals, max_rounds,
-            use_kernel, block_b, interpret, ops=ops)
+            use_kernel, block_b, interpret, ops=ops, costs=costs)
         return table, res
 
     @jax.jit
-    def run_chain(table, qkeys, qvals, ops, chain_ids):
+    def run_chain(table, qkeys, qvals, ops, chain_ids, costs):
         from repro.core.engine import chain_live_mask
 
         sids = set_index_for(cfg, qkeys)
@@ -268,16 +276,18 @@ def make_kernel_batched_engine(cfg: MSLRUConfig, use_kernel: bool = True,
         table, res, _served = kernel_rounds_update(
             cfg, table, sids, valid, qkeys, qvals, max_rounds,
             use_kernel, block_b, interpret, ops=ops,
-            chain_live=live.astype(jnp.int32))
+            chain_live=live.astype(jnp.int32), costs=costs)
         return table, res
 
-    def run(table, qkeys, qvals, ops=None, chain_ids=None):
+    def run(table, qkeys, qvals, ops=None, chain_ids=None, costs=None):
         if ops is not None:
             ops = jnp.asarray(ops, jnp.int32)
+        if costs is not None:
+            costs = jnp.asarray(costs, jnp.int32)
         if chain_ids is not None:
             assert ops is not None, "chain_ids requires an ops vector"
             return run_chain(table, qkeys, qvals, ops,
-                             jnp.asarray(chain_ids, jnp.int32))
-        return run_ops(table, qkeys, qvals, ops)
+                             jnp.asarray(chain_ids, jnp.int32), costs)
+        return run_ops(table, qkeys, qvals, ops, costs)
 
     return run

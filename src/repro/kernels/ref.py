@@ -10,28 +10,30 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.multistep import MSLRUConfig, row_access, row_apply
+from repro.core.multistep import MSLRUConfig, row_access_ev, row_apply_ev
 
 __all__ = ["msl_access_ref"]
 
 
 def msl_access_ref(rows: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
                    cfg: MSLRUConfig, ops: jnp.ndarray | None = None,
-                   chain_live: jnp.ndarray | None = None):
+                   chain_live: jnp.ndarray | None = None,
+                   costs: jnp.ndarray | None = None):
     """rows (B, A, C) int32, qkeys (B, KP) int32, qvals (B, V) int32,
     ops (B,) optional int32 opcodes (None = all OP_ACCESS), chain_live (B,)
-    optional execute mask for CHAIN_GET/CHAIN_PUT rows.
+    optional execute mask for CHAIN_GET/CHAIN_PUT rows, costs (B,) optional
+    int32 insert costs (read only when cfg.cost_planes).
 
     Returns (new_rows (B,A,C), hit (B,) int32, pos (B,) int32,
              value (B,V) int32, evicted (B,C) int32) — evicted packs
-    [key planes | value planes] with key plane 0 == EMPTY_KEY when nothing
-    was evicted.
+    [key planes | value planes | cost plane] with key plane 0 == EMPTY_KEY
+    when nothing was evicted.
     """
     if ops is None:
-        new_rows, res = row_access(cfg, rows, qkeys, qvals)
+        new_rows, res, evicted = row_access_ev(cfg, rows, qkeys, qvals, costs)
     else:
-        new_rows, res = row_apply(cfg, rows, qkeys, qvals, ops,
-                                  chain_live=chain_live)
-    evicted = jnp.concatenate([res.evicted_key, res.evicted_val], axis=-1)
+        new_rows, res, evicted = row_apply_ev(cfg, rows, qkeys, qvals, ops,
+                                              chain_live=chain_live,
+                                              costs=costs)
     return (new_rows, res.hit.astype(jnp.int32), res.pos,
             res.value, evicted)

@@ -553,6 +553,8 @@ class ServeEngine:
         pages_per = self.prefix_cache.lookup_chains(chains) if pref else []
         ins_chains: list[list[int]] = []
         ins_pages: list[list[int]] = []
+        ins_depths: list[int] = []
+        ins_lens: list[int] = []
         for req, chain, pages in zip(pref, chains, pages_per):
             slot = req.slot
             if len(pages) * ct >= len(req.prompt):
@@ -628,11 +630,15 @@ class ServeEngine:
                     self.pool.write_pages(np.array(new_pages), kc, vc)
                     ins_chains.append(chain[len(pages): len(pages) + npg])
                     ins_pages.append(new_pages)
+                    ins_depths.append(len(pages))
+                    ins_lens.append(len(chain))
             self.cur_len[slot] = len(req.prompt)
             self._mark_active(req)
             self._emit(req, int(jnp.argmax(logits)))
         if ins_chains:
-            for pg in self.prefix_cache.insert_chains(ins_chains, ins_pages):
+            for pg in self.prefix_cache.insert_chains(
+                    ins_chains, ins_pages, depths=ins_depths,
+                    chain_lens=ins_lens):
                 self.pool.release(pg)
 
         self._admit_plain(plain)
@@ -798,7 +804,9 @@ class ServeEngine:
                 retry.append((c, start, sub_h, sub_p))
         if retry:
             recycled = set(self.prefix_cache.insert_chains(
-                [x[2] for x in retry], [x[3] for x in retry]))
+                [x[2] for x in retry], [x[3] for x in retry],
+                depths=[x[1] for x in retry],
+                chain_lens=[len(chains[x[0]]) for x in retry]))
             for pg in recycled:
                 self.pool.release(pg)
             # a retry insert may have evicted a chunk the MAIN call just
@@ -1252,6 +1260,13 @@ class ServeEngine:
                 if self._resident_ticks else 0.0),
             "resident_kv_bytes_peak": (self.resident_kv_tokens_peak
                                        * self._kv_bytes_per_token()),
+            # re-prefill economics, mirrored from the prefix cache: FLOPs
+            # re-spent prefilling previously-computed-then-evicted chunks,
+            # and the summed stored cost of what eviction discarded — the
+            # pair the cost-aware victim choice is meant to shrink
+            "reprefill_flops": getattr(self.prefix_cache,
+                                       "reprefill_flops", 0),
+            "evicted_cost": getattr(self.prefix_cache, "evicted_cost", 0),
         }
 
     def _kv_bytes_per_token(self) -> int:

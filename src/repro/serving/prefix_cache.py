@@ -129,15 +129,20 @@ class PrefixCache:
     def __init__(self, num_sets: int = 1024, m: int = 2, p: int = 4,
                  chunk_tokens: int = 64, policy: str = "multistep",
                  engine: str = "onepass", use_kernel: bool = False,
-                 backend=None):
+                 backend=None, cost_aware: bool = False):
         if backend is None:
             self.cfg = MSLRUConfig(num_sets=num_sets, m=m, p=p,
-                                   value_planes=1, policy=policy)
+                                   value_planes=1, policy=policy,
+                                   cost_planes=1 if cost_aware else 0)
             self.cache = MultiStepLRUCache(self.cfg, engine=engine,
                                            use_kernel=use_kernel)
+            self.cost_aware = bool(cost_aware)
         else:
             self.cache = backend
             self.cfg = backend.cfg
+            # the table geometry is the backend's — cost-awareness follows
+            # whether it carries a cost plane, not the ctor flag
+            self.cost_aware = bool(self.cfg.cost_planes)
         self.chunk_tokens = chunk_tokens
         self.hits = 0
         self.misses = 0
@@ -151,6 +156,43 @@ class PrefixCache:
         # reported by the serving tier via ``note_service_latency`` — shed
         # starvation shows up here as a long tail, not just event counts
         self.service_ticks: list[int] = []
+        # -- re-prefill accounting (the quantity cost-aware eviction cuts) --
+        # FLOPs re-spent prefilling a chunk that was computed in some
+        # earlier tick and has since been evicted; chunk t of a chain costs
+        # (t+1) * chunk_tokens^2 (attention over its prefix)
+        self.reprefill_flops = 0
+        # summed stored cost of evicted entries (device cost-plane units)
+        self.evicted_cost = 0
+        self._computed_ever: set[int] = set()   # chunk hashes ever prefilled
+        self._page_cost: dict[int, int] = {}    # live page -> stored cost
+
+    @staticmethod
+    def chain_costs(n: int) -> list[int]:
+        """Per-chunk re-prefill costs for an ``n``-chunk chain: losing the
+        depth-``k`` chunk orphans every deeper chunk (lookups stop at the
+        first miss), so its cost is the tail re-prefill sum
+        ``sum_{t=k}^{n-1} (t+1) = (n(n+1) - k(k+1)) / 2`` in units of
+        ``chunk_tokens^2`` FLOPs — shallow chunks are expensive to lose,
+        leaf chunks are the cheap victims."""
+        return [(n * (n + 1) - k * (k + 1)) // 2 for k in range(n)]
+
+    def _account_reprefill(self, chain, hitlen: int) -> None:
+        """Chunks past the hit prefix get (re)prefilled by the caller this
+        tick: charge ``reprefill_flops`` for every one seen in an earlier
+        tick (it was computed, then evicted) and mark all of them
+        computed."""
+        ct2 = self.chunk_tokens * self.chunk_tokens
+        for t in range(hitlen, len(chain)):
+            h = int(chain[t])
+            if h in self._computed_ever:
+                self.reprefill_flops += (t + 1) * ct2
+            else:
+                self._computed_ever.add(h)
+
+    def _account_evictions(self, evicted) -> None:
+        """Pop evicted pages' stored costs into ``evicted_cost``."""
+        for pg in evicted:
+            self.evicted_cost += self._page_cost.pop(int(pg), 0)
 
     def _note_chains(self, chains, skip=None) -> None:
         """Register served chains with an elastic backend's chain registry
@@ -184,7 +226,8 @@ class PrefixCache:
 
     # -- batched engine access ----------------------------------------------
     def _call(self, keys: list[int], ops, vals: list[int] | None = None,
-              chain_ids: list[int] | None = None):
+              chain_ids: list[int] | None = None,
+              costs: list[int] | None = None):
         """ONE engine invocation over ``keys``; ``ops`` is a scalar opcode
         or a per-row vector; ``chain_ids`` enables the fused chain ops.
         Returns ``(result, shed)`` — ``shed`` is a (n,) bool mask of rows a
@@ -221,7 +264,14 @@ class PrefixCache:
         if chain_ids is not None:
             c = np.zeros(bp, np.int32)
             c[:n] = chain_ids
-        res = self.cache.access(k, v, ops=o, chain_ids=c)
+        if costs is not None:
+            # Only pass the kwarg when a cost vector is live so duck-typed
+            # backends predating the cost plane keep working untouched.
+            cst = np.zeros(bp, np.int32)
+            cst[:n] = costs
+            res = self.cache.access(k, v, ops=o, chain_ids=c, costs=cst)
+        else:
+            res = self.cache.access(k, v, ops=o, chain_ids=c)
         shed = getattr(self.cache, "last_shed", None)
         shed = (np.zeros(n, bool) if shed is None
                 else np.asarray(shed)[:n])
@@ -254,22 +304,27 @@ class PrefixCache:
         ops: list[int] = []
         vals: list[int] = []
         cids: list[int] = []
+        costs: list[int] = []
+        chain_cost = [self.chain_costs(len(chain)) for chain in chains]
         for c, chain in enumerate(chains):
             for h in chain:
                 ks.append(h)
                 ops.append(OP_CHAIN_GET)
                 vals.append(0)
                 cids.append(c)
+                costs.append(0)                # GET rows never insert
         for c, chain in enumerate(chains):
-            for h, pg in zip(chain, staged[c]):
+            for t, (h, pg) in enumerate(zip(chain, staged[c])):
                 ks.append(h)
                 ops.append(OP_CHAIN_PUT)
                 vals.append(pg)
                 cids.append(c)
+                costs.append(chain_cost[c][t])
         if not ks:
             return [ChainServe([], 0, []) for _ in chains], []
 
-        out, shed = self._call(ks, ops, vals=vals, chain_ids=cids)
+        out, shed = self._call(ks, ops, vals=vals, chain_ids=cids,
+                               costs=costs if self.cost_aware else None)
         hit = np.asarray(out.hit)
         val = np.asarray(out.value)[:, 0]
         ev_ok = np.asarray(out.evicted_valid)
@@ -304,6 +359,7 @@ class PrefixCache:
             self.hits += k
             if k < n:
                 self.misses += 1
+            self._account_reprefill(chain, k)
             results.append(ChainServe(pages, k, []))
             i += n
         for c, chain in enumerate(chains):
@@ -318,8 +374,15 @@ class PrefixCache:
                     puts.append(None)          # row did not execute
                 else:
                     puts.append((bool(hit[i + t]), int(val[i + t])))
+                    if not bool(hit[i + t]):
+                        # miss-insert published the STAGED page (the engine
+                        # returns value 0 on a miss) — it is live now
+                        self._page_cost[int(staged[c][t])] = chain_cost[c][t]
             results[c].puts = puts
             i += m
+        # after the publish bookkeeping, so a page published and displaced
+        # within one tick still settles its stored cost
+        self._account_evictions(evicted)
         return results, evicted
 
     # -- chain ops (each ≤ the stated number of device calls) ----------------
@@ -361,6 +424,9 @@ class PrefixCache:
             self.hits += len(got)
             if len(got) < len(chain):
                 self.misses += 1
+            # the caller (re)prefills past the hit prefix — account here,
+            # not in insert_chains, so the split tick counts each chunk once
+            self._account_reprefill(chain, len(got))
             promote.extend(chain[: len(got)])
             promote_chain.extend([ci] * len(got))
             pages.append(got)
@@ -375,7 +441,9 @@ class PrefixCache:
         return pages
 
     def insert_chains(self, chains: list[list[int]],
-                      pages: list[list[int]]) -> list[int]:
+                      pages: list[list[int]],
+                      depths: list[int] | None = None,
+                      chain_lens: list[int] | None = None) -> list[int]:
         """Insert chunk->page entries for all chains in ONE ACCESS batch;
         returns every page index the pool should recycle: the set-LRU
         victims the inserts evicted, plus staged pages whose insert was
@@ -383,19 +451,37 @@ class PrefixCache:
         chunk, or a chunk that turned out to be resident past the lookup's
         first miss) — those pages were never published in the cache, so
         dropping them would leak pool storage.  Only true evictions count
-        in ``stats()["evictions"]``."""
+        in ``stats()["evictions"]``.
+
+        ``depths[c]`` / ``chain_lens[c]`` locate chain ``c`` when it is a
+        suffix of a longer chain (the split admit path inserts only the
+        chunks past the hit prefix): its first chunk sits at that depth of
+        a ``chain_lens[c]``-chunk chain, so per-chunk costs match what the
+        fused ``serve_chains`` path would stage for the same chunks.
+        ``None`` treats every chain as complete (depth 0)."""
         flat_k = [h for c in chains for h in c]
         flat_p = [pg for ps in pages for pg in ps]
         assert len(flat_k) == len(flat_p)
         if not flat_k:
             return []
         self._note_chains(chains)
-        out, shed = self._call(flat_k, OP_ACCESS, vals=flat_p)
+        flat_c: list[int] = []
+        for ci, c in enumerate(chains):
+            d = 0 if depths is None else depths[ci]
+            n = len(c) + d if chain_lens is None else chain_lens[ci]
+            flat_c.extend(self.chain_costs(n)[d: d + len(c)])
+        out, shed = self._call(
+            flat_k, OP_ACCESS, vals=flat_p,
+            costs=flat_c if self.cost_aware else None)
         hit = np.asarray(out.hit)
         ev_ok = np.asarray(out.evicted_valid)
         ev_val = np.asarray(out.evicted_val)[:, 0]
         evicted = [int(v) for v, ok in zip(ev_val, ev_ok) if bool(ok)]
         self.evictions += len(evicted)
+        for p, h, s, cost in zip(flat_p, hit, shed, flat_c):
+            if not bool(h) and not bool(s):    # published: page now live
+                self._page_cost[int(p)] = cost
+        self._account_evictions(evicted)
         redundant = [int(p) for p, h in zip(flat_p, hit) if bool(h)]
         # shed insert rows never published: return their staged pages so
         # the pool does not leak (split-path degradation; the fused path
@@ -444,4 +530,6 @@ class PrefixCache:
             "fallbacks": self.fallbacks,
             "service_ticks_p50": p50,
             "service_ticks_p99": p99,
+            "reprefill_flops": self.reprefill_flops,
+            "evicted_cost": self.evicted_cost,
         }

@@ -1,0 +1,325 @@
+"""Differential tests for the cost plane (cost-aware victim choice).
+
+One random (keys, vals, ops, costs) stream is replayed through every
+implementation — pure-Python oracle, sequential scan engine, batched
+rounds, one-pass jnp mirror, one-pass Pallas kernel (interpret mode), and
+the sharded engine — and every output field plus the final table (cost
+plane included) must agree bit for bit.
+
+Two degeneration pins guard the default path:
+  * ``costs=None`` (and any all-equal cost vector) on a ``cost_planes=1``
+    table must be BIT-EXACT to today's multi-step LRU — the minimum-cost
+    victim scan ties everywhere and the deepest-lane tie-break restores
+    lane A-1 exactly;
+  * a ``cost_planes=0`` config never sees a cost operand at all (the
+    pre-cost compiled specialization).
+
+A slow-marked subprocess child repeats the oracle parity over a REAL
+2-device all_to_all route (the cost payload plane must survive routing,
+not just the 1-device degenerate case).
+"""
+
+import functools
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the fixed-seed sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (EMPTY_KEY, MSLRUConfig, MultiStepLRUCache,
+                        init_table, OP_ACCESS, OP_DELETE, OP_GET, OP_LOOKUP)
+from repro.core.engine import make_batched_engine
+from repro.core.policies import MultiStepLRUOracle
+
+ROOT = Path(__file__).resolve().parent.parent
+BATCH = 48
+
+CFGS = [
+    MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1, cost_planes=1),
+    MSLRUConfig(num_sets=4, m=1, p=4, value_planes=0, cost_planes=1),
+    MSLRUConfig(num_sets=8, m=2, p=2, key_planes=2, value_planes=1,
+                cost_planes=1),
+    MSLRUConfig(num_sets=16, m=4, p=2, value_planes=1, policy="set_lru",
+                cost_planes=1),
+]
+
+OPS = [OP_ACCESS, OP_GET, OP_DELETE, OP_LOOKUP]
+
+
+@functools.lru_cache(maxsize=None)
+def _engines(cfg: MSLRUConfig):
+    return {
+        "rounds": make_batched_engine(cfg, engine="rounds"),
+        "onepass_jnp": make_batched_engine(cfg, engine="onepass",
+                                           use_kernel=False, block_b=32),
+        "onepass_kernel": make_batched_engine(cfg, engine="onepass",
+                                              use_kernel=True, block_b=32),
+    }
+
+
+def _stream(cfg, rng, n, key_range, cost_range=50):
+    if cfg.key_planes == 2:
+        keys = np.stack([rng.integers(0, 3, n),
+                         rng.integers(1, key_range, n)],
+                        axis=-1).astype(np.int32)
+    else:
+        keys = rng.integers(1, key_range, (n, 1)).astype(np.int32)
+    vals = rng.integers(-999, 999, (n, cfg.value_planes)).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=n)
+    costs = rng.integers(0, cost_range, n).astype(np.int32)
+    return keys, vals, ops, costs
+
+
+def _run_batched(run, cfg, keys, vals, ops, costs, batch=BATCH):
+    tbl = init_table(cfg)
+    outs = []
+    for i in range(0, len(keys), batch):
+        qc = None if costs is None else jnp.asarray(costs[i:i + batch])
+        tbl, res = run(tbl, jnp.asarray(keys[i:i + batch]),
+                       jnp.asarray(vals[i:i + batch]),
+                       jnp.asarray(ops[i:i + batch]), None, qc)
+        outs.append(res)
+    cat = {f: np.concatenate([np.asarray(getattr(r, f)) for r in outs])
+           for f in outs[0]._fields}
+    return np.asarray(tbl), cat
+
+
+def _run_all_and_compare(cfg, keys, vals, ops, costs):
+    """Replay through the sequential + all batched engines; assert bitwise
+    equality everywhere; return the sequential outputs + table."""
+    seq = MultiStepLRUCache(cfg)
+    out = seq.access_seq(keys, vals=vals, ops=ops, costs=costs)
+    ref = {"hit": np.asarray(out.hit), "pos": np.asarray(out.pos),
+           "value": np.asarray(out.value),
+           "evicted_key": np.asarray(out.evicted_key),
+           "evicted_val": np.asarray(out.evicted_val),
+           "evicted_valid": np.asarray(out.evicted_valid)}
+    ref_tbl = np.asarray(seq.table)
+    for name, run in _engines(cfg).items():
+        tbl, cat = _run_batched(run, cfg, keys, vals, ops, costs)
+        for f, expect in ref.items():
+            np.testing.assert_array_equal(
+                cat[f], expect, err_msg=f"{name}: {f} mismatch")
+        np.testing.assert_array_equal(tbl, ref_tbl,
+                                      err_msg=f"{name}: table mismatch")
+    return ref, ref_tbl
+
+
+def _oracle_key(cfg, krow):
+    return tuple(int(x) for x in krow) if cfg.key_planes == 2 else int(krow[0])
+
+
+def _check_oracle(cfg, keys, vals, ops, costs, ref, ref_tbl):
+    """Python oracle parity op by op, and slot-exactly on the final table
+    INCLUDING the stored cost plane."""
+    oracle = MultiStepLRUOracle(cfg.num_sets, cfg.m, cfg.p,
+                                policy=cfg.policy, key_planes=cfg.key_planes,
+                                cost_planes=1)
+    for i in range(len(keys)):
+        o = oracle.apply(int(ops[i]), _oracle_key(cfg, keys[i]),
+                         tuple(int(x) for x in vals[i]),
+                         cost=int(costs[i]))
+        assert o["hit"] == bool(ref["hit"][i]), f"oracle hit mismatch at {i}"
+        assert o["pos"] == int(ref["pos"][i]), f"oracle pos mismatch at {i}"
+        ev = o["evicted"]
+        assert (ev is not None) == bool(ref["evicted_valid"][i])
+        if ev is not None:
+            ek = ev[0] if cfg.key_planes == 2 else (ev[0],)
+            assert tuple(int(x) for x in ref["evicted_key"][i]) == tuple(ek)
+            if cfg.value_planes:
+                assert (tuple(int(x) for x in ref["evicted_val"][i])
+                        == tuple(ev[1]))
+    kp, v = cfg.key_planes, cfg.value_planes
+    for si in range(cfg.num_sets):
+        for ai in range(cfg.assoc):
+            slot = oracle.sets[si][ai]
+            if slot is None:
+                assert ref_tbl[si, ai, 0] == EMPTY_KEY
+            else:
+                key = slot[0] if kp == 2 else (slot[0],)
+                assert tuple(int(x) for x in ref_tbl[si, ai, :kp]) == \
+                    tuple(key)
+                if v:
+                    assert (tuple(int(x) for x in ref_tbl[si, ai, kp:kp + v])
+                            == tuple(slot[1]))
+                assert int(ref_tbl[si, ai, kp + v]) == int(slot[2]), \
+                    f"stored cost mismatch at set {si} lane {ai}"
+
+
+def _differential_case(ci, seed, nb, key_range):
+    cfg = CFGS[ci]
+    rng = np.random.default_rng(seed)
+    keys, vals, ops, costs = _stream(cfg, rng, nb * BATCH, key_range)
+    ref, ref_tbl = _run_all_and_compare(cfg, keys, vals, ops, costs)
+    _check_oracle(cfg, keys, vals, ops, costs, ref, ref_tbl)
+
+
+@pytest.mark.parametrize("ci", range(len(CFGS)))
+def test_cost_stream_differential_fixed(ci):
+    """Deterministic slice of the differential sweep (runs without
+    hypothesis; duplicate-heavy key range so same-set conflicts exercise
+    the cost-aware victim under every engine's conflict scheme)."""
+    _differential_case(ci, seed=100 + ci, nb=3, key_range=40)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=15)
+    @given(ci=st.integers(0, len(CFGS) - 1),
+           seed=st.integers(0, 2**31 - 1),
+           key_range=st.sampled_from([8, 40, 300]))
+    def test_cost_stream_differential_sweep(ci, seed, key_range):
+        _differential_case(ci, seed, nb=2, key_range=key_range)
+
+
+def test_uniform_costs_degenerate_to_plain_lru():
+    """cost_planes=1 with costs=None OR any all-equal cost vector must be
+    bit-exact to cost_planes=0 on the shared planes — the deepest-lane
+    tie-break restores exactly lane A-1."""
+    base = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1)
+    cost = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1, cost_planes=1)
+    rng = np.random.default_rng(7)
+    n = 6 * BATCH
+    keys = rng.integers(1, 60, (n, 1)).astype(np.int32)
+    vals = rng.integers(-99, 99, (n, 1)).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=n)
+
+    ref_cache = MultiStepLRUCache(base)
+    ref_out = ref_cache.access_seq(keys, vals=vals, ops=ops)
+    ref_tbl = np.asarray(ref_cache.table)
+
+    for costs in (None, np.zeros(n, np.int32), np.full(n, 17, np.int32)):
+        c = MultiStepLRUCache(cost)
+        out = c.access_seq(keys, vals=vals, ops=ops, costs=costs)
+        for f in ("hit", "pos", "value", "evicted_key", "evicted_val",
+                  "evicted_valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out, f)), np.asarray(getattr(ref_out, f)),
+                err_msg=f"uniform-cost degeneration: {f}")
+        np.testing.assert_array_equal(np.asarray(c.table)[:, :, :2], ref_tbl,
+                                      err_msg="uniform-cost table")
+        # batched engines agree with their own sequential run too
+        keys2, vals2 = keys, vals
+        for name, run in _engines(cost).items():
+            tbl, cat = _run_batched(run, cost, keys2, vals2, ops, costs)
+            np.testing.assert_array_equal(
+                tbl[:, :, :2], ref_tbl,
+                err_msg=f"uniform-cost table ({name})")
+
+
+def test_cost_none_is_pre_cost_specialization():
+    """costs=None on cost_planes=0 compiles and runs the legacy path —
+    and a cost vector on a cost_planes=0 table is simply ignored by the
+    victim choice (no cost plane to read)."""
+    cfg = MSLRUConfig(num_sets=4, m=2, p=4, value_planes=1)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(1, 30, (2 * BATCH, 1)).astype(np.int32)
+    vals = rng.integers(0, 99, (2 * BATCH, 1)).astype(np.int32)
+    ops = np.full(2 * BATCH, OP_ACCESS, np.int32)
+    a = MultiStepLRUCache(cfg)
+    a.access_seq(keys, vals=vals, ops=ops)
+    b = MultiStepLRUCache(cfg)
+    b.access_seq(keys, vals=vals, ops=ops,
+                 costs=rng.integers(0, 50, 2 * BATCH).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(a.table), np.asarray(b.table))
+
+
+def test_cost_victim_prefers_cheapest_in_last_vector():
+    """Semantic pin: with a full set, the insert victim is the cheapest
+    lane of the LAST vector (eviction candidates), not blindly lane A-1 —
+    and hits promote with their stored cost intact."""
+    cfg = MSLRUConfig(num_sets=1, m=2, p=4, value_planes=1, cost_planes=1)
+    c = MultiStepLRUCache(cfg)
+    keys = np.arange(1, 9, dtype=np.int32)[:, None]     # fill all 8 lanes
+    vals = 10 * np.arange(1, 9, dtype=np.int32)[:, None]
+    costs = np.array([5, 9, 1, 7, 3, 8, 2, 6], np.int32)
+    ops = np.full(8, OP_ACCESS, np.int32)
+    c.access_seq(keys, vals=vals, ops=ops, costs=costs)
+    # lanes hot->cold hold keys 8..1; last vector = keys 4,3,2,1 with costs
+    # 7,1,9,5 -> cheapest is key 3 (cost 1)
+    out = c.access_seq(np.array([[99]], np.int32),
+                       vals=np.array([[990]], np.int32),
+                       ops=np.array([OP_ACCESS], np.int32),
+                       costs=np.array([4], np.int32))
+    assert bool(out.evicted_valid[0])
+    assert int(out.evicted_key[0][0]) == 3
+    assert int(out.evicted_val[0][0]) == 30
+    tbl = np.asarray(c.table)[0]
+    assert 3 not in tbl[:, 0].tolist()
+    assert 99 in tbl[:, 0].tolist()
+
+
+def test_sharded_1dev_cost_parity():
+    """Sharded engine (1-device degenerate mesh) matches the sequential
+    engine on a random cost stream, cost plane included."""
+    from repro.core.sharded import make_sharded_engine, shard_table
+    from repro.launch.mesh import make_cache_mesh
+
+    cfg = MSLRUConfig(num_sets=8, m=2, p=4, value_planes=1, cost_planes=1)
+    mesh = make_cache_mesh(1)
+    eng = make_sharded_engine(cfg, mesh, cap="full", engine="onepass")
+    t = shard_table(init_table(cfg), mesh)
+    rng = np.random.default_rng(11)
+    n = 256
+    keys = rng.integers(1, 60, (n, 1)).astype(np.int32)
+    ops = rng.choice(np.asarray(OPS, np.int32), size=n)
+    costs = rng.integers(0, 40, n).astype(np.int32)
+    for i in range(0, n, 64):
+        t, hit, val, served = eng(
+            t, jnp.asarray(keys[i:i + 64]), jnp.asarray(keys[i:i + 64]),
+            jnp.asarray(ops[i:i + 64]), costs=jnp.asarray(costs[i:i + 64]))
+        assert bool(np.asarray(served).all())
+    c = MultiStepLRUCache(cfg)
+    c.access_seq(keys, vals=keys, ops=ops, costs=costs)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(c.table))
+
+
+_COST_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, "src")
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import MSLRUConfig, init_table, MultiStepLRUCache
+from repro.core.sharded import make_sharded_engine, shard_table
+from repro.launch.mesh import make_mesh_compat
+
+mesh = make_mesh_compat((2,), ("cache",))
+cfg = MSLRUConfig(num_sets=64, m=2, p=4, value_planes=1, cost_planes=1)
+eng = make_sharded_engine(cfg, mesh, cap="full", engine="onepass")
+t = shard_table(init_table(cfg), mesh)
+rng = np.random.default_rng(13)
+n = 2048
+keys = rng.integers(1, 400, size=(n, 1)).astype(np.int32)
+ops = rng.integers(0, 4, size=n).astype(np.int32)
+costs = rng.integers(0, 50, size=n).astype(np.int32)
+for i in range(0, n, 512):
+    t, hit, val, served = eng(t, jnp.asarray(keys[i:i+512]),
+                              jnp.asarray(keys[i:i+512]),
+                              jnp.asarray(ops[i:i+512]),
+                              costs=jnp.asarray(costs[i:i+512]))
+    assert bool(np.asarray(served).all())
+c = MultiStepLRUCache(cfg)
+c.access_seq(keys[:, 0], vals=keys, ops=ops, costs=costs)
+table_match = bool((np.asarray(jax.device_get(t)) == np.asarray(c.table)).all())
+print(json.dumps({"table_match": table_match}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_2dev_cost_parity_subprocess():
+    """The cost payload plane survives a REAL 2-device all_to_all route:
+    the routed table is bit-equal to the sequential engine's."""
+    res = subprocess.run([sys.executable, "-c", _COST_CHILD],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    assert rec["table_match"]

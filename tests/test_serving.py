@@ -249,7 +249,9 @@ def test_fused_tick_equals_split_path_prefix_cache():
                     page += len(ch)
                 pc.insert_chains(
                     [ch[len(g):] for ch, g in zip(chains, pages)],
-                    [s[len(g):] for s, g in zip(staged, pages)])
+                    [s[len(g):] for s, g in zip(staged, pages)],
+                    depths=[len(g) for g in pages],
+                    chain_lens=[len(ch) for ch in chains])
                 ticks.append([len(g) for g in pages])
         return pc, ticks
 
