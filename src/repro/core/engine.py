@@ -139,6 +139,36 @@ contract:
   module's engines, not merely hit/miss-equivalent, and differential
   tests may compare tables across device counts.
 
+* **Fragment placement** (``placement="split"``, the default under a
+  bounded cap): a chain whose rows exceed any single slab's budget is
+  decomposed into chunk FRAGMENTS packed greedily across healthy slabs
+  (largest extent first, ties to the emptiest slab) against the same
+  per-(slab, owner) load mirror the atomic pre-check uses.  Each
+  fragment carries a fresh slab-local chain id and its rows stay a
+  contiguous caller-order block, so ``chain_exec_from_hits``'s
+  segmented prefix scan and global PUT pairing see ordinary
+  independent chains — the contract above needs NO new engine
+  semantics.  Only the un-placeable chunk SUFFIX sheds (consistently
+  in both the GET and PUT islands), keeping served fragments
+  prefix-closed: the serve tier reads the first shed row as the
+  fragment boundary (``ChainServe.served_len``), serves the prefix
+  this tick, and re-runs only the tail inserts at the next tick
+  boundary.  Canonical caller-order ranks still ride every fragment,
+  so tables remain bit-equal to the sequential engine under ANY
+  placement — split is purely a shed-rate/goodput knob.  With fewer
+  than 2 healthy slabs (or an unbounded cap and no faults) split
+  degenerates to the atomic whole-chain protocol.
+
+* **Owner-aware admission throttling**: the client folds each tick's
+  admitted per-(slab, owner) counts into a per-home-shard pressure EWMA
+  (owners implicated in capacity/degraded sheds pin to 1.0), exposed as
+  ``chain_pressure(chain)``.  ``ServeEngine`` may consult it at
+  admission (``throttle_threshold``) to defer NEW chains homing on a
+  saturated shard in favour of requests servable now — never retries or
+  fallbacks, starvation-exempt after ``max_throttle_ticks`` skips, and
+  an all-hot queue still admits its front request, so throttling only
+  REORDERS admissions and every request completes.
+
 Elasticity (drain / re-insert and degraded shards)
 --------------------------------------------------
 The same two primitives carry the elastic operations, so resilience needs
@@ -162,7 +192,9 @@ no new table semantics:
 * **Degraded shards** (``ShardedCacheClient.mark_degraded(s)``): a lost
   shard's sets are wiped to EMPTY host-side and the shard is excluded
   from placement; any chain that still homes a chunk there sheds — the
-  SAME atomic whole-chain shed as a capacity overflow, feeding the same
+  SAME shed protocol as a capacity overflow (whole-chain under atomic
+  placement; from the dead-homed chunk onward under split, since
+  degraded slabs are excluded from fragment packing), feeding the same
   serve-tier retry queue, so the serving invariants (no holes, no
   partial mutations) carry over unchanged.  Orphaned pages are reported
   once for pool release.  A chain that keeps shedding past

@@ -401,6 +401,30 @@ class ShardedCacheClient:
     shed-rate knob.  ``placement="roundrobin"`` keeps the legacy dealing
     (the committed BENCH_sharded baseline); with ``cap="full"`` nothing
     can shed, so the round-robin deal is kept regardless.
+
+    Split-chain placement: hashing is per-chunk, so whole-chain atomicity
+    is a *placement* choice, not a table constraint.  ``placement="split"``
+    (the default under a bounded cap) packs each chain as one or more
+    contiguous chunk-run FRAGMENTS onto different slabs, judged on the
+    same per-(slab, owner) load mirror the shed pre-check uses, and sheds
+    only the un-placeable SUFFIX of chunks: the placed fragments are
+    prefix-closed, so ``serve_chains``' longest-hit-prefix contract and
+    the canonical caller-order ranks both survive — a partial placement
+    serves the chain up to its fragment boundary and the serving tier
+    re-queues only the tail.  Each fragment gets its own slab-local chain
+    id (``chain_exec_from_hits`` scans it as an independent prefix
+    segment; a fragment's GET and PUT island rows stay paired because
+    both carry the fragment's id).  A chunk homed on a degraded shard, or
+    whose owner's per-peer buffer is full on every healthy slab, starts
+    the shed suffix.  Split needs >= 2 healthy slabs; on one slab it
+    degenerates to the whole-chain load deal (1-device clients keep the
+    atomic shed protocol).  Counters: ``split_chains`` (chains placed as
+    >= 2 fragments), ``partial_sheds`` (suffix-only sheds with a served
+    prefix), ``slab_occupancy_peak`` (max per-(slab, owner) buffer fill
+    observed), and ``slab_pressure`` — a per-HOME-shard EWMA of buffer
+    utilization, pinned to 1.0 for owners implicated in capacity or
+    degraded sheds — which ``chain_pressure`` exposes as the
+    ``ServeEngine`` admission-throttle signal.
     """
 
     batch_multiple = 1  # access() repacks internally; any B works
@@ -409,13 +433,17 @@ class ShardedCacheClient:
     def __init__(self, cfg: MSLRUConfig, mesh, axis: str = "cache",
                  engine: str = "onepass", use_kernel: bool = False,
                  block_b: int = 2048, interpret: bool | None = None,
-                 cap="full", placement: str = "load"):
+                 cap="full", placement: str | None = None):
         # the slab repacking below is written for 32-bit chunk hashes; the
         # sharded ENGINE itself handles key_planes=2, the client does not
         assert cfg.key_planes == 1, (
             "ShardedCacheClient packs 1-plane keys (chunk hashes); "
             "key_planes=2 is not supported here")
-        assert placement in ("load", "roundrobin"), placement
+        if placement is None:
+            # split only matters when sheds can happen; with cap="full" the
+            # load deal is kept (nothing to split around)
+            placement = "split" if cap != "full" else "load"
+        assert placement in ("load", "roundrobin", "split"), placement
         self.cfg = cfg
         self.cap = cap
         self.placement = placement
@@ -429,6 +457,11 @@ class ShardedCacheClient:
         self.shed_groups = 0    # total groups (chains / plain rows) shed
         self.last_shed = None   # (n,) bool, caller order, of the last access
         self.route_shape = None  # (q, k_depth, payload planes) of last call
+        # -- split placement / pressure observability ----------------------
+        self.split_chains = 0   # chains placed as >= 2 fragments
+        self.partial_sheds = 0  # suffix-only sheds (a prefix was served)
+        self.slab_occupancy_peak = 0.0  # max per-(slab, owner) fill seen
+        self._pressure_alpha = 0.4      # slab_pressure EWMA weight
         # -- elasticity / fault state -------------------------------------
         self.degraded: set[int] = set()   # shards treated as lost: every
         #   group with a chunk HOMED there (or packed onto that slab) sheds
@@ -450,6 +483,9 @@ class ShardedCacheClient:
         self.mesh = mesh
         self.ndev = mesh.shape[self._axis]
         self._s_local = sets_per_shard(self.cfg.num_sets, self.ndev)
+        # per-home-shard pressure EWMA (admission-throttle signal); a new
+        # mesh starts cold — reshard() assumes the new shards are healthy
+        self.slab_pressure = np.zeros(self.ndev)
         self._run = make_sharded_engine(self.cfg, mesh, axis=self._axis,
                                         cap=self.cap, **self._engine_kwargs)
         # full-cap engine for control-plane sweeps (drain); built lazily
@@ -492,7 +528,6 @@ class ShardedCacheClient:
             else:
                 merged[gk] = list(g)
                 order.append(gk)
-        slab_groups: list[list[list[int]]] = [[] for _ in range(self.ndev)]
         # degraded shards neither host query slabs (a dead device sends
         # nothing) nor answer routed probes (any group homing a chunk there
         # is shed for re-prefill) — see mark_degraded
@@ -503,8 +538,119 @@ class ShardedCacheClient:
             owners = np.asarray(
                 set_index_for(self.cfg, jnp.asarray(keys[:, None]))
             ) // self._s_local
-        if (owners is not None and self.placement == "load"
-                and len(healthy) > 1):
+        placement = self.placement
+        if placement == "split" and (owners is None or len(healthy) < 2):
+            # split needs >= 2 live slabs to fragment across (and a reason
+            # to shed at all); degenerate to the whole-chain load deal —
+            # which itself degenerates to round-robin on one slab — so
+            # 1-device clients keep the atomic shed protocol
+            placement = "load"
+
+        tf = self._transient_fail
+        shed = np.zeros(n, bool)
+        # slab-local chain ids segment on ``seg``: the caller's chain id for
+        # whole-chain groups, a unique fragment id under split placement
+        seg = chain_ids.astype(np.int64, copy=True)
+        counts2d = None     # admitted per-(slab, owner) rows, for pressure
+        hot = np.zeros(self.ndev, bool)   # owners implicated in sheds
+        if placement == "split":
+            slabs, q, k_depth, counts2d = self._place_split(
+                order, merged, is_chain, keys, owners, n, healthy, tf,
+                shed, seg, hot)
+            self.sheds += int(shed.sum())
+        else:
+            slabs, q, k_depth, counts2d = self._place_whole(
+                order, merged, is_chain, owners, n, healthy, placement, tf,
+                shed, hot)
+        self.last_shed = shed
+        if tf is not None:
+            tf[0] -= 1
+            if tf[0] <= 0:
+                self._transient_fail = None
+        if owners is not None and counts2d is not None:
+            self._note_pressure(counts2d,
+                                k_depth if self.cap != "full" else q, hot)
+        bp = q * self.ndev
+        k = np.zeros(bp, np.int32)
+        vv = np.zeros((bp, v), np.int32)
+        oo = np.full(bp, OP_LOOKUP, np.int32)          # padding: no-op probe
+        cc = np.zeros(bp, np.int32)
+        cst = None if costs is None else np.zeros(bp, np.int32)
+        od = n + np.arange(bp, dtype=np.int32)         # padding ranks: last
+        src = np.full(bp, -1, np.int64)                # row -> caller index
+        for d, slab in enumerate(slabs):
+            # renumber chain segments slab-locally: first-row index of the
+            # segment — a whole chain, or one fragment under split
+            # placement (fragments of one chain carry distinct ``seg`` ids,
+            # so each scans as an independent prefix segment)
+            local_first: dict = {}
+            for r, i in enumerate(slab):
+                row = d * q + r
+                k[row] = keys[i]
+                vv[row] = vals[i]
+                oo[row] = ops[i]
+                od[row] = i                            # caller-order rank
+                src[row] = i
+                if cst is not None:
+                    cst[row] = costs[i]
+                if is_chain[i]:
+                    sk = int(seg[i])
+                    local_first.setdefault(sk, r)
+                    cc[row] = local_first[sk]
+        # key+val+op+live[+cost]+order
+        self.route_shape = (q, k_depth,
+                            1 + v + 3 + (0 if costs is None else 1))
+
+        self.table, hit, val, served, ev_val, ev_ok = self._run(
+            self.table, jnp.asarray(k[:, None]), jnp.asarray(vv),
+            jnp.asarray(oo), jnp.asarray(cc), order=jnp.asarray(od),
+            costs=None if cst is None else jnp.asarray(cst))
+        # the pre-check guarantees every admitted row fits its per-peer
+        # buffer; a violation means the host mirror and device ranks drifted
+        assert bool(np.asarray(served)[src >= 0].all()), "client overflow"
+
+        sel = src >= 0
+        rows = np.nonzero(sel)[0]
+        idx = src[rows]
+        hit_u = np.zeros(n, bool)
+        hit_u[idx] = np.asarray(hit)[rows]
+        val_u = np.zeros((n, v), np.int32)
+        if v:
+            val_u[idx] = np.asarray(val)[rows][:, :v]
+        ev_ok_u = np.zeros(n, bool)
+        ev_ok_u[idx] = np.asarray(ev_ok)[rows]
+        ev_val_u = np.zeros((n, v), np.int32)
+        if v:
+            ev_val_u[idx] = np.asarray(ev_val)[rows][:, :v]
+        ev_key = np.where(ev_ok_u[:, None], 0,
+                          EMPTY_KEY).astype(np.int32)
+        ev_key = np.broadcast_to(ev_key, (n, self.cfg.key_planes))
+        return AccessResult(
+            hit=hit_u,
+            value=val_u,
+            pos=np.full(n, -1, np.int32),
+            evicted_key=ev_key,
+            evicted_val=ev_val_u,
+            evicted_valid=ev_ok_u,
+        )
+
+    # -- placement --------------------------------------------------------
+
+    def _place_whole(self, order, merged, is_chain, owners, n, healthy,
+                     placement, tf, shed, hot):
+        """Whole-group placement (``load``/``roundrobin``) plus the
+        host-side shed pre-check: mirror the device's per-(slab, owner)
+        rank counting in slab order, at GROUP granularity — if any row of
+        a group would overflow its owner's per-peer depth, the whole group
+        is shed (atomically) and retried by the serving tier.
+        Degraded-owner groups and injected transient route failures shed
+        through the same path: whole groups, retried next tick, never a
+        half-mutated chain.  Mutates ``shed``/``hot`` in place; returns
+        ``(slabs, q, k_depth, counts2d)`` with ``slabs[d]`` the admitted
+        caller rows of slab ``d`` and ``counts2d`` the admitted
+        per-(slab, owner) row counts (``None`` when no pre-check ran)."""
+        slab_groups: list[list[list[int]]] = [[] for _ in range(self.ndev)]
+        if owners is not None and placement == "load" and len(healthy) > 1:
             # greedy load-aware deal: place each group on the slab where
             # its peak resulting per-owner depth stays smallest — judged
             # on exactly the per-(slab, owner) counts the shed pre-check
@@ -547,21 +693,14 @@ class ShardedCacheClient:
         q = 1 << (q - 1).bit_length()
         k_depth = per_peer_cap(self.cap, q, self.ndev)
 
-        # host-side shed pre-check: mirror the device's per-(slab, owner)
-        # rank counting in slab order, at GROUP granularity — if any row of
-        # a group would overflow its owner's per-peer depth, the whole
-        # group is shed (atomically) and retried by the serving tier.
-        # Degraded-owner groups and injected transient route failures shed
-        # through the same path: whole groups, retried next tick, never a
-        # half-mutated chain.
-        shed = np.zeros(n, bool)
         slabs: list[list[int]] = []
+        counts2d = None
         dg = (np.array(sorted(self.degraded), np.int64)
               if self.degraded else None)
-        tf = self._transient_fail
         if owners is not None:
-            for gs in slab_groups:
-                counts = np.zeros(self.ndev, np.int64)
+            counts2d = np.zeros((self.ndev, self.ndev), np.int64)
+            for di, gs in enumerate(slab_groups):
+                counts = counts2d[di]          # accumulated in place
                 rows: list[int] = []
                 for g in gs:
                     gcnt = np.bincount(owners[g], minlength=self.ndev)
@@ -569,6 +708,7 @@ class ShardedCacheClient:
                         shed[g] = True
                         self.shed_groups += 1
                         self.degraded_sheds += 1
+                        hot[dg[gcnt[dg] > 0]] = True
                         continue
                     if tf is not None and tf[2].random() < tf[1]:
                         shed[g] = True
@@ -578,6 +718,7 @@ class ShardedCacheClient:
                     if self.cap != "full" and np.any(counts + gcnt > k_depth):
                         shed[g] = True
                         self.shed_groups += 1
+                        hot |= counts + gcnt > k_depth
                         continue
                     counts += gcnt
                     rows.extend(g)
@@ -585,72 +726,187 @@ class ShardedCacheClient:
             self.sheds += int(shed.sum())
         else:
             slabs = [[i for g in gs for i in g] for gs in slab_groups]
-        self.last_shed = shed
-        if tf is not None:
-            tf[0] -= 1
-            if tf[0] <= 0:
-                self._transient_fail = None
+        return slabs, q, k_depth, counts2d
 
-        bp = q * self.ndev
-        k = np.zeros(bp, np.int32)
-        vv = np.zeros((bp, v), np.int32)
-        oo = np.full(bp, OP_LOOKUP, np.int32)          # padding: no-op probe
-        cc = np.zeros(bp, np.int32)
-        cst = None if costs is None else np.zeros(bp, np.int32)
-        od = n + np.arange(bp, dtype=np.int32)         # padding ranks: last
-        src = np.full(bp, -1, np.int64)                # row -> caller index
-        for d, slab in enumerate(slabs):
-            # renumber chain ids slab-locally: first-row index of the chain
-            local_first: dict = {}
-            for r, i in enumerate(slab):
-                row = d * q + r
-                k[row] = keys[i]
-                vv[row] = vals[i]
-                oo[row] = ops[i]
-                od[row] = i                            # caller-order rank
-                src[row] = i
-                if cst is not None:
-                    cst[row] = costs[i]
-                if is_chain[i]:
-                    cid = int(chain_ids[i])
-                    local_first.setdefault(cid, r)
-                    cc[row] = local_first[cid]
-        # key+val+op+live[+cost]+order
-        self.route_shape = (q, k_depth,
-                            1 + v + 3 + (0 if costs is None else 1))
+    def _place_split(self, order, merged, is_chain, keys, owners, n,
+                     healthy, tf, shed, seg, hot):
+        """Greedy fragment packing (``placement="split"``): each chain
+        becomes one or more contiguous chunk-run fragments, placed on the
+        slab that extends the run furthest (ties: smallest resulting
+        per-owner peak, fewer slab rows, lowest index) against the same
+        per-(slab, owner) depth mirror the whole-group pre-check counts.
+        Only the un-placeable SUFFIX of chunks sheds — a chunk homed on a
+        degraded shard, or whose owner's buffer is full on every healthy
+        slab, truncates the chain there; everything before it is served.
+        Placement is judged against the even deal's pow2 row budget (same
+        ``cap_rows`` as the load deal) so q — and the all_to_all buffer
+        bytes — match a whole-chain tick's; the soft row-cap fallback can
+        grow q a step, which only ever RAISES the engine's actual per-peer
+        depth, so the mirror stays conservative.  Mutates ``shed`` (suffix
+        rows), ``seg`` (fragment ids — every placed chain row gets one, so
+        each fragment is an independent slab-local chain segment), and
+        ``hot``.  Returns ``(slabs, q, k_depth, counts2d)``."""
+        nh = len(healthy)
+        counts2d = np.zeros((self.ndev, self.ndev), np.int64)
+        rows_ct = np.zeros(self.ndev, np.int64)
+        balanced = (n + nh - 1) // nh
+        cap_rows = 1 << max(0, balanced - 1).bit_length()
+        k_depth = per_peer_cap(self.cap, cap_rows, self.ndev)
+        slabs: list[list[int]] = [[] for _ in range(self.ndev)]
+        next_seg = 0
 
-        self.table, hit, val, served, ev_val, ev_ok = self._run(
-            self.table, jnp.asarray(k[:, None]), jnp.asarray(vv),
-            jnp.asarray(oo), jnp.asarray(cc), order=jnp.asarray(od),
-            costs=None if cst is None else jnp.asarray(cst))
-        # the pre-check guarantees every admitted row fits its per-peer
-        # buffer; a violation means the host mirror and device ranks drifted
-        assert bool(np.asarray(served)[src >= 0].all()), "client overflow"
+        for gk in order:
+            g = merged[gk]
+            if tf is not None and tf[2].random() < tf[1]:
+                shed[g] = True
+                self.shed_groups += 1
+                self.fault_sheds += 1
+                continue
+            if not is_chain[g[0]]:
+                o = int(owners[g[0]])
+                if o in self.degraded:
+                    shed[g] = True
+                    self.shed_groups += 1
+                    self.degraded_sheds += 1
+                    hot[o] = True
+                    continue
+                cands = [d for d in healthy
+                         if counts2d[d, o] + len(g) <= k_depth
+                         and rows_ct[d] + len(g) <= cap_rows]
+                if not cands:
+                    cands = [d for d in healthy
+                             if counts2d[d, o] + len(g) <= k_depth]
+                if not cands:
+                    shed[g] = True
+                    self.shed_groups += 1
+                    hot[o] = True
+                    continue
+                best = min(cands, key=lambda d: (int(counts2d[d, o]),
+                                                 int(rows_ct[d]), d))
+                counts2d[best, o] += len(g)
+                rows_ct[best] += len(g)
+                slabs[best].extend(g)
+                continue
 
-        sel = src >= 0
-        rows = np.nonzero(sel)[0]
-        idx = src[rows]
-        hit_u = np.zeros(n, bool)
-        hit_u[idx] = np.asarray(hit)[rows]
-        val_u = np.zeros((n, v), np.int32)
-        if v:
-            val_u[idx] = np.asarray(val)[rows][:, :v]
-        ev_ok_u = np.zeros(n, bool)
-        ev_ok_u[idx] = np.asarray(ev_ok)[rows]
-        ev_val_u = np.zeros((n, v), np.int32)
-        if v:
-            ev_val_u[idx] = np.asarray(ev_val)[rows][:, :v]
-        ev_key = np.where(ev_ok_u[:, None], 0,
-                          EMPTY_KEY).astype(np.int32)
-        ev_key = np.broadcast_to(ev_key, (n, self.cfg.key_planes))
-        return AccessResult(
-            hit=hit_u,
-            value=val_u,
-            pos=np.full(n, -1, np.int32),
-            evicted_key=ev_key,
-            evicted_val=ev_val_u,
-            evicted_valid=ev_ok_u,
-        )
+            # chunk decomposition: row -> chunk index by first occurrence
+            # of its key (the GET island fixes the chunk order; PUT rows
+            # pair with their chunk by key), so a shed boundary cuts the
+            # SAME suffix out of both islands
+            key_ord: dict[int, int] = {}
+            for i in g:
+                key_ord.setdefault(int(keys[i]), len(key_ord))
+            nch = len(key_ord)
+            ch_of = {i: key_ord[int(keys[i])] for i in g}
+            ch_rows: list[list[int]] = [[] for _ in range(nch)]
+            for i in g:
+                ch_rows[ch_of[i]].append(i)
+            ch_owner = [int(owners[ch_rows[t][0]]) for t in range(nch)]
+            ch_n = [len(ch_rows[t]) for t in range(nch)]
+
+            def extent(d, t, respect_rows):
+                """Longest chunk run [t, e) that fits slab ``d``; returns
+                (e, peak per-owner depth after placing it)."""
+                add: dict[int, int] = {}
+                radd = 0
+                e = t
+                while e < nch:
+                    o_e = ch_owner[e]
+                    if o_e in self.degraded:
+                        break
+                    if counts2d[d, o_e] + add.get(o_e, 0) + ch_n[e] \
+                            > k_depth:
+                        break
+                    if respect_rows and rows_ct[d] + radd + ch_n[e] \
+                            > cap_rows:
+                        break
+                    add[o_e] = add.get(o_e, 0) + ch_n[e]
+                    radd += ch_n[e]
+                    e += 1
+                peak = max((int(counts2d[d, o]) + a
+                            for o, a in add.items()), default=0)
+                return e, peak
+
+            nfrag = 0
+            t = 0
+            while t < nch:
+                if ch_owner[t] in self.degraded:
+                    break                       # suffix from t sheds
+                best = None
+                for soft in (True, False):      # soft row cap only if stuck
+                    for d in healthy:
+                        e, peak = extent(d, t, soft)
+                        if e == t:
+                            continue
+                        cand = ((-(e - t), peak, int(rows_ct[d]), d), d, e)
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                    if best is not None:
+                        break
+                if best is None:
+                    break                       # owner full on every slab
+                _, d, e = best
+                frag = [i for i in g if t <= ch_of[i] < e]
+                for t2 in range(t, e):
+                    counts2d[d, ch_owner[t2]] += ch_n[t2]
+                rows_ct[d] += len(frag)
+                seg[frag] = next_seg
+                next_seg += 1
+                slabs[d].extend(frag)
+                nfrag += 1
+                t = e
+            if nfrag > 1:
+                self.split_chains += 1
+            if t < nch:
+                rest = [i for i in g if ch_of[i] >= t]
+                shed[rest] = True
+                hot[ch_owner[t]] = True
+                if ch_owner[t] in self.degraded:
+                    self.degraded_sheds += 1
+                if t == 0:
+                    self.shed_groups += 1
+                else:
+                    self.partial_sheds += 1
+
+        # q covers both the estimate the mirror packed against and the
+        # actual max slab (the soft row-cap fallback can exceed cap_rows);
+        # a float/"full" cap's engine depth then only grows past the
+        # mirror's k_depth — admitted rows still fit, sheds stay final
+        q = max(cap_rows, max((len(s) for s in slabs), default=1), 1)
+        q = 1 << (q - 1).bit_length()
+        k_depth = per_peer_cap(self.cap, q, self.ndev)
+        return slabs, q, k_depth, counts2d
+
+    def _note_pressure(self, counts2d, depth, hot) -> None:
+        """Fold one tick's admitted per-(slab, owner) counts into the
+        per-home-shard pressure EWMA (owners implicated in capacity or
+        degraded sheds pin to 1.0) and the occupancy peak."""
+        kd = max(1, int(depth))
+        x = np.minimum(counts2d.max(axis=0) / kd, 1.0)
+        x[hot] = 1.0
+        if self.degraded:
+            x[sorted(self.degraded)] = 1.0
+        a = self._pressure_alpha
+        self.slab_pressure = (1.0 - a) * self.slab_pressure + a * x
+        self.slab_occupancy_peak = max(self.slab_occupancy_peak,
+                                       float(counts2d.max() / kd))
+
+    def home_shards(self, chain) -> np.ndarray:
+        """Distinct home shards of ``chain``'s chunk hashes (sorted)."""
+        h = np.asarray(list(chain), np.int32).reshape(-1)
+        if h.size == 0:
+            return np.zeros(0, np.int64)
+        o = np.asarray(set_index_for(self.cfg, jnp.asarray(h[:, None]))
+                       ) // self._s_local
+        return np.unique(o)
+
+    def chain_pressure(self, chain) -> float:
+        """Max ``slab_pressure`` over ``chain``'s home shards — the
+        ``ServeEngine`` admission-throttle signal (0.0 for empty chains
+        or a cold mesh)."""
+        o = self.home_shards(chain)
+        if o.size == 0:
+            return 0.0
+        return float(self.slab_pressure[o].max())
 
     # -- elasticity / fault tolerance -------------------------------------
 
@@ -695,11 +951,19 @@ class ShardedCacheClient:
         lo = shard * self._s_local
         hi = min((shard + 1) * self._s_local, self.cfg.num_sets)
         live = tbl[lo:hi, :, 0] != EMPTY_KEY
-        orphans = ([int(p) for p in tbl[lo:hi, :, kp][live]]
-                   if self.cfg.value_planes else [])
+        # dedupe (first-seen order): with split-placed chains the fragments
+        # of one chain drain/re-home independently, and a caller releasing
+        # each listed orphan must never see one page twice — a double
+        # release would free a page some other entry still references
+        orphans = (list(dict.fromkeys(
+            int(p) for p in tbl[lo:hi, :, kp][live]))
+            if self.cfg.value_planes else [])
         tbl[lo:hi] = 0
         tbl[lo:hi, :, 0] = EMPTY_KEY
         self.table = shard_table(tbl, self.mesh, self._axis)
+        # the lost shard's buffers are gone: pin its pressure so the
+        # serving tier's admission throttle defers chains homing there
+        self.slab_pressure[shard] = 1.0
         return orphans
 
     def _full_engine(self):
@@ -713,7 +977,12 @@ class ShardedCacheClient:
 
     def _sweep_access(self, keys, vals, ops, chain_ids, costs=None):
         """access() with sheds disabled: full cap, degraded and injected
-        faults bypassed.  Used by reshard()'s drain/re-insert sweeps."""
+        faults bypassed.  Used by reshard()'s drain/re-insert sweeps.
+        Split placement is inert here by construction: with cap forced to
+        "full" and no degraded shards the owner mirror is never built, so
+        every chain deals whole (round-robin) regardless of
+        ``self.placement`` — a drain observes each chain as ONE segment
+        even if serving placed it as fragments."""
         run, cap = self._run, self.cap
         degraded, tf = self.degraded, self._transient_fail
         self._run, self.cap = self._full_engine(), "full"
@@ -791,8 +1060,11 @@ class ShardedCacheClient:
             batch.append(c)
             rows += len(c)
         flush()
-        orphans = [int(live_map[k][0]) for k in live_map
-                   if k not in reached]
+        # dedupe for the same reason as mark_degraded: a split-placed
+        # chain's fragments drain independently and the caller releases
+        # each orphan exactly once
+        orphans = list(dict.fromkeys(
+            int(live_map[k][0]) for k in live_map if k not in reached))
         # 3. rebuild on the new mesh, cold
         from repro.launch.mesh import make_cache_mesh
         self.degraded.clear()

@@ -153,7 +153,8 @@ def plan_remesh(n_devices: int, model_parallel: int,
     }
 
 
-def plan_cache_remesh(n_devices: int, num_sets: int) -> dict:
+def plan_cache_remesh(n_devices: int, num_sets: int,
+                      degraded: set | frozenset | None = None) -> dict:
     """Serving-mesh analogue of ``plan_remesh`` for the sharded cache.
 
     The cache mesh is flat 1-D and the table shards by SETS, so — unlike
@@ -162,15 +163,30 @@ def plan_cache_remesh(n_devices: int, num_sets: int) -> dict:
     ``D' * s_local`` rows (``core.sharded``).  The plan reports the shard
     geometry plus how many padded (dead-weight) sets the uneven split
     costs, so a coordinator can decide between resharding to D' now or
-    waiting for a replacement host."""
+    waiting for a replacement host.
+
+    ``degraded`` (shard ids already marked lost on the CURRENT mesh)
+    folds the split-placement picture in: a degraded shard's slab is
+    excluded from fragment packing (``ShardedCacheClient`` places on
+    healthy slabs only), so the plan reports how many slabs split
+    placement can actually use and whether split degenerates to the
+    atomic whole-chain protocol (fewer than 2 healthy slabs)."""
     assert n_devices >= 1 and num_sets >= 1
+    degraded = set() if degraded is None else set(degraded)
+    assert all(0 <= d < n_devices for d in degraded), degraded
     s_local = -(-num_sets // n_devices)
     padded = n_devices * s_local - num_sets
+    healthy = n_devices - len(degraded)
+    assert healthy >= 1, "every shard degraded; nothing to plan"
     return {
         "mesh_shape": (n_devices,),
         "sets_per_shard": s_local,
         "padded_sets": padded,
         "even": padded == 0,
+        "healthy_slabs": healthy,
+        # split placement packs fragments across >= 2 healthy slabs;
+        # below that the client falls back to the atomic shed protocol
+        "split_capable": healthy >= 2,
     }
 
 

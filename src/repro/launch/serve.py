@@ -53,6 +53,16 @@ def main():
     ap.add_argument("--cap", type=float, default=0.0,
                     help="per-peer cap multiplier for --sharded "
                          "(0 = 'full', no shedding)")
+    ap.add_argument("--placement", choices=["load", "roundrobin", "split"],
+                    default=None,
+                    help="sharded chain placement (default: split under a "
+                         "bounded --cap, load otherwise); split packs "
+                         "chunk fragments across slabs and sheds only the "
+                         "un-placeable suffix")
+    ap.add_argument("--throttle-threshold", type=float, default=0.0,
+                    help="owner-aware admission throttling: defer NEW "
+                         "admissions whose home slabs report pressure >= "
+                         "this EWMA level (0 = off; needs --sharded)")
     ap.add_argument("--chaos-seed", type=int, default=-1,
                     help="run under a seeded FaultPlan (requires --sharded); "
                          "faults apply at tick boundaries")
@@ -75,15 +85,22 @@ def main():
             backend = ShardedCacheClient(
                 MSLRUConfig(num_sets=256, m=2, p=4, value_planes=1),
                 make_cache_mesh(args.sharded),
-                cap=(args.cap if args.cap > 0 else "full"))
+                cap=(args.cap if args.cap > 0 else "full"),
+                placement=args.placement)
         pc = PrefixCache(num_sets=256, m=2, p=4,
                          chunk_tokens=args.chunk_tokens, backend=backend)
     if args.kv_mode == "paged" and args.no_prefix_cache:
         ap.error("--kv-mode paged requires the prefix cache (the pool is "
                  "the resident prefix store)")
+    if args.throttle_threshold > 0 and not args.sharded:
+        ap.error("--throttle-threshold needs --sharded (pressure comes "
+                 "from the sharded backend's load mirror)")
     eng = ServeEngine(model, params, slots=4, max_len=256,
                       prefix_cache=pc, pool=pool,
-                      decode_mode=args.decode_mode, kv_mode=args.kv_mode)
+                      decode_mode=args.decode_mode, kv_mode=args.kv_mode,
+                      throttle_threshold=(args.throttle_threshold
+                                          if args.throttle_threshold > 0
+                                          else None))
 
     plan = None
     if args.chaos_seed >= 0:
@@ -125,6 +142,15 @@ def main():
           f"gather_calls={st['gather_calls']} "
           f"resident_kv_peak={st['resident_kv_tokens_peak']} tok "
           f"({st['resident_kv_bytes_peak'] / 2**20:.1f} MiB)")
+    if args.sharded:
+        print(f"[serve] sharded: placement="
+              f"{pc.cache.placement} "
+              f"split_chains={st['split_chains']} "
+              f"partial_sheds={st['partial_sheds']} "
+              f"partial_served={st['partial_served']} "
+              f"slab_occupancy_peak={st['slab_occupancy_peak']:.2f} "
+              f"throttled={st['throttled_admissions']} "
+              f"fallback_rate={st['fallback_rate']:.3f}")
     if pc:
         print(f"[serve] prefix cache: {pc.stats()}")
 

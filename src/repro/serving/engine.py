@@ -116,6 +116,32 @@ owner: it commits the page and writes its content during the borrower's
 prefill.  With no executing borrower the page simply aborts back to the
 pool.
 
+Partial placement (``placement="split"`` backends)
+--------------------------------------------------
+A split-placing backend sheds only a chunk SUFFIX when no single slab
+holds the whole chain; ``serve_chains`` reports the fragment boundary as
+``ChainServe.served_len``.  Such a request is SERVED this tick — it keeps
+its slot, its prefill computes everything past the hit prefix, and only
+the tail chunk *inserts* are deferred: their reserved pages commit, the
+owner writes their content, and the inserts re-run in one batched
+``insert_chains`` at the next tick boundary (``_flush_pending_inserts``).
+A served borrower whose CHAIN_PUT raced a tail chunk in is promoted
+exactly like the whole-shed corner above.  This replaces the shed → 3
+retries → permanent plain fallback odyssey with a one-tick insert delay,
+and tokens stay bit-identical (hits always return content-valid pages).
+
+Owner-aware admission throttling (``throttle_threshold``)
+---------------------------------------------------------
+The backend's per-(slab, owner) load mirror feeds a per-home-slab
+pressure EWMA (``ShardedCacheClient.chain_pressure``).  When enabled, the
+admission pop scans the queue for the first NEW request whose home slabs
+are below the threshold, deferring hot-homed requests (counted in
+``stats()["throttled_admissions"]``) so a saturated slab stops thrashing
+retries.  Retries and fallbacks are never throttled, a request skipped
+``max_throttle_ticks`` times is exempt, and an all-hot queue admits its
+front request rather than idle a slot — throttling only ever REORDERS
+admissions, so every request still completes.
+
 ``admit_batching=False`` degrades to one-at-a-time split admission (the
 equivalence baseline); ``admit_mode="split"`` keeps PR-2's batched
 3-call path (one LOOKUP + one GET + one ACCESS per tick — no retry: on
@@ -155,6 +181,10 @@ class Request:
     force_plain: bool = False    # bypass the prefix cache (shed fallback)
     submit_tick: int = -1        # engine tick the request was queued
     admit_tick: int = -1         # tick it was actually served (post-sheds)
+    throttle_ticks: int = 0      # admission scans that skipped this request
+    #   because its home slabs were saturated (owner-aware throttling)
+    chain_hashes: list | None = None  # cached chunk-chain hashes (throttle
+    #   scans probe backend pressure per queue entry without re-hashing)
 
     @property
     def service_ticks(self) -> int:
@@ -390,7 +420,9 @@ class ServeEngine:
                  admit_batching: bool = True, admit_mode: str | None = None,
                  overlap_decode: bool = True, max_shed_retries: int = 3,
                  decode_mode: str = "inflight", kv_mode: str = "contiguous",
-                 tail_tokens: int | None = None, paged_kernel: bool = False):
+                 tail_tokens: int | None = None, paged_kernel: bool = False,
+                 throttle_threshold: float | None = None,
+                 max_throttle_ticks: int = 8):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -471,6 +503,18 @@ class ServeEngine:
         self.launch_rows = 0         # active rows computed across launches
         self._last_tok = np.zeros((slots, 1), np.int32)  # per-slot last token
         self._service_ticks: list[int] = []  # per-request admit latencies
+        # owner-aware admission throttling: defer NEW admissions whose home
+        # slabs report pressure >= threshold (backend ``chain_pressure``
+        # EWMA), in favor of requests the backend can serve now.  ``None``
+        # (default) disables it; retries/fallbacks are never throttled and
+        # a request skipped ``max_throttle_ticks`` times is exempt.
+        self.throttle_threshold = throttle_threshold
+        self.max_throttle_ticks = max_throttle_ticks
+        self.throttled_admissions = 0
+        # partial-placement tails: chunk inserts a split-placing backend
+        # shed this tick; their pages are committed + written and the
+        # inserts re-run at the NEXT tick boundary (one batched call)
+        self._pending_inserts: list[dict] = []
         self.fallbacks = 0           # requests that exhausted shed retries
         self.fault_log: list[tuple[int, str]] = []  # (tick, event) applied
         self.pool_exhausted = 0      # chunks that ended a tick unfunded
@@ -728,6 +772,7 @@ class ServeEngine:
         # --- reconcile reservations --------------------------------------
         published: dict[int, tuple[int, int]] = {}   # hash -> (owner c, page)
         to_write: list[list[tuple[int, int]]] = [[] for _ in pref]
+        pend_tail: dict[int, list[tuple[int, int, int]]] = {}  # c -> (t,h,pg)
         for c, chain in enumerate(chains):
             r = results[c]
             for t, (pg, is_own) in enumerate(zip(staged[c], own[c])):
@@ -741,7 +786,8 @@ class ServeEngine:
                     promoted = False
                     for c2, t2 in borrowers.get(chain[t], []):
                         r2 = results[c2]
-                        if r2.shed or t2 < r2.hitlen or t2 >= len(r2.puts):
+                        if (r2.shed or t2 >= len(r2.puts)
+                                or r2.puts[t2] is None):
                             continue       # borrower row did not insert
                         absorbed2, stored2 = r2.puts[t2]
                         if absorbed2 and stored2 != pg:
@@ -758,6 +804,36 @@ class ServeEngine:
                 if t < r.hitlen:
                     self.pool.abort(pg)    # chunk was already cached
                     continue
+                if r.puts[t] is None:
+                    # split placement shed the chunk SUFFIX: the owner is
+                    # served (its prefill computes this chunk's content) but
+                    # the insert never reached the table.  If a served
+                    # borrower's CHAIN_PUT raced it in, promote that
+                    # borrower (as in the whole-shed path); otherwise keep
+                    # the page — the owner writes its content and the
+                    # insert re-runs at the next tick boundary.
+                    landed = False
+                    for c2, t2 in borrowers.get(chain[t], []):
+                        r2 = results[c2]
+                        if (r2.shed or t2 >= len(r2.puts)
+                                or r2.puts[t2] is None):
+                            continue       # borrower row did not insert
+                        absorbed2, stored2 = r2.puts[t2]
+                        if absorbed2 and stored2 != pg:
+                            self.pool.abort(pg)  # resident under another pg
+                        else:
+                            self.pool.commit(pg)
+                            if pg not in evicted_set:
+                                to_write[c2].append((t2, pg))
+                                published[chain[t]] = (c2, pg)
+                        landed = True
+                        break
+                    if not landed:
+                        self.pool.commit(pg)
+                        to_write[c].append((t, pg))
+                        published[chain[t]] = (c, pg)
+                        pend_tail.setdefault(c, []).append((t, chain[t], pg))
+                    continue
                 absorbed, stored = r.puts[t]
                 if absorbed and stored != pg:
                     self.pool.abort(pg)    # resident past the miss; recycle
@@ -772,6 +848,27 @@ class ServeEngine:
                     to_write[c].append((t, pg))
                     published[chain[t]] = (c, pg)
 
+        # --- partial tails: queue the shed inserts for the next tick ------
+        # a split-placed chain is SERVED this tick (slot kept, prefill
+        # computes everything); only the tail chunk INSERTS re-run, as one
+        # batched ``insert_chains`` at the next tick boundary.  Contiguous
+        # depth runs keep the per-chunk cost plumbing exact.
+        for c, rows in pend_tail.items():
+            run: list[tuple[int, int, int]] = []
+            for t, h, pg in rows:
+                if run and t != run[-1][0] + 1:
+                    self._pending_inserts.append({
+                        "hashes": [x[1] for x in run],
+                        "pages": [x[2] for x in run],
+                        "depth": run[0][0], "chain_len": len(chains[c])})
+                    run = []
+                run.append((t, h, pg))
+            if run:
+                self._pending_inserts.append({
+                    "hashes": [x[1] for x in run],
+                    "pages": [x[2] for x in run],
+                    "depth": run[0][0], "chain_len": len(chains[c])})
+
         # --- shed chains: release the slot, retry next tick ---------------
         for c, req in enumerate(pref):
             if results[c].shed:
@@ -784,6 +881,12 @@ class ServeEngine:
         retry: list[tuple[int, int, list[int], list[int]]] = []
         for c, chain in enumerate(chains):
             if results[c].shed:
+                continue
+            sl = results[c].served_len
+            if sl is not None and sl < len(chain):
+                # partially-placed chain: the pending-insert flush owns its
+                # tail — re-inserting past the boundary this tick would
+                # land chunks out of prefix order on the saturated slab
                 continue
             start = max(results[c].hitlen, len(staged[c]))
             sub_h: list[int] = []
@@ -1033,6 +1136,57 @@ class ServeEngine:
         self.launch_rows += len(self.active)
         return np.asarray(jnp.argmax(logits, -1)), cache
 
+    def _flush_pending_inserts(self):
+        """Re-run the tail-chunk inserts a split-placing backend shed last
+        tick, in ONE batched ``insert_chains`` call.  The pages are already
+        committed and hold real content; an insert that is absorbed
+        (duplicate), evicts a victim, or sheds AGAIN returns pages for the
+        pool to recycle — ``insert_chains``' standard protocol — so the
+        ``free + refcount == n_pages`` invariant holds on every outcome."""
+        if not self._pending_inserts:
+            return
+        pend, self._pending_inserts = self._pending_inserts, []
+        recycled = self.prefix_cache.insert_chains(
+            [p["hashes"] for p in pend], [p["pages"] for p in pend],
+            depths=[p["depth"] for p in pend],
+            chain_lens=[p["chain_len"] for p in pend])
+        for pg in recycled:
+            self.pool.release(pg)
+
+    def _pop_admission(self) -> Request:
+        """Pop the next NEW request for admission.  With owner-aware
+        throttling on (``throttle_threshold``), scan past requests whose
+        home slabs are saturated (backend ``chain_pressure`` EWMA >= the
+        threshold) to the first one the backend can serve now.  Retries
+        drain from ``retry_queue`` before this runs and fallbacks bypass
+        the cache, so neither is ever throttled; a request skipped
+        ``max_throttle_ticks`` times is starvation-exempt; and when EVERY
+        queued request is hot the front one admits anyway — a hot admit
+        beats an idle slot."""
+        thr = self.throttle_threshold
+        press = getattr(getattr(self.prefix_cache, "cache", None),
+                        "chain_pressure", None)
+        if thr is None or press is None or not self.use_prefix:
+            return self.queue.pop(0)
+        ct = self.prefix_cache.chunk_tokens
+        pick = None
+        for i, r in enumerate(self.queue):
+            if (r.force_plain or len(r.prompt) < ct
+                    or r.throttle_ticks >= self.max_throttle_ticks):
+                pick = i
+                break
+            if r.chain_hashes is None:
+                r.chain_hashes = chunk_chain_hashes(r.prompt, ct)
+            if press(r.chain_hashes) < thr:
+                pick = i
+                break
+        if pick is None:
+            pick = 0                       # all hot: admit the front anyway
+        for r in self.queue[:pick]:
+            r.throttle_ticks += 1
+        self.throttled_admissions += pick
+        return self.queue.pop(pick)
+
     # -- main loop -------------------------------------------------------------
     def step(self):
         """One engine tick: admit all free slots, then ONE decode launch.
@@ -1055,10 +1209,11 @@ class ServeEngine:
         waves run concurrently with decode on device; borrower slots
         admitted by those later waves owe this tick's token and get one
         follow-up launch (the only case a tick costs 2 launches)."""
+        self._flush_pending_inserts()
         admits = []
         while self._free_slots and (self.retry_queue or self.queue):
-            src = self.retry_queue if self.retry_queue else self.queue
-            req = src.pop(0)
+            src = self.retry_queue if self.retry_queue else None
+            req = src.pop(0) if src is not None else self._pop_admission()
             if (req.shed_count >= self.max_shed_retries
                     and not req.force_plain):
                 # guaranteed progress: plain (cache-less) prefill.  The
@@ -1221,7 +1376,8 @@ class ServeEngine:
         (``launch.elastic.FaultPlan``) injects scheduled faults at their
         tick boundaries — before the tick's admissions, never mid-call."""
         t = 0
-        while (self.queue or self.retry_queue or self.active) and t < max_ticks:
+        while (self.queue or self.retry_queue or self.active
+               or self._pending_inserts) and t < max_ticks:
             if fault_plan is not None:
                 for ev in fault_plan.pop_due(self.ticks):
                     self.apply_fault(ev)
@@ -1233,6 +1389,7 @@ class ServeEngine:
         """Serve-side counters: launch economics (the in-flight batching
         win) and per-request admit latency (shed/queue starvation)."""
         p50, p99 = service_tick_percentiles(self._service_ticks)
+        backend = getattr(self.prefix_cache, "cache", None)
         return {
             "ticks": self.ticks,
             "decode_launches": self.decode_launches,
@@ -1244,6 +1401,20 @@ class ServeEngine:
                                    if self.decode_tokens else 0.0),
             "requests_serviced": len(self._service_ticks),
             "fallbacks": self.fallbacks,
+            # fraction of serviced requests that exhausted shed retries and
+            # fell back to plain prefill — the metric split placement and
+            # throttling exist to shrink
+            "fallback_rate": (self.fallbacks / len(self._service_ticks)
+                              if self._service_ticks else 0.0),
+            "throttled_admissions": self.throttled_admissions,
+            # split-placement / pressure counters, mirrored from a sharded
+            # backend when one is attached (0 otherwise)
+            "split_chains": getattr(backend, "split_chains", 0),
+            "partial_sheds": getattr(backend, "partial_sheds", 0),
+            "slab_occupancy_peak": getattr(backend, "slab_occupancy_peak",
+                                           0.0),
+            "partial_served": getattr(self.prefix_cache, "partial_served",
+                                      0),
             "service_ticks_p50": p50,
             "service_ticks_p99": p99,
             "kv_mode": self.kv_mode,

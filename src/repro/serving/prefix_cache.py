@@ -57,6 +57,17 @@ keeps the retry queue; pass ``retries`` flags so ``stats()["retried"]``
 counts re-submissions).  ``stats()`` reports ``shed`` (chain-events) and
 ``retried`` alongside the hit/miss/eviction counters, so benchmarks can
 report shed rate against hit-ratio and buffer-memory curves.
+
+A SPLIT-placing backend (``placement="split"``) sheds only a chunk
+SUFFIX: the client places prefix-closed fragments across slabs and marks
+the un-placeable tail rows shed, consistently in both the GET and PUT
+islands.  ``serve_chains`` truncates the chain at the first shed row —
+``ChainServe.served_len`` is that fragment boundary — serving the prefix
+normally (hitlen is the LEADING hit run within the served prefix; a
+later fragment's hits past an earlier fragment's miss are discarded to
+keep the longest-hit-prefix contract) while only the tail chunks need
+re-queueing.  ``stats()["partial_served"]`` counts these boundary
+serves; ``shed`` still counts only whole-chain drops.
 """
 
 from __future__ import annotations
@@ -108,19 +119,25 @@ class ChainServe:
     """Per-chain outcome of a fused tick: ``pages`` (the longest-hit
     prefix's page values, promoted), ``hitlen``, and ``puts`` — one entry
     per staged chunk: ``None`` if the row did not execute (inside the hit
-    prefix), else ``(absorbed, stored_value)`` where ``absorbed`` means the
-    insert hit an already-resident chunk and ``stored_value`` is the page
-    the cache actually holds for it.  ``shed=True`` means a capacity-
-    bounded backend dropped the WHOLE chain this tick (no row executed, no
-    stats counted) — re-submit it next tick."""
+    prefix, or past ``served_len``), else ``(absorbed, stored_value)``
+    where ``absorbed`` means the insert hit an already-resident chunk and
+    ``stored_value`` is the page the cache actually holds for it.
+    ``served_len`` is the chunk count the backend actually placed: a
+    split-placing backend may shed only a chunk SUFFIX, in which case the
+    chain is served up to that boundary (``served_len < n``, ``shed``
+    False) and the caller re-queues just the tail inserts.  ``None`` means
+    the whole chain executed.  ``shed=True`` means the backend dropped the
+    WHOLE chain this tick (``served_len == 0`` — no row executed, no stats
+    counted) — re-submit it next tick."""
 
-    __slots__ = ("pages", "hitlen", "puts", "shed")
+    __slots__ = ("pages", "hitlen", "puts", "shed", "served_len")
 
-    def __init__(self, pages, hitlen, puts, shed=False):
+    def __init__(self, pages, hitlen, puts, shed=False, served_len=None):
         self.pages = pages
         self.hitlen = hitlen
         self.puts = puts
         self.shed = shed
+        self.served_len = 0 if shed else served_len
 
 
 class PrefixCache:
@@ -148,7 +165,9 @@ class PrefixCache:
         self.misses = 0
         self.evictions = 0
         self.device_calls = 0
-        self.shed = 0      # chain-events a bounded backend dropped
+        self.shed = 0      # chain-events a bounded backend dropped whole
+        self.partial_served = 0  # chains served up to a fragment boundary
+        #   with only the tail chunks shed (split placement)
         self.retried = 0   # chains re-submitted after a shed
         self.fallbacks = 0  # requests that exhausted shed retries and fell
         #   back to plain (cache-less) prefill — ServeEngine.note_fallback
@@ -332,18 +351,28 @@ class PrefixCache:
         evicted = [int(x) for x, ok in zip(ev_val, ev_ok) if bool(ok)]
         self.evictions += len(evicted)
 
-        # a shed is whole-chain (the client drops groups atomically): any
-        # shed row of a chain means none of its rows executed
-        chain_shed = np.zeros(len(chains), bool)
+        # shed boundary per chain: a split-placing backend sheds a chunk
+        # SUFFIX consistently across both islands, so the first shed row
+        # (in either island) truncates the chain at that chunk; an atomic
+        # whole-chain shed (or transient route loss) lands the boundary at
+        # 0 and keeps the legacy ChainServe(shed=True) protocol
+        clens = np.array([len(c) for c in chains], np.int64)
+        sl = clens.copy()                      # served-chunk boundaries
         i = 0
         for c, chain in enumerate(chains):
-            chain_shed[c] = bool(shed[i: i + len(chain)].any())
+            s = shed[i: i + len(chain)]
+            if s.any():
+                sl[c] = min(sl[c], int(np.argmax(s)))
             i += len(chain)
         for c, chain in enumerate(chains):
             m = min(len(staged[c]), len(chain))
-            chain_shed[c] |= bool(shed[i: i + m].any())
+            s = shed[i: i + m]
+            if s.any():
+                sl[c] = min(sl[c], int(np.argmax(s)))
             i += m
+        chain_shed = (sl == 0) & (clens > 0)
         self.shed += int(chain_shed.sum())
+        self.partial_served += int(((sl > 0) & (sl < clens)).sum())
         self._note_chains(chains, skip=chain_shed)
 
         results: list[ChainServe] = []
@@ -354,13 +383,20 @@ class PrefixCache:
                 results.append(ChainServe([], 0, [], shed=True))
                 i += n
                 continue
-            k = int(hit[i: i + n].sum())       # leading run by construction
+            s = int(sl[c])
+            # leading hit run of the SERVED prefix: under split placement a
+            # later fragment's GET rows can hit past an earlier fragment's
+            # miss — the longest-hit-prefix contract discards those, so
+            # served pages and stats never jump a gap (atomic backends
+            # yield a leading run by construction, same count as before)
+            hseg = hit[i: i + s]
+            k = s if hseg.all() else int(np.argmin(hseg))
             pages = [int(x) for x in val[i: i + k]]
             self.hits += k
             if k < n:
                 self.misses += 1
             self._account_reprefill(chain, k)
-            results.append(ChainServe(pages, k, []))
+            results.append(ChainServe(pages, k, [], served_len=s))
             i += n
         for c, chain in enumerate(chains):
             m = min(len(staged[c]), len(chain))
@@ -368,9 +404,10 @@ class PrefixCache:
                 i += m
                 continue
             k = results[c].hitlen
+            s = int(sl[c])
             puts = []
             for t in range(m):
-                if t < k:
+                if t < k or t >= s:
                     puts.append(None)          # row did not execute
                 else:
                     puts.append((bool(hit[i + t]), int(val[i + t])))
@@ -526,6 +563,7 @@ class PrefixCache:
             "evictions": self.evictions,
             "occupancy": self.cache.occupancy,
             "shed": self.shed,
+            "partial_served": self.partial_served,
             "retried": self.retried,
             "fallbacks": self.fallbacks,
             "service_ticks_p50": p50,

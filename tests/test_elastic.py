@@ -133,13 +133,30 @@ def test_plan_remesh_keeps_tp_degree():
 def test_plan_cache_remesh_even_and_uneven():
     even = plan_cache_remesh(n_devices=8, num_sets=1024)
     assert even == {"mesh_shape": (8,), "sets_per_shard": 128,
-                    "padded_sets": 0, "even": True}
+                    "padded_sets": 0, "even": True,
+                    "healthy_slabs": 8, "split_capable": True}
     odd = plan_cache_remesh(n_devices=7, num_sets=1024)
     assert odd["sets_per_shard"] == 147          # ceil(1024/7)
     assert odd["padded_sets"] == 7 * 147 - 1024
     assert not odd["even"]
     one = plan_cache_remesh(n_devices=1, num_sets=64)
     assert one["sets_per_shard"] == 64 and one["even"]
+
+
+def test_plan_cache_remesh_degraded_slabs_gate_split():
+    """Degraded shards drop out of the healthy-slab count; split placement
+    needs >= 2 healthy slabs (below that the client degenerates to the
+    atomic whole-chain protocol), and an all-degraded mesh is a planning
+    error, mirroring ``ShardedCacheClient.access``'s assertion."""
+    p = plan_cache_remesh(4, 256, degraded={3})
+    assert p["healthy_slabs"] == 3 and p["split_capable"]
+    p = plan_cache_remesh(2, 256, degraded={0})
+    assert p["healthy_slabs"] == 1 and not p["split_capable"]
+    assert plan_cache_remesh(1, 64)["split_capable"] is False
+    with pytest.raises(AssertionError):
+        plan_cache_remesh(2, 256, degraded={0, 1})
+    with pytest.raises(AssertionError):
+        plan_cache_remesh(2, 256, degraded={5})
 
 
 def test_plan_cache_remesh_matches_sets_per_shard():
