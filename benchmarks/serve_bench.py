@@ -45,15 +45,30 @@ chunks), ``evicted_cost``, hit ratio, and goodput (decode tokens per
 tick); the token streams must be identical — the policy changes what
 prefill recomputes, never what the model emits.
 
-``run()`` merges all three sweeps into BENCH_serve.json at the repo root;
+A fourth sweep measures megastep decode (``decode_mode="megastep"``):
+long-generation requests drain the queue early, so most ticks are pure
+decode and the engine fuses them into device-side ``lax.scan`` windows —
+one launch and ONE host sync per window instead of per tick.  The sweep
+drives windows ∈ {1, 4, 16} against the in-flight oracle and reports
+``drain_launches_per_token`` (active rows per token on ticks where
+nothing queues — falls toward 1/K), ``host_syncs``, window count and
+mean span, plus a paged pair (megastep over block tables vs paged
+in-flight).  Tokens must be bit-identical to in-flight in every
+configuration — fusion changes launch economics, never the stream.
+
+``run()`` merges all four sweeps into BENCH_serve.json at the repo root;
 ``--smoke`` uses the tiny CI traces (entry blocks ``smoke``,
-``paged_smoke``, and ``cost_smoke``).  ``--check`` recomputes the smoke
-blocks and fails (exit 1) if the in-flight ``launches_per_token`` exceeds
-1.05, ticks-to-drain regresses past 1.1× the committed entry, any sweep's
-token streams diverge, the paged drive made any ``gather_pages`` copy,
-the paged/contiguous resident-KV-bytes ratio exceeds 0.5, the cost
-policy's ``reprefill_flops`` exceeds 0.9× uniform, or its drain slows
-beyond 1.05× (the differential oracles riding along in CI).
+``paged_smoke``, ``cost_smoke``, and ``mega_smoke``).  ``--check``
+recomputes the smoke blocks and fails (exit 1) if the in-flight
+``launches_per_token`` exceeds 1.05, ticks-to-drain regresses past 1.1×
+the committed entry, any sweep's token streams diverge, the paged drive
+made any ``gather_pages`` copy, the paged/contiguous resident-KV-bytes
+ratio exceeds 0.5, the cost policy's ``reprefill_flops`` exceeds 0.9×
+uniform, its drain slows beyond 1.05×, a megastep window's
+``drain_launches_per_token`` lands above BOTH 1.1/K and 1.1× the
+committed entry (or above the 0.3 absolute bar for K ≥ 4), or its
+``host_syncs`` regress past 1.1× committed (the differential oracles
+riding along in CI).
 """
 
 from __future__ import annotations
@@ -102,11 +117,25 @@ COST_FULL = dict(requests=32, slots=4, templates=6, max_tail=8,
 COST_SMOKE = dict(requests=20, slots=4, templates=6, max_tail=8,
                   max_new_lo=3, max_new_hi=7, cycle=True)
 
+# megastep sweep: LONG generations (16..24 new tokens) so the queue
+# drains early and most ticks are pure decode — the fused-window regime.
+# Window remainders (ceil(rem/K) misalignment across slots) keep the
+# measured drain rows/token a bit above the ideal 1/K at K=16, so the
+# gate is "ideal OR committed", never "exactly 1/K".
+MEGA_WINDOWS = (1, 4, 16)
+MEGA_FULL = dict(requests=24, slots=8, max_tail=28,
+                 max_new_lo=16, max_new_hi=25)
+MEGA_SMOKE = dict(requests=8, slots=4, max_tail=16,
+                  max_new_lo=16, max_new_hi=23)
+
 LAUNCHES_PER_TOKEN_BUDGET = 1.05
 TICKS_BUDGET_FACTOR = 1.1
 RESIDENT_RATIO_BUDGET = 0.5
 REPREFILL_RATIO_BUDGET = 0.9   # cost policy must cut re-prefill FLOPs >=10%
 GOODPUT_FACTOR = 1.05          # ...without slowing the drain beyond 5%
+MEGA_DRAIN_FACTOR = 1.1        # drain rows/token <= 1.1/K (or committed x1.1)
+MEGA_DRAIN_ABS_BUDGET = 0.3    # absolute bar for K >= 4 (acceptance line)
+HOST_SYNCS_FACTOR = 1.1        # host_syncs <= committed x1.1
 
 
 def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
@@ -143,7 +172,7 @@ def _workload(cfg, shape: dict, prefix_chunks: int = PREFIX_CHUNKS):
 
 def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
            prefix_chunks: int = PREFIX_CHUNKS, cost_aware: bool = False,
-           num_sets: int = 64) -> dict:
+           num_sets: int = 64, max_window: int = 16) -> dict:
     import jax
     from repro.configs import get_config
     from repro.models.model import make_model
@@ -159,7 +188,7 @@ def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
                      cost_aware=cost_aware)
     eng = ServeEngine(model, params, slots=shape["slots"], max_len=128,
                       prefix_cache=pc, pool=pool, decode_mode=mode,
-                      kv_mode=kv_mode)
+                      kv_mode=kv_mode, max_window=max_window)
     for i, (prompt, max_new) in enumerate(_workload(cfg, shape,
                                                     prefix_chunks)):
         eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
@@ -182,6 +211,12 @@ def _drive(mode: str, shape: dict, kv_mode: str = "contiguous",
         "resident_kv_bytes_peak": st["resident_kv_bytes_peak"],
         "reprefill_flops": st["reprefill_flops"],
         "evicted_cost": st["evicted_cost"],
+        "host_syncs": st["host_syncs"],
+        "megastep_windows": st["megastep_windows"],
+        "mean_window": round(st["mean_window"], 3),
+        "drain_launch_rows": st["drain_launch_rows"],
+        "drain_decode_tokens": st["drain_decode_tokens"],
+        "drain_launches_per_token": round(st["drain_launches_per_token"], 4),
         "goodput": round(st["decode_tokens"] / max(1, ticks), 4),
         "seconds": round(dt, 3),
         "tokens": {str(r.rid): r.out_tokens for r in eng.finished},
@@ -237,6 +272,33 @@ def _sweep_cost(shape: dict) -> dict:
     return out
 
 
+def _sweep_mega(shape: dict) -> dict:
+    """Megastep vs in-flight launch economics on the long-generation
+    trace: every window size must emit the in-flight oracle's exact
+    token streams while cutting drain-phase launches and host syncs
+    toward 1/K; a paged pair rides along (megastep over block tables
+    must match paged in-flight bit-for-bit with zero gathers)."""
+    out = {"windows": list(MEGA_WINDOWS)}
+    base = _drive("inflight", shape)
+    out["inflight"] = base
+    match_all = True
+    for w in MEGA_WINDOWS:
+        r = _drive("megastep", shape, max_window=w)
+        r["tokens_match"] = r["tokens"] == base["tokens"]
+        match_all = match_all and r["tokens_match"]
+        out[f"megastep_w{w}"] = r
+    pbase = _drive("inflight", shape, kv_mode="paged")
+    pmega = _drive("megastep", shape, kv_mode="paged",
+                   max_window=MEGA_WINDOWS[-1])
+    out["paged_tokens_match"] = pbase["tokens"] == pmega["tokens"]
+    out["paged_megastep"] = pmega
+    out["tokens_match"] = match_all and out["paged_tokens_match"]
+    del base["tokens"], pmega["tokens"]
+    for w in MEGA_WINDOWS:
+        del out[f"megastep_w{w}"]["tokens"]
+    return out
+
+
 def run(force: bool = False, smoke: bool = False):
     key = "smoke" if smoke else "entries"
     shape = SMOKE if smoke else FULL
@@ -244,6 +306,8 @@ def run(force: bool = False, smoke: bool = False):
     pshape = PAGED_SMOKE if smoke else PAGED_FULL
     ckey = "cost_smoke" if smoke else "cost"
     cshape = COST_SMOKE if smoke else COST_FULL
+    mkey = "mega_smoke" if smoke else "mega"
+    mshape = MEGA_SMOKE if smoke else MEGA_FULL
 
     res = cached(f"serve_bench_{key}", lambda: _sweep(shape), force)
     _emit_bench_json(res, key)
@@ -251,7 +315,9 @@ def run(force: bool = False, smoke: bool = False):
     _emit_bench_json(pres, pkey)
     cres = cached(f"serve_bench_{ckey}", lambda: _sweep_cost(cshape), force)
     _emit_bench_json(cres, ckey)
-    return dict(res, paged=pres, cost=cres)
+    mres = cached(f"serve_bench_{mkey}", lambda: _sweep_mega(mshape), force)
+    _emit_bench_json(mres, mkey)
+    return dict(res, paged=pres, cost=cres, mega=mres)
 
 
 def _emit_bench_json(res: dict, key: str) -> None:
@@ -275,9 +341,11 @@ def _emit_bench_json(res: dict, key: str) -> None:
 def check(res: dict, committed_doc: dict) -> list[str]:
     """CI gate on the smoke blocks: in-flight decode stays at ~1 launch of
     useful rows per token (≤ 1.05), drains within 1.1× the committed
-    ticks, both sweeps' token streams match their oracles, paged makes
-    zero ``gather_pages`` copies, and paged resident KV bytes stay ≤ 0.5×
-    contiguous."""
+    ticks, every sweep's token streams match their oracles, paged makes
+    zero ``gather_pages`` copies, paged resident KV bytes stay ≤ 0.5×
+    contiguous, and megastep windows keep their drain launch economics
+    (≤ 1.1/K or committed ×1.1; absolute 0.3 for K ≥ 4) and host-sync
+    counts (≤ committed ×1.1)."""
     problems = []
     inf = res.get("inflight", {})
     if inf.get("launches_per_token", 99.0) > LAUNCHES_PER_TOKEN_BUDGET:
@@ -323,6 +391,43 @@ def check(res: dict, committed_doc: dict) -> list[str]:
         problems.append(
             f"cost-policy ticks_to_drain {cc.get('ticks_to_drain')} > "
             f"uniform {cu.get('ticks_to_drain')} * {GOODPUT_FACTOR}")
+    mega = res.get("mega", {})
+    cm = committed_doc.get("mega_smoke", {})
+    for w in MEGA_WINDOWS:
+        r = mega.get(f"megastep_w{w}", {})
+        if not r.get("tokens_match", False):
+            problems.append(f"megastep w={w} tokens diverge from the "
+                            "in-flight oracle")
+        d = r.get("drain_launches_per_token", 99.0)
+        ref = cm.get(f"megastep_w{w}")
+        if ref is None:
+            problems.append(f"no committed mega_smoke 'megastep_w{w}' "
+                            "entry to compare")
+        else:
+            # window remainders keep K=16 a bit above the ideal 1/K, so
+            # fail only when the drive is worse than BOTH the ideal and
+            # the committed entry's 1.1x band
+            ideal = MEGA_DRAIN_FACTOR / w
+            band = (ref["drain_launches_per_token"]
+                    * MEGA_DRAIN_FACTOR + 1e-9)
+            if d > ideal and d > band:
+                problems.append(
+                    f"megastep w={w} drain_launches_per_token {d} > "
+                    f"{MEGA_DRAIN_FACTOR}/{w} and > committed "
+                    f"{ref['drain_launches_per_token']} x "
+                    f"{MEGA_DRAIN_FACTOR}")
+            hs_band = ref["host_syncs"] * HOST_SYNCS_FACTOR + 1e-9
+            if r.get("host_syncs", 10**9) > hs_band:
+                problems.append(
+                    f"megastep w={w} host_syncs {r.get('host_syncs')} > "
+                    f"committed {ref['host_syncs']} x {HOST_SYNCS_FACTOR}")
+        if w >= 4 and d > MEGA_DRAIN_ABS_BUDGET:
+            problems.append(
+                f"megastep w={w} drain_launches_per_token {d} > absolute "
+                f"budget {MEGA_DRAIN_ABS_BUDGET}")
+    if not mega.get("paged_tokens_match", False):
+        problems.append("paged megastep tokens diverge from the paged "
+                        "in-flight oracle")
     return problems
 
 
@@ -380,6 +485,28 @@ def report(res: dict) -> list[str]:
             f"  reprefill_ratio={cost.get('reprefill_ratio')} "
             f"(budget {REPREFILL_RATIO_BUDGET}) "
             f"tokens_match={cost.get('tokens_match')}")
+    mega = res.get("mega")
+    if mega:
+        lines.append("megastep vs in-flight (long generations, drain-phase"
+                     " fusion)")
+        names = ["inflight"] + [f"megastep_w{w}"
+                                for w in mega.get("windows", MEGA_WINDOWS)]
+        for name in names:
+            r = mega.get(name)
+            if not r:
+                continue
+            lines.append(
+                f"  {name:12s} launches={r['decode_launches']:4d} "
+                f"drain rows/token={r['drain_launches_per_token']:.3f} "
+                f"host_syncs={r['host_syncs']:4d} "
+                f"windows={r['megastep_windows']:3d} "
+                f"mean_window={r['mean_window']:.1f} "
+                f"ticks={r['ticks_to_drain']:4d}")
+        lines.append(
+            f"  tokens_match={mega.get('tokens_match')} "
+            f"paged_tokens_match={mega.get('paged_tokens_match')} "
+            f"(drain budget {MEGA_DRAIN_FACTOR}/K, abs "
+            f"{MEGA_DRAIN_ABS_BUDGET} for K>=4)")
     return lines
 
 

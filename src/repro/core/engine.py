@@ -201,6 +201,39 @@ no new table semantics:
   ``max_shed_retries`` (permanently homed on a dead shard) is served as
   a PLAIN prefill — counted in ``fallbacks`` with its latency charged
   from the ORIGINAL submit tick — never dropped.
+
+Megastep decode (the serving tier's launch amortization)
+--------------------------------------------------------
+The serving tier (serving/engine.py) amortizes its per-token host
+round-trip the same way this module amortizes per-item bookkeeping:
+``ServeEngine(decode_mode="megastep")`` fuses K pure-decode ticks into
+ONE jitted ``lax.scan`` — tokens accumulate in a (K, slots) device
+buffer, per-row EOS/max_new masks freeze finished rows on-chip, and the
+host resyncs once per window.  The contract pieces the cache engine
+relies on:
+
+* **Window-safety invariant**: a window opens only on a tick with no
+  admissions, borrower waves, pending tail inserts, or due fault events,
+  and K never exceeds the smallest horizon at which a host-visible event
+  COULD occur — min over (per-slot remaining budgets when the queue
+  waits, ticks until the next scheduled ``FaultEvent``, the
+  ``max_window`` compile cap).  Cache-engine calls (admission serve/
+  insert batches) therefore land on exactly the oracle's tick
+  boundaries: a fused window never reorders, merges, or delays a cache
+  mutation.
+
+* **Oracle equivalence**: tokens, tick counts, service percentiles,
+  ``fault_log`` stamps and the prefix cache's hit/evict streams are
+  bit-identical to per-tick ``decode_mode="inflight"`` (kept as the
+  equivalence baseline; CI gates parity via serve_bench --check and
+  tests/test_megastep_decode.py).
+
+* **Stats glossary**: ``megastep_windows`` / ``mean_window`` (fused
+  windows and their mean tick span), ``host_syncs`` (host<->device
+  barriers; one per window vs one per tick), ``launches_per_token``
+  (active rows per emitted token — falls toward 1/K), and the
+  ``drain_*`` mirrors restricted to ticks where nothing queues (the
+  regime long windows live in).
 """
 
 from __future__ import annotations

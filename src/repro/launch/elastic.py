@@ -233,6 +233,14 @@ class FaultPlan:
             self.applied.extend(due)
         return due
 
+    def next_tick(self) -> int | None:
+        """Tick of the earliest still-scheduled event (``None`` when the
+        plan is drained).  ``run_until_done`` uses it to cap the megastep
+        decode window: after ``pop_due(t)`` every remaining event has
+        tick > t, so the cap is always >= 1 and no fused window can
+        straddle a fault boundary."""
+        return self.events[0].tick if self.events else None
+
     def __len__(self):
         return len(self.events)
 

@@ -32,11 +32,19 @@ def main():
     ap.add_argument("--chunk-tokens", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--no-prefix-cache", action="store_true")
-    ap.add_argument("--decode-mode", choices=["inflight", "roundrobin"],
+    ap.add_argument("--decode-mode",
+                    choices=["inflight", "roundrobin", "megastep"],
                     default="inflight",
                     help="inflight: one decode launch/tick advances every "
                          "slot at its own length; roundrobin: legacy "
-                         "min-length schedule (equivalence oracle)")
+                         "min-length schedule (equivalence oracle); "
+                         "megastep: fuse K pure-decode ticks into one "
+                         "device-side scan with on-chip EOS masking and "
+                         "one host sync per window (token-identical to "
+                         "inflight)")
+    ap.add_argument("--max-window", type=int, default=16, metavar="K",
+                    help="megastep window cap (compile-size bound; scan "
+                         "lengths pad to pow2 buckets)")
     ap.add_argument("--kv-mode", choices=["contiguous", "paged"],
                     default="contiguous",
                     help="contiguous: gather cached prefix pages into each "
@@ -98,6 +106,7 @@ def main():
     eng = ServeEngine(model, params, slots=4, max_len=256,
                       prefix_cache=pc, pool=pool,
                       decode_mode=args.decode_mode, kv_mode=args.kv_mode,
+                      max_window=args.max_window,
                       throttle_threshold=(args.throttle_threshold
                                           if args.throttle_threshold > 0
                                           else None))
@@ -138,6 +147,12 @@ def main():
           f"{st['launches_per_token']:.3f} rows/token, admit wait "
           f"p50/p99 {st['service_ticks_p50']:.0f}/"
           f"{st['service_ticks_p99']:.0f} ticks")
+    if args.decode_mode == "megastep":
+        print(f"[serve] megastep: {st['megastep_windows']} windows "
+              f"(mean {st['mean_window']:.1f} ticks, cap "
+              f"{st['max_window']}), host_syncs={st['host_syncs']} "
+              f"({st['host_syncs_per_token']:.3f}/token), drain "
+              f"rows/token={st['drain_launches_per_token']:.3f}")
     print(f"[serve] kv: mode={st['kv_mode']} "
           f"gather_calls={st['gather_calls']} "
           f"resident_kv_peak={st['resident_kv_tokens_peak']} tok "

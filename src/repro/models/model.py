@@ -52,6 +52,26 @@ def make_model(cfg: ArchConfig) -> Model:
     return _make_decoder(cfg)  # attn + hymba
 
 
+def cache_batch_axes(cfg: ArchConfig):
+    """Pytree (same structure as ``init_cache``) giving each cache leaf's
+    BATCH axis — the axis a per-row mask must broadcast along when merging
+    two caches row-by-row (the serve engine's per-slot merge, and the
+    in-scan freeze mask of megastep decode).  Most leaves carry batch at
+    axis 1 (layers lead); the xlstm mlstm states lead with
+    (n_groups, g-1) so their batch axis is 2."""
+    if cfg.enc_dec:
+        return {"k": 1, "v": 1, "xk": 1, "xv": 1}
+    if cfg.mixer == "xlstm":
+        return {
+            "mlstm": {"c": 2, "n": 2, "m": 2, "conv": 2},
+            "slstm": {"c": 1, "n": 1, "h": 1, "m": 1},
+        }
+    axes = {"k": 1, "v": 1}
+    if cfg.mixer == "hymba":
+        axes["mamba"] = {"h": 1, "conv": 1}
+    return axes
+
+
 # ---------------------------------------------------------------------------
 # shared helpers
 # ---------------------------------------------------------------------------

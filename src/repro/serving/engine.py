@@ -63,6 +63,55 @@ Per-tick decode tokens ride a persistent (slots, 1) buffer updated when a
 token is emitted (admission or decode), so a tick never rebuilds the
 token batch from a scan over ``active``.
 
+Megastep decode (``decode_mode="megastep"``)
+--------------------------------------------
+In-flight batching fills every LANE of a launch; megastep amortizes the
+LAUNCH itself.  On a pure-decode tick (no admissions, no borrower waves,
+no pending tail inserts, no due fault event) the engine runs K decode
+ticks as ONE jitted ``lax.scan`` on device (``megastep_decode``): per-row
+``cur_len`` vectors advance inside the scan, emitted tokens accumulate in
+a (K, slots) device buffer, and per-row EOS / max_new / max_len masks
+freeze finished rows on-chip — their KV, last token and cur_len stop
+advancing exactly as if the host had dropped them from the launch.  The
+host resyncs ONCE per window with a single ``device_get`` of (tokens,
+emit masks, cur_lens, live mask), then replays the window's per-tick
+bookkeeping retroactively: per-request token appends, resident-KV samples
+and retirements are attributed to the tick each token would have been
+emitted on, and ``ticks`` advances by the window length — so
+ticks-to-drain, p50/p99 ticks-to-service, admission tick stamps and
+fault-plan tick boundaries are unchanged.
+
+**Window-safety invariant** (the planner, ``_plan_window``): K is the
+largest horizon that provably contains no host-visible event —
+
+  * queue/retry non-empty: a retirement would free a slot the queue
+    claims the NEXT tick, so K = 1 when EOS is enabled (any tick could
+    retire), else K = min over active slots of their remaining budget
+    (the first possible retirement ends the window exactly);
+  * queue empty: freezing finished rows on-chip is free, so K = max of
+    the remaining budgets (the whole drain tail, subject to the caps);
+  * always capped by ``max_window`` (compile-size bound; scan lengths
+    pad to pow2 buckets so at most log2(max_window)+1 variants compile)
+    and by ``run_until_done``'s fault horizon (ticks until the next
+    scheduled ``FaultEvent`` — a fault may mutate the backend, so no
+    window may straddle one).
+
+Tokens are BIT-IDENTICAL to the per-tick ``inflight`` oracle: decode
+rows are launch-membership independent, the in-scan freeze mask equals
+the oracle's per-slot cache merge, and the planner guarantees the host
+schedule (admissions, retirements, faults) is replayed on the same tick
+boundaries.  ``inflight`` is kept as the equivalence baseline and CI
+asserts parity continuously.
+
+Stats glossary (launch economics): ``decode_launches`` counts device
+launches (a window is ONE), ``launch_rows`` counts rows computed per
+launch (a window counts its rows once — so ``launches_per_token`` falls
+toward 1/K), ``megastep_windows``/``mean_window`` describe the windows,
+``host_syncs`` counts host<->device barriers (``_sync``; one per window
+vs one per tick), and ``drain_launch_rows``/``drain_decode_tokens``/
+``drain_launches_per_token`` restrict the economics to drain-phase ticks
+(queue and retry empty — where megastep's long windows live).
+
 Fused one-call admission (default)
 ----------------------------------
 ``_admit_fused`` runs a whole tick's admissions through ONE op-coded
@@ -161,7 +210,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
 from repro.models import attention as attn_mod
-from repro.models.model import Model
+from repro.models.model import Model, cache_batch_axes
 from repro.serving.kv_cache import PagedKVPool
 from repro.serving.prefix_cache import (PrefixCache, chunk_chain_hashes,
                                         service_tick_percentiles)
@@ -407,6 +456,70 @@ def paged_decode_step(cfg: ArchConfig, params, tokens, tail_cache, pool_k,
     return logits, {"k": tk, "v": tv}
 
 
+def megastep_decode(decode_fn, params, last_tok, cache, cur_lens, live,
+                    rem, *, eos: int, max_len: int, steps: int, k_limit,
+                    cache_axes=None):
+    """Fuse up to ``steps`` in-flight decode ticks into ONE device scan.
+
+    ``decode_fn(params, tokens, cache, cur_lens) -> (logits, cache)`` is a
+    row-local decode step (``model.decode_step`` or a paged wrapper); the
+    scan body replays the per-tick inflight schedule on device:
+
+      argmax -> per-row cache merge -> advance cur_len -> retire mask
+
+    ``last_tok`` (B, 1) int32; ``cur_lens``/``rem`` (B,) int32; ``live``
+    (B,) bool.  ``steps`` is static (pow2-bucketed by callers so compiles
+    stay O(log max_window)); ``k_limit`` is a dynamic operand masking
+    emissions past the planned window, so one compiled bucket serves every
+    window size.  A row emits on scan step i iff it is still live and
+    i < k_limit; a frozen row's cache/last_tok/cur_len stop advancing —
+    bit-equal to the host dropping it from the launch, because decode rows
+    never mix (batched einsums are row-local) and the merge masks whole
+    batch rows.  ``cache_axes`` (pytree of ints matching ``cache``, see
+    ``model.cache_batch_axes``) names each leaf's batch axis; ``None``
+    means axis 1 everywhere (the engine's contiguous/paged KV layout).
+
+    A row retires (live -> False) after the emission that exhausts ``rem``
+    (callers pass min(max_new budget, max_len-1 - cur_len)), emits ``eos``,
+    or reaches ``max_len - 1`` — the oracle's retirement test verbatim.
+
+    Returns ``(cache, last_tok, cur_lens, live, toks, emits)`` with
+    ``toks`` (steps, B) int32 (-1 on non-emitting lanes) and ``emits``
+    (steps, B) bool.
+    """
+    live = jnp.asarray(live)
+    rem = jnp.asarray(rem, jnp.int32)
+    k_limit = jnp.asarray(k_limit, jnp.int32)
+
+    def body(carry, i):
+        lt, ch, cu, lv, rm = carry
+        emit = lv & (i < k_limit)
+        logits, nch = decode_fn(params, lt, ch, cu)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def sel(ax, new, old):
+            shape = [1] * new.ndim
+            shape[ax] = emit.shape[0]
+            return jnp.where(emit.reshape(shape), new, old)
+
+        if cache_axes is None:
+            ch = jax.tree.map(lambda n, o: sel(1, n, o), nch, ch)
+        else:
+            ch = jax.tree.map(sel, cache_axes, nch, ch)
+        lt = jnp.where(emit[:, None], tok[:, None], lt)
+        cu = jnp.where(emit, cu + 1, cu)
+        rm = rm - emit.astype(jnp.int32)
+        done = emit & ((rm <= 0) | (tok == eos) | (cu >= max_len - 1))
+        lv = lv & ~done
+        return (lt, ch, cu, lv, rm), (jnp.where(emit, tok, -1), emit)
+
+    init = (jnp.asarray(last_tok), cache, jnp.asarray(cur_lens, jnp.int32),
+            live, rem)
+    (lt, ch, cu, lv, _), (toks, emits) = jax.lax.scan(
+        body, init, jnp.arange(steps, dtype=jnp.int32))
+    return ch, lt, cu, lv, toks, emits
+
+
 def _pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length() if n > 0 else 0
 
@@ -420,6 +533,7 @@ class ServeEngine:
                  admit_batching: bool = True, admit_mode: str | None = None,
                  overlap_decode: bool = True, max_shed_retries: int = 3,
                  decode_mode: str = "inflight", kv_mode: str = "contiguous",
+                 max_window: int = 16,
                  tail_tokens: int | None = None, paged_kernel: bool = False,
                  throttle_threshold: float | None = None,
                  max_throttle_ticks: int = 8):
@@ -494,13 +608,51 @@ class ServeEngine:
         assert self.admit_mode in ("fused", "split"), self.admit_mode
         # "inflight" (default): one decode launch advances every active
         # slot at its own cur_len; "roundrobin": the legacy min-cur_len
-        # schedule (the token-equivalence oracle).
-        assert decode_mode in ("inflight", "roundrobin"), decode_mode
+        # schedule (the token-equivalence oracle); "megastep": fuse K
+        # pure-decode ticks into one on-device scan (see module docstring)
+        # — falls back to the inflight schedule on any tick with
+        # admissions or borrower waves.
+        assert decode_mode in ("inflight", "roundrobin", "megastep"), \
+            decode_mode
         self.decode_mode = decode_mode
+        assert max_window >= 1, max_window
+        self.max_window = int(max_window)
+        axes = cache_batch_axes(self.cfg)
+        if self.paged:
+            # the scanned analogue of ``_decode_paged``: pool planes /
+            # block tables / prefix lens are scan-invariant operands (the
+            # window planner guarantees no admission mutates them
+            # mid-window); only the slot tail rides the carry
+            smax_ = max_len + self.cfg.meta_tokens
+
+            def _ms_paged(p, lt, tc, pk, pv, bt, plens, cu, lv, rm, kl, *,
+                          steps):
+                fn = lambda pp, t, c, cc: paged_decode_step(
+                    self.cfg, pp, t, c, pk, pv, bt, plens, cc, smax=smax_,
+                    use_kernel=paged_kernel)
+                return megastep_decode(
+                    fn, p, lt, tc, cu, lv, rm, eos=self.eos,
+                    max_len=self.max_len, steps=steps, k_limit=kl,
+                    cache_axes={"k": 1, "v": 1})
+            self._megastep_paged = jax.jit(_ms_paged,
+                                           static_argnames=("steps",))
+
+        def _ms_contig(p, lt, ch, cu, lv, rm, kl, *, steps):
+            return megastep_decode(
+                model.decode_step, p, lt, ch, cu, lv, rm, eos=self.eos,
+                max_len=self.max_len, steps=steps, k_limit=kl,
+                cache_axes=axes)
+        self._megastep_contig = jax.jit(_ms_contig,
+                                        static_argnames=("steps",))
         self.ticks = 0               # completed engine ticks
         self.decode_launches = 0     # decode_step invocations
         self.decode_tokens = 0       # tokens emitted by decode launches
         self.launch_rows = 0         # active rows computed across launches
+        self.megastep_windows = 0    # fused windows run (megastep mode)
+        self._window_ticks_sum = 0   # ticks covered by those windows
+        self.host_syncs = 0          # host<->device barriers (``_sync``)
+        self.drain_launch_rows = 0   # launch_rows on drain-phase ticks
+        self.drain_decode_tokens = 0  # decode tokens on drain-phase ticks
         self._last_tok = np.zeros((slots, 1), np.int32)  # per-slot last token
         self._service_ticks: list[int] = []  # per-request admit latencies
         # owner-aware admission throttling: defer NEW admissions whose home
@@ -595,6 +747,7 @@ class ServeEngine:
 
         chains = [chunk_chain_hashes(r.prompt, ct) for r in pref]
         pages_per = self.prefix_cache.lookup_chains(chains) if pref else []
+        emits: list = []           # per-request argmaxes; ONE batched fetch
         ins_chains: list[list[int]] = []
         ins_pages: list[list[int]] = []
         ins_depths: list[int] = []
@@ -678,7 +831,10 @@ class ServeEngine:
                     ins_lens.append(len(chain))
             self.cur_len[slot] = len(req.prompt)
             self._mark_active(req)
-            self._emit(req, int(jnp.argmax(logits)))
+            emits.append(jnp.argmax(logits))
+        if pref:
+            for req, tok in zip(pref, self._sync(emits)):
+                self._emit(req, int(tok))
         if ins_chains:
             for pg in self.prefix_cache.insert_chains(
                     ins_chains, ins_pages, depths=ins_depths,
@@ -688,6 +844,7 @@ class ServeEngine:
         self._admit_plain(plain)
 
     def _admit_plain(self, reqs: list[Request]):
+        emits = []
         for req in reqs:
             if self.paged:
                 # no prefix: the whole prompt lives in the slot tail
@@ -699,7 +856,10 @@ class ServeEngine:
             req.prefill_computed = len(req.prompt)
             self.cur_len[req.slot] = len(req.prompt)
             self._mark_active(req)
-            self._emit(req, int(jnp.argmax(logits[0])))
+            emits.append(jnp.argmax(logits[0]))
+        if reqs:
+            for req, tok in zip(reqs, self._sync(emits)):
+                self._emit(req, int(tok))
 
     # -- fused one-call admission -------------------------------------------
     def _admit_fused(self, reqs: list[Request]):
@@ -1043,6 +1203,8 @@ class ServeEngine:
             logits, nk, nv = self._prefill_b0(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 jnp.asarray(pl))
+        # one batched fetch for the wave's first tokens (vs one per job)
+        emit_toks = self._sync(jnp.argmax(logits, -1))
 
         for i, j in enumerate(jobs):
             req, c = j["req"], j["c"]
@@ -1078,7 +1240,7 @@ class ServeEngine:
                                       kc, vc)
             self.cur_len[slot] = len(req.prompt)
             self._mark_active(req)
-            self._emit(req, int(jnp.argmax(logits[i])))
+            self._emit(req, int(emit_toks[i]))
 
     def _install_prefill(self, slot, pc):
         """Copy a model.prefill cache (batch=1 semantics) into `slot`."""
@@ -1118,11 +1280,24 @@ class ServeEngine:
 
         self.cache = jax.tree.map(sel, new_cache, self.cache)
 
+    def _sync(self, tree):
+        """ONE host<->device barrier: fetch a whole pytree of device
+        values in a single ``jax.device_get`` and count it.  Every host
+        fetch the engine makes (decode token buffers, prefill argmaxes,
+        megastep window results) funnels through here, so
+        ``stats()["host_syncs"]`` is the per-run barrier count the
+        megastep window economics are judged against.  (Cache-engine
+        device calls are tracked separately as calls/request.)"""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
     def _launch_decode(self, curs: np.ndarray):
         """ONE decode launch over the persistent token buffer, every row at
         its ``curs`` position; counts the launch and its active rows.
         Paged mode reads the pool planes + block tables at launch time, so
-        pages a borrower wave published earlier this tick are visible."""
+        pages a borrower wave published earlier this tick are visible.
+        Returns the argmax tokens ON DEVICE — callers batch the fetch into
+        their tick's single ``_sync``."""
         if self.paged:
             logits, cache = self._decode_paged(
                 self.params, jnp.asarray(self._last_tok), self.cache,
@@ -1134,7 +1309,7 @@ class ServeEngine:
                 jnp.asarray(curs))
         self.decode_launches += 1
         self.launch_rows += len(self.active)
-        return np.asarray(jnp.argmax(logits, -1)), cache
+        return jnp.argmax(logits, -1), cache
 
     def _flush_pending_inserts(self):
         """Re-run the tail-chunk inserts a split-placing backend shed last
@@ -1188,8 +1363,12 @@ class ServeEngine:
         return self.queue.pop(pick)
 
     # -- main loop -------------------------------------------------------------
-    def step(self):
+    def step(self, window_cap: int | None = None):
         """One engine tick: admit all free slots, then ONE decode launch.
+        In megastep mode a pure-decode tick instead runs a K-tick fused
+        window (``_megastep``) and advances ``self.ticks`` by K;
+        ``window_cap`` bounds K (``run_until_done`` passes the ticks until
+        the next scheduled fault so no window straddles an event).
 
         Admission is batched: every request admitted this tick goes through
         one fused call (``admit_mode="fused"``, default — ~1 cache-engine
@@ -1241,6 +1420,12 @@ class ServeEngine:
                 th()
             self.ticks += 1
             return
+        if (self.decode_mode == "megastep" and not admits and not pending
+                and not self._pending_inserts):
+            # pure-decode tick: nothing host-visible can happen for K
+            # ticks, so run the whole window on device in one scan
+            self._megastep(self._plan_window(window_cap))
+            return
         accept = np.zeros(self.slots, bool)
         if self.decode_mode == "roundrobin":
             # legacy oracle: only slots at the batch-min length decode (a
@@ -1268,8 +1453,8 @@ class ServeEngine:
             for s in late_slots:
                 accept_a[s] = False
             self._merge_cache(cache_a, accept_a)
-            nxt[accept_a] = nxt_a[accept_a]
             late_due = accept & ~accept_a
+            nxt_b = None
             if late_due.any():
                 # a borrower slot admitted by a later wave owes this tick's
                 # token (in-flight: always; round-robin: when it landed on
@@ -1277,13 +1462,18 @@ class ServeEngine:
                 # its prefill ran, preserving the tick schedule exactly
                 nxt_b, cache_b = self._launch_decode(curs)
                 self._merge_cache(cache_b, late_due)
+            if nxt_b is None:
+                nxt_a = self._sync(nxt_a)
+            else:
+                nxt_a, nxt_b = self._sync((nxt_a, nxt_b))
                 nxt[late_due] = nxt_b[late_due]
+            nxt[accept_a] = nxt_a[accept_a]
         else:
             for th in pending:
                 th()
             nxt_n, cache_n = self._launch_decode(curs)
             self._merge_cache(cache_n, accept)
-            nxt[accept] = nxt_n[accept]
+            nxt[accept] = self._sync(nxt_n)[accept]
         done = []
         for r in self.active.values():
             if accept[r.slot]:
@@ -1295,6 +1485,11 @@ class ServeEngine:
                         or self.cur_len[r.slot] >= self.max_len - 1):
                     done.append(r.rid)
         self.decode_tokens += int(accept.sum())
+        if not admits and not self.queue and not self.retry_queue:
+            # drain-phase economics (nothing waiting): the regime the
+            # megastep window length is judged against
+            self.drain_launch_rows += len(self.active)
+            self.drain_decode_tokens += int(accept.sum())
         if self.pool is not None and self.active:
             # resident-KV sample at the tick's high-water point (before
             # retirements): per-slot KV tokens (full sequence in contiguous
@@ -1322,6 +1517,115 @@ class ServeEngine:
             self._free_slots.append(r.slot)
             self.finished.append(r)
         self.ticks += 1
+
+    # -- megastep windows ----------------------------------------------------
+    def _rem_budget(self, r: Request) -> int:
+        """Ticks until ``r`` MUST retire (ignoring EOS): the tighter of
+        its max_new budget and the ``max_len - 1`` cache-edge guard — the
+        oracle's retirement test solved for the emission count."""
+        return min(r.max_new_tokens - len(r.out_tokens),
+                   self.max_len - 1 - int(self.cur_len[r.slot]))
+
+    def _plan_window(self, cap: int | None = None) -> int:
+        """Largest provably event-free decode horizon (see module
+        docstring): nothing the host must schedule — an admission into a
+        freed slot, a fault — can fall strictly inside the window."""
+        rems = [self._rem_budget(r) for r in self.active.values()]
+        if self.queue or self.retry_queue:
+            # a retirement frees a slot the queue claims NEXT tick; with
+            # EOS enabled any tick could retire, else the first possible
+            # retirement is exactly min(rem) ticks out
+            k = 1 if self.eos >= 0 else min(rems)
+        else:
+            # nothing waits: freezing finished rows on-chip is free (the
+            # scan computes every row regardless), so run the whole tail
+            k = max(rems)
+        k = max(1, min(k, self.max_window))
+        if cap is not None:
+            k = min(k, max(1, int(cap)))
+        return k
+
+    def _megastep(self, k: int):
+        """Run a K-tick pure-decode window as one device scan, then replay
+        the window's host bookkeeping retroactively (emissions, resident-KV
+        samples, retirements and tick accounting land on the tick each
+        token would have been emitted on — bit-identical to K ``inflight``
+        ticks, including every ``stats()`` latency percentile)."""
+        rows = list(self.active.values())
+        drain = not self.queue and not self.retry_queue
+        live = np.zeros(self.slots, bool)
+        rem = np.zeros(self.slots, np.int32)
+        for r in rows:
+            live[r.slot] = True
+            rem[r.slot] = self._rem_budget(r)
+        steps = _pow2(k)
+        start_cur = self.cur_len.copy()
+        if self.paged:
+            out = self._megastep_paged(
+                self.params, jnp.asarray(self._last_tok), self.cache,
+                self.pool.k, self.pool.v, self.pool.device_block_tables(),
+                jnp.asarray(self.pool.prefix_lens),
+                jnp.asarray(self.cur_len), jnp.asarray(live),
+                jnp.asarray(rem), np.int32(k), steps=steps)
+        else:
+            out = self._megastep_contig(
+                self.params, jnp.asarray(self._last_tok), self.cache,
+                jnp.asarray(self.cur_len), jnp.asarray(live),
+                jnp.asarray(rem), np.int32(k), steps=steps)
+        cache, _, cu, lv, toks, emits = out
+        self.cache = cache
+        self.decode_launches += 1
+        self.launch_rows += len(rows)
+        self.megastep_windows += 1
+        # the window's ONE host barrier
+        toks_h, emits_h, cu_h, lv_h = self._sync((toks, emits, cu, lv))
+        n_emit = emits_h.sum(axis=0).astype(np.int64)     # (slots,)
+        for r in rows:
+            for j in range(int(n_emit[r.slot])):
+                self._emit(r, int(toks_h[j, r.slot]))
+        # copy: device_get views are read-only and admissions write here
+        self.cur_len = np.array(cu_h, np.int32)
+        ticks_used = int(n_emit.max())
+        self.decode_tokens += int(n_emit.sum())
+        if drain:
+            self.drain_launch_rows += len(rows)
+            self.drain_decode_tokens += int(n_emit.sum())
+        if self.pool is not None:
+            # replay the per-tick resident-KV samples: at window tick j a
+            # row is resident iff it had not yet retired at the START of
+            # that tick, i.e. it emits on j (n_emit > j); its cur_len at
+            # the sample point (post-emission, pre-retirement) is
+            # start + j + 1.  Block tables / prefix lens are window-stable
+            # so the paged correction uses the live pool state.
+            for j in range(ticks_used):
+                slot_tok, pinned = 0, set()
+                for r in rows:
+                    if n_emit[r.slot] <= j:
+                        continue
+                    slot_tok += int(start_cur[r.slot]) + j + 1
+                    if self.paged:
+                        slot_tok -= int(self.pool.prefix_lens[r.slot])
+                    pinned.update(r.pinned_pages)
+                resident = slot_tok + len(pinned) * self.pool.page_tokens
+                self.resident_kv_tokens_peak = max(
+                    self.resident_kv_tokens_peak, resident)
+                self._resident_tok_sum += resident
+                self._resident_ticks += 1
+        # retire in oracle order: ticks ascending (stable sort on each
+        # row's emit count preserves admission order within a tick), so
+        # ``finished`` and the freed-slot LIFO match per-tick inflight
+        done = sorted((r for r in rows if not lv_h[r.slot]),
+                      key=lambda r: int(n_emit[r.slot]))
+        for r in done:
+            self.active.pop(r.rid)
+            for pg in r.pinned_pages:
+                self.pool.unpin(pg)
+            if self.paged:
+                self.pool.clear_slot(r.slot)
+            self._free_slots.append(r.slot)
+            self.finished.append(r)
+        self.ticks += ticks_used
+        self._window_ticks_sum += ticks_used
 
     # -- elasticity / fault tolerance ---------------------------------------
     def mark_degraded(self, shard: int) -> int:
@@ -1372,18 +1676,26 @@ class ServeEngine:
 
     def run_until_done(self, max_ticks: int = 10000, fault_plan=None):
         """Drive ticks until every queued/active request retires; returns
-        the tick count (the bench's ticks-to-drain).  ``fault_plan``
-        (``launch.elastic.FaultPlan``) injects scheduled faults at their
-        tick boundaries — before the tick's admissions, never mid-call."""
-        t = 0
+        the tick count (the bench's ticks-to-drain — a megastep window of
+        K counts K ticks, so the number is schedule-identical across
+        decode modes).  ``fault_plan`` (``launch.elastic.FaultPlan``)
+        injects scheduled faults at their tick boundaries — before the
+        tick's admissions, never mid-call; the plan's next due tick caps
+        the megastep window so no fused window ever straddles an event
+        (a fault mutates the backend, and its ``fault_log`` stamp must
+        land on the oracle's tick)."""
+        start = self.ticks
         while (self.queue or self.retry_queue or self.active
-               or self._pending_inserts) and t < max_ticks:
+               or self._pending_inserts) and self.ticks - start < max_ticks:
+            cap = None
             if fault_plan is not None:
                 for ev in fault_plan.pop_due(self.ticks):
                     self.apply_fault(ev)
-            self.step()
-            t += 1
-        return t
+                nxt = fault_plan.next_tick()
+                if nxt is not None:
+                    cap = nxt - self.ticks
+            self.step(window_cap=cap)
+        return self.ticks - start
 
     def stats(self) -> dict:
         """Serve-side counters: launch economics (the in-flight batching
@@ -1396,9 +1708,28 @@ class ServeEngine:
             "decode_tokens": self.decode_tokens,
             "launch_rows": self.launch_rows,
             # active rows computed per token emitted: 1.0 = every decode
-            # lane did useful work (the SIMD-occupancy analogue)
+            # lane did useful work (the SIMD-occupancy analogue); a
+            # megastep window counts its rows ONCE, so this falls toward
+            # 1/window as windows lengthen
             "launches_per_token": (self.launch_rows / self.decode_tokens
                                    if self.decode_tokens else 0.0),
+            # megastep window economics (0 outside megastep mode)
+            "megastep_windows": self.megastep_windows,
+            "mean_window": (self._window_ticks_sum / self.megastep_windows
+                            if self.megastep_windows else 0.0),
+            "max_window": self.max_window,
+            # host<->device barriers (``_sync``): one per per-tick decode,
+            # one per prefill batch, ONE per megastep window
+            "host_syncs": self.host_syncs,
+            "host_syncs_per_token": (self.host_syncs / self.decode_tokens
+                                     if self.decode_tokens else 0.0),
+            # the same economics restricted to drain-phase ticks (queue
+            # and retry empty) — where megastep's long windows live
+            "drain_launch_rows": self.drain_launch_rows,
+            "drain_decode_tokens": self.drain_decode_tokens,
+            "drain_launches_per_token": (
+                self.drain_launch_rows / self.drain_decode_tokens
+                if self.drain_decode_tokens else 0.0),
             "requests_serviced": len(self._service_ticks),
             "fallbacks": self.fallbacks,
             # fraction of serviced requests that exhausted shed retries and

@@ -1,0 +1,356 @@
+"""Megastep decode: K fused ticks in one device-side scan.
+
+Differential suite pinning token-exactness of ``decode_mode="megastep"``
+(pure-decode ticks fuse into one jitted ``lax.scan`` window — per-row
+EOS/budget masks freeze finished rows on-chip, the host resyncs once per
+window) against the per-tick in-flight oracle, plus the launch-economics
+acceptance: a K-tick window costs ONE launch and ONE host sync.
+
+The equivalence argument under test extends the in-flight one: decode
+rows are launch-membership independent (row-local einsums), so freezing
+a row ON DEVICE via a batch-axis ``where`` mask is bit-equal to the host
+dropping it from the launch — and a fused window whose span never
+crosses an admission, borrower wave, pending insert, or fault boundary
+replays the oracle's tick schedule exactly.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import MSLRUConfig
+from repro.models.model import cache_batch_axes, make_model
+from repro.serving.engine import Request, ServeEngine, megastep_decode
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("phi3-mini-3.8b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _drive(cfg, model, params, prompts, mode, *, slots=3, use_prefix=True,
+           max_new=None, eos=-1, backend=None, kv_mode="contiguous",
+           max_window=16, fault_plan=None):
+    pool = pc = None
+    if use_prefix:
+        pool = PagedKVPool(cfg, n_pages=64, page_tokens=16)
+        pc = PrefixCache(num_sets=64, m=2, p=4, chunk_tokens=16,
+                         backend=backend)
+    eng = ServeEngine(model, params, slots=slots, max_len=128,
+                      prefix_cache=pc, pool=pool, decode_mode=mode,
+                      kv_mode=kv_mode, eos_token=eos, max_window=max_window)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p,
+                           max_new_tokens=(max_new[i] if max_new else 4)))
+    ticks = eng.run_until_done(fault_plan=fault_plan)
+    return eng, ticks
+
+
+def _toks(eng):
+    return {r.rid: r.out_tokens for r in eng.finished}
+
+
+def _prompts(cfg, rng, lens):
+    return [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def test_megastep_scan_matches_stepwise_loop(setup):
+    """Model-level invariant: a ``steps``-long scan must reproduce the
+    per-step ``decode_step`` loop bit-exactly, and a ``k_limit`` below
+    ``steps`` must leave every lane untouched past the limit (one pow2
+    compile bucket serves every window size)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+    lens = [9, 14]
+    cache = model.init_cache(len(lens), 64)
+    toks = np.zeros((len(lens), 1), np.int32)
+    for b, n in enumerate(lens):
+        t = rng.integers(1, cfg.vocab_size, n).astype(np.int32)[None]
+        logits, pcache = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(t)})
+        cache["k"] = cache["k"].at[:, b, :n].set(pcache["k"][:, 0])
+        cache["v"] = cache["v"].at[:, b, :n].set(pcache["v"][:, 0])
+        toks[b, 0] = int(jnp.argmax(logits[0]))
+    cur = np.asarray(lens, np.int32)
+    live = np.ones(len(lens), bool)
+    rem = np.asarray([8, 8], np.int32)
+
+    # the oracle: 4 explicit decode_step launches, wholesale cache accept
+    dec = jax.jit(model.decode_step)
+    lt, ch, cu = jnp.asarray(toks), cache, jnp.asarray(cur)
+    loop_toks = []
+    for _ in range(4):
+        logits, ch = dec(params, lt, ch, cu)
+        lt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        loop_toks.append(np.asarray(lt[:, 0]))
+        cu = cu + 1
+
+    _, mlt, mcu, mlv, mtoks, memits = megastep_decode(
+        model.decode_step, params, jnp.asarray(toks), cache,
+        jnp.asarray(cur), live, rem, eos=-1, max_len=64, steps=4,
+        k_limit=4, cache_axes=cache_batch_axes(cfg))
+    np.testing.assert_array_equal(np.asarray(mtoks), np.stack(loop_toks))
+    assert np.asarray(memits).all()
+    np.testing.assert_array_equal(np.asarray(mcu), cur + 4)
+    np.testing.assert_array_equal(np.asarray(mlt), np.asarray(lt))
+
+    # k_limit=2 in the SAME steps=4 bucket: steps past the limit are inert
+    _, _, kcu, klv, ktoks, kemits = megastep_decode(
+        model.decode_step, params, jnp.asarray(toks), cache,
+        jnp.asarray(cur), live, rem, eos=-1, max_len=64, steps=4,
+        k_limit=2, cache_axes=cache_batch_axes(cfg))
+    np.testing.assert_array_equal(np.asarray(ktoks)[:2],
+                                  np.stack(loop_toks)[:2])
+    assert not np.asarray(kemits)[2:].any()
+    assert (np.asarray(ktoks)[2:] == -1).all()
+    np.testing.assert_array_equal(np.asarray(kcu), cur + 2)
+    assert np.asarray(klv).all()
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "xlstm-1.3b",
+                                  "whisper-medium"])
+def test_cache_batch_axes_freezes_every_family(arch):
+    """``cache_batch_axes`` must name the true batch axis of EVERY cache
+    leaf (mamba/conv states, xLSTM group-led leaves, enc-dec cross KV):
+    a frozen row's leaves stay bit-identical through a window while the
+    live row matches the wholesale-accept loop row-for-row."""
+    cfg = get_config(arch, smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache0 = model.init_cache(2, 32)
+    axes = cache_batch_axes(cfg)
+    assert (jax.tree.structure(axes)
+            == jax.tree.structure(jax.tree.map(lambda _: 0, cache0)))
+    last = jnp.asarray(np.array([[5], [9]], np.int32))
+    cur = jnp.asarray(np.array([3, 4], np.int32))
+    live = np.array([True, False])
+    rem = np.array([6, 6], np.int32)
+    mch, mlt, mcu, _, mtoks, memits = megastep_decode(
+        model.decode_step, params, last, cache0, cur, live, rem,
+        eos=-1, max_len=32, steps=2, k_limit=2, cache_axes=axes)
+    # frozen row: every leaf's batch-1 slice unchanged, no emissions
+    def row(leaf, ax, b):
+        return np.asarray(jnp.take(leaf, b, axis=ax))
+    jax.tree.map(lambda n, o, ax: np.testing.assert_array_equal(
+        row(n, ax, 1), row(o, ax, 1)), mch, cache0, axes)
+    assert not np.asarray(memits)[:, 1].any()
+    assert (np.asarray(mtoks)[:, 1] == -1).all()
+    assert int(mcu[1]) == 4 and int(mlt[1, 0]) == 9
+    # live row: bit-equal to the explicit loop (row independence)
+    lt, ch, cu = last, cache0, cur
+    for i in range(2):
+        logits, ch = model.decode_step(params, lt, ch, cu)
+        lt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        assert int(np.asarray(mtoks)[i, 0]) == int(lt[0, 0])
+        cu = cu + 1
+    assert int(mcu[0]) == 5
+
+
+@pytest.mark.slow
+def test_megastep_token_identical_with_fewer_launches(setup):
+    """Mixed lengths + slot reuse: megastep must emit the in-flight
+    oracle's exact streams, tick/latency accounting included, while
+    collapsing launches and host syncs; max_window=1 degenerates to
+    per-tick behaviour with identical tokens."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(10)
+    prompts = _prompts(cfg, rng, (18, 31, 44, 23, 37))
+    max_new = [5, 9, 13, 7, 17]
+    eng_i, ticks_i = _drive(cfg, model, params, prompts, "inflight",
+                            slots=2, max_new=max_new)
+    eng_m, ticks_m = _drive(cfg, model, params, prompts, "megastep",
+                            slots=2, max_new=max_new)
+    assert _toks(eng_m) == _toks(eng_i)
+    assert ticks_m == ticks_i
+    assert [r.rid for r in eng_m.finished] == [r.rid for r in eng_i.finished]
+    st_i, st_m = eng_i.stats(), eng_m.stats()
+    assert st_m["service_ticks_p50"] == st_i["service_ticks_p50"]
+    assert st_m["service_ticks_p99"] == st_i["service_ticks_p99"]
+    assert st_m["resident_kv_tokens_peak"] == st_i["resident_kv_tokens_peak"]
+    # the economics: windows really fused
+    assert st_m["megastep_windows"] >= 1
+    assert st_m["mean_window"] > 1.0
+    assert st_m["decode_launches"] < st_i["decode_launches"]
+    assert st_m["host_syncs"] < st_i["host_syncs"]
+    assert st_m["drain_launches_per_token"] < 1.0
+    assert st_i["drain_launches_per_token"] == 1.0
+    # window=1: the degenerate megastep is the per-tick engine
+    eng_1, ticks_1 = _drive(cfg, model, params, prompts, "megastep",
+                            slots=2, max_new=max_new, max_window=1)
+    assert _toks(eng_1) == _toks(eng_i)
+    assert ticks_1 == ticks_i
+    assert eng_1.stats()["mean_window"] == 1.0
+
+
+@pytest.mark.slow
+def test_eos_mid_window_token_identical(setup):
+    """EOS landing INSIDE a fused window must freeze that row on-chip at
+    the oracle's exact tick: streams identical, the row really stopped
+    early, later windows re-admit into the freed slot."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    prompts = _prompts(cfg, rng, (20, 35, 27, 42))
+    max_new = [12, 12, 12, 12]
+    ref, _ = _drive(cfg, model, params, prompts, "inflight",
+                    slots=2, max_new=max_new)
+    # a token rid 1 emits mid-stream becomes EOS: it lands mid-window
+    eos = _toks(ref)[1][5]
+    eng_i, ticks_i = _drive(cfg, model, params, prompts, "inflight",
+                            slots=2, max_new=max_new, eos=eos)
+    eng_m, ticks_m = _drive(cfg, model, params, prompts, "megastep",
+                            slots=2, max_new=max_new, eos=eos)
+    assert _toks(eng_m) == _toks(eng_i)
+    assert ticks_m == ticks_i
+    stopped = [r for r in eng_m.finished
+               if r.out_tokens and r.out_tokens[-1] == eos
+               and len(r.out_tokens) < 12]
+    assert stopped                                 # EOS really cut a stream
+    assert eng_m.stats()["megastep_windows"] >= 1
+
+
+@pytest.mark.slow
+def test_paged_megastep_token_identical_zero_gathers(setup):
+    """Megastep over block tables: paged megastep must match BOTH the
+    paged in-flight oracle and the contiguous stream, with zero
+    ``gather_pages`` copies — the scan walks the shared pool directly."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(12)
+    shared = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate([shared, t]) for t in
+               _prompts(cfg, rng, (5, 11, 8))]
+    max_new = [9, 9, 9]
+    eng_c, _ = _drive(cfg, model, params, prompts, "inflight",
+                      max_new=max_new)
+    eng_pi, _ = _drive(cfg, model, params, prompts, "inflight",
+                       max_new=max_new, kv_mode="paged")
+    eng_pm, _ = _drive(cfg, model, params, prompts, "megastep",
+                       max_new=max_new, kv_mode="paged")
+    assert _toks(eng_pm) == _toks(eng_pi) == _toks(eng_c)
+    st = eng_pm.stats()
+    assert st["gather_calls"] == 0
+    assert st["megastep_windows"] >= 1
+    assert st["decode_launches"] < eng_pi.stats()["decode_launches"]
+
+
+@pytest.mark.slow
+def test_fault_plan_truncates_window_at_event_tick(setup):
+    """Regression (the window/fault race): a FaultEvent due mid-drain
+    must CAP the fused window so it applies on the oracle's exact tick —
+    fault_log and tokens bit-identical to per-tick in-flight, and the
+    fused run still gets multi-tick windows around the boundary."""
+    from repro.core.sharded import ShardedCacheClient
+    from repro.launch.elastic import FaultEvent, FaultPlan
+    from repro.launch.mesh import make_cache_mesh
+    cfg, model, params = setup
+    rng = np.random.default_rng(13)
+    prompts = _prompts(cfg, rng, (22, 30, 41, 26))
+    max_new = [14, 10, 16, 12]
+    mcfg = MSLRUConfig(num_sets=32, m=2, p=4, value_planes=1)
+
+    def backend():
+        return ShardedCacheClient(mcfg, make_cache_mesh(1))
+
+    # pick a fault tick in the middle of the drain phase
+    ref, ref_ticks = _drive(cfg, model, params, prompts, "inflight",
+                            slots=2, max_new=max_new, backend=backend())
+    t_fault = ref_ticks // 2
+    plan = lambda: FaultPlan([FaultEvent(tick=t_fault, kind="resize",
+                                         arg=1)])
+    eng_i, ticks_i = _drive(cfg, model, params, prompts, "inflight",
+                            slots=2, max_new=max_new, backend=backend(),
+                            fault_plan=plan())
+    eng_m, ticks_m = _drive(cfg, model, params, prompts, "megastep",
+                            slots=2, max_new=max_new, backend=backend(),
+                            fault_plan=plan())
+    assert eng_i.fault_log == [(t_fault, "resize:1")]
+    assert eng_m.fault_log == eng_i.fault_log
+    assert _toks(eng_m) == _toks(eng_i) == _toks(ref)
+    assert ticks_m == ticks_i == ref_ticks
+    st = eng_m.stats()
+    assert st["megastep_windows"] >= 2          # windows on BOTH sides
+    assert st["mean_window"] > 1.0              # ...and fusion survived
+
+
+_SHARDED_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.configs import get_config
+from repro.core import MSLRUConfig
+from repro.core.sharded import ShardedCacheClient
+from repro.launch.elastic import FaultEvent, FaultPlan
+from repro.launch.mesh import make_mesh_compat
+from repro.models.model import make_model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+
+cfg = get_config("phi3-mini-3.8b", smoke=True)
+model = make_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(14)
+shared = rng.integers(1, cfg.vocab_size, 32).astype(np.int32)
+prompts = [np.concatenate([shared,
+                           rng.integers(1, cfg.vocab_size,
+                                        4 + 6 * i).astype(np.int32)])
+           for i in range(5)]
+mcfg = MSLRUConfig(num_sets=32, m=2, p=4, value_planes=1)
+
+def drive(mode):
+    mesh = make_mesh_compat((2,), ("cache",))
+    pool = PagedKVPool(cfg, n_pages=32, page_tokens=16)
+    pc = PrefixCache(num_sets=32, m=2, p=4, chunk_tokens=16,
+                     backend=ShardedCacheClient(mcfg, mesh))
+    eng = ServeEngine(model, params, slots=2, max_len=128,
+                      prefix_cache=pc, pool=pool, decode_mode=mode)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+    plan = FaultPlan([FaultEvent(tick=6, kind="degrade", arg=1)])
+    ticks = eng.run_until_done(fault_plan=plan)
+    toks = {r.rid: r.out_tokens for r in eng.finished}
+    return toks, ticks, eng.fault_log, eng.stats()
+
+toks_m, ticks_m, log_m, st_m = drive("megastep")
+toks_i, ticks_i, log_i, st_i = drive("inflight")
+print(json.dumps({
+    "toks_match": toks_m == toks_i,
+    "ticks": [ticks_m, ticks_i],
+    "fault_logs": [log_m, log_i],
+    "windows": st_m["megastep_windows"],
+    "launch_drop": st_m["decode_launches"] < st_i["decode_launches"],
+}))
+"""
+
+
+@pytest.mark.slow
+def test_megastep_sharded_backend_degrade_on_2_devices():
+    """Megastep over a REAL 2-device sharded cache backend with a shard
+    degraded mid-run: fault_log stamps and token streams must match the
+    per-tick in-flight run, and fusion must still cut launches."""
+    res = subprocess.run([sys.executable, "-c", _SHARDED_CHILD],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    assert rec["toks_match"]
+    assert rec["ticks"][0] == rec["ticks"][1]
+    assert rec["fault_logs"][0] == rec["fault_logs"][1]
+    assert rec["fault_logs"][0] == [[6, "degrade:1"]]
+    assert rec["windows"] >= 1
+    assert rec["launch_drop"]
